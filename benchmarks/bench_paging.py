@@ -1,0 +1,97 @@
+"""Paper Fig. 3 / 8 / 9: page-replacement policy comparison.
+
+Workloads (all with a working set ~4x the pool, real spill I/O counted):
+  * seq   — write a write-back set sequentially, then scan it 5x
+            (Fig. 8b read-after-write; LRU evicts pages about to be read)
+  * seqwt — same with a write-through set (Fig. 8a)
+  * shuffle — concurrent-write partitions then partition reads (Fig. 9)
+  * kmeans — two sets: write-through input + write-back derived (norms),
+             5 scan iterations over both (Fig. 3's workload shape)
+
+Derived column reports spill+fetch GB moved (lower = better paging).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BufferPool
+from repro.core.attributes import AttributeSet, DurabilityType
+from repro.core.services import SequentialWriter, ShuffleService, read_all
+
+from .common import record, timeit
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+POOL = 2 << 20
+N = 500_000  # ~8 MB of records -> working set ~4x the pool (paper regime)
+
+
+def _wt_attrs():
+    return AttributeSet(durability=DurabilityType.WRITE_THROUGH)
+
+
+def _run_seq(policy: str, write_through: bool) -> dict:
+    pool = BufferPool(POOL, policy=policy)
+    attrs = _wt_attrs() if write_through else None
+    ls = pool.create_set("data", 1 << 16, attrs)
+    w = SequentialWriter(pool, ls, PAIR)
+    recs = np.zeros(N, PAIR)
+    recs["key"] = np.arange(N)
+    w.append_batch(recs)
+    w.close()
+    total = 0
+    for _ in range(5):
+        total += int(read_all(pool, ls, PAIR)["val"].sum())
+    return pool.stats
+
+
+def _run_shuffle(policy: str) -> dict:
+    pool = BufferPool(POOL, policy=policy)
+    sh = ShuffleService(pool, "s", 4, PAIR, page_size=1 << 17)
+    recs = np.zeros(N, PAIR)
+    recs["key"] = np.arange(N)
+    for wid in range(4):
+        sh.shuffle_batch(wid, recs[wid::4], key_fn=lambda r: r["key"])
+    sh.finish_writes()
+    for p in range(4):
+        sh.read_partition(p)
+    return pool.stats
+
+
+def _run_kmeans_storage(policy: str) -> dict:
+    pool = BufferPool(POOL, policy=policy)
+    inp = pool.create_set("input", 1 << 16, _wt_attrs())
+    w = SequentialWriter(pool, inp, PAIR)
+    recs = np.zeros(N // 2, PAIR)
+    recs["key"] = np.arange(N // 2)
+    w.append_batch(recs)
+    w.close()
+    norms = pool.create_set("norms", 1 << 16)  # write-back derived data
+    w2 = SequentialWriter(pool, norms, PAIR)
+    w2.append_batch(recs)
+    w2.close()
+    for _ in range(5):
+        read_all(pool, norms, PAIR)
+        read_all(pool, inp, PAIR)
+    return pool.stats
+
+
+def run() -> None:
+    for workload, fn in (("seq_wb", lambda p: _run_seq(p, False)),
+                         ("seq_wt", lambda p: _run_seq(p, True)),
+                         ("shuffle", _run_shuffle),
+                         ("kmeans", _run_kmeans_storage)):
+        for policy in ("data-aware", "freq-aware", "lru", "mru"):
+            stats = {}
+
+            def go(policy=policy, fn=fn):
+                stats.update(fn(policy))
+
+            t = timeit(go, repeats=3)
+            moved = (stats.get("spill_bytes", 0)
+                     + stats.get("fetch_bytes", 0)) / 2**20
+            record(f"paging/{workload}/{policy}", t * 1e6,
+                   f"io_mb={moved:.1f}")
+
+
+if __name__ == "__main__":
+    run()

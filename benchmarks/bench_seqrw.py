@@ -1,0 +1,68 @@
+"""Paper Fig. 6 / 7: sequential read/write for transient + persistent data.
+
+Pangea path: buffer-pool locality sets (write-back = Fig. 6 transient,
+write-through = Fig. 7 persistent), real file spill store.
+Baseline ("OS-like"): plain per-record numpy allocation with whole-file
+write/read via numpy save — the copy-through-every-layer strawman the paper
+measures against.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import BufferPool, SpillStore
+from repro.core.attributes import AttributeSet, DurabilityType
+from repro.core.services import SequentialWriter, read_all
+
+from .common import record, timeit
+
+REC = np.dtype([("payload", np.uint8, (80,))])  # paper: 80-byte objects
+N = 60_000
+POOL = 2 << 20  # working set ~4.8MB > pool
+
+
+def _pangea(write_through: bool, tmp: str) -> None:
+    pool = BufferPool(POOL, SpillStore(directory=tmp))
+    attrs = (AttributeSet(durability=DurabilityType.WRITE_THROUGH)
+             if write_through else None)
+    ls = pool.create_set("objs", 1 << 16, attrs)
+    w = SequentialWriter(pool, ls, REC)
+    data = np.zeros(N, REC)
+    data["payload"][:] = np.arange(80, dtype=np.uint8)
+    w.append_batch(data)
+    w.close()
+    for _ in range(5):
+        out = read_all(pool, ls, REC)
+        out["payload"].sum()
+
+
+def _baseline(tmp: str) -> None:
+    # allocate record-by-record batches, persist whole array, re-read per scan
+    chunks = [np.zeros(1000, REC) for _ in range(N // 1000)]
+    path = os.path.join(tmp, "objs.npy")
+    np.save(path, np.concatenate(chunks))
+    for _ in range(5):
+        arr = np.load(path)
+        arr["payload"].sum()
+
+
+def run() -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        t = timeit(lambda: _pangea(False, tmp))
+        record("seqrw/transient/pangea", t * 1e6,
+               f"objs_per_s={5*N/t:.0f}")
+    with tempfile.TemporaryDirectory() as tmp:
+        t = timeit(lambda: _pangea(True, tmp))
+        record("seqrw/persistent/pangea", t * 1e6,
+               f"objs_per_s={5*N/t:.0f}")
+    with tempfile.TemporaryDirectory() as tmp:
+        t = timeit(lambda: _baseline(tmp))
+        record("seqrw/persistent/baseline_fullfile", t * 1e6,
+               f"objs_per_s={5*N/t:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,189 @@
+"""Roofline analysis (deliverable g) — reads the dry-run records and derives
+the three per-device roofline terms for every (arch × shape × mesh) cell.
+
+  compute_term_s   = HLO dot FLOPs / 197e12   (bf16 MXU peak per chip)
+  memory_term_s    = HLO HBM bytes / 819e9    (fusion-boundary traffic model,
+                     trip-count-scaled; see launch/hlo_analysis.py)
+  collective_term_s= (2*AR + AG + RS + A2A + CP bytes) / 50e9
+                     (ring cost: all-reduce moves ~2x its payload; the
+                     (n-1)/n factor ~0.94 at 16-way is folded in as 1)
+
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill) /
+2*N_active*B (decode step) and the usefulness ratio MODEL/HLO flops per
+device. An analytic HBM floor (params+opt+activation boundaries+KV) is
+reported alongside the HLO-derived traffic so over-materialization shows up
+as the gap between the two.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9          # B/s
+LINK_BW = 50e9          # B/s per ICI link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+OUT_CSV = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "roofline.csv")
+
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2}
+
+
+def _chips(mesh: str) -> int:
+    out = 1
+    for p in mesh.split("x"):
+        out *= int(p)
+    return out
+
+
+_ACTIVE_CACHE: Dict[str, int] = {}
+
+
+def _active(arch: str) -> int:
+    if arch not in _ACTIVE_CACHE:
+        from repro.configs import get_config
+        from repro.models.model import active_params
+        _ACTIVE_CACHE[arch] = active_params(get_config(arch))
+    return _ACTIVE_CACHE[arch]
+
+
+def model_flops_global(rec: Dict, cfg=None) -> float:
+    """6*N_active*D (train), 2*N_active*D (prefill), 2*N_active*B (decode)."""
+    n = _active(rec["arch"])  # recomputed (records may predate count fixes)
+    kind = rec["kind"]
+    from repro.configs.base import ALL_SHAPES
+    shape = next(s for s in ALL_SHAPES if s.name == rec["shape"])
+    tokens = shape.global_batch * shape.seq_len
+    if kind == "train":
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # one decode step
+
+
+def analytic_hbm_floor(rec: Dict) -> float:
+    """Per-device lower bound on HBM traffic for the step."""
+    from repro.configs import get_config
+    from repro.configs.base import ALL_SHAPES
+    from repro.models.model import count_params
+    cfg = get_config(rec["arch"])
+    shape = next(s for s in ALL_SHAPES if s.name == rec["shape"])
+    chips = _chips(rec["mesh"])
+    P = count_params(cfg)
+    cb = DTYPE_BYTES[cfg.compute_dtype]
+    ob = DTYPE_BYTES[cfg.opt_state_dtype]
+    if rec["kind"] == "train":
+        # weights: fwd+bwd+remat reads (3x, compute dtype) + opt: p r/w f32,
+        # m/v r/w, grad read f32
+        w = P * (3 * cb + 2 * 4 + 4 * ob + 4)
+        # activation layer boundaries: save + 2 reads
+        acts = (cfg.n_layers * shape.global_batch * shape.seq_len
+                * cfg.d_model * cb * 3)
+        logits = (shape.global_batch * shape.seq_len * cfg.vocab * cb * 3)
+        return (w + acts + logits) / chips
+    if rec["kind"] == "prefill":
+        w = P * cb
+        acts = (cfg.n_layers * shape.global_batch * shape.seq_len
+                * cfg.d_model * cb * 2)
+        kv = rec.get("memory", {}).get("output_bytes", 0)
+        return (w + acts) / chips + kv
+    # decode: weights + whole KV cache read once
+    w = P * cb
+    kv_bytes = rec.get("memory", {}).get("argument_bytes", 0)
+    return w / chips + kv_bytes * 0.5  # ~half the args are the cache
+
+
+def terms(rec: Dict) -> Dict[str, float]:
+    hlo = rec["hlo"]
+    cb = hlo.get("collective_bytes", {})
+    ar = cb.get("all-reduce", 0.0)
+    others = sum(v for k, v in cb.items() if k != "all-reduce")
+    return {
+        "compute_s": hlo["dot_flops"] / PEAK_FLOPS,
+        "memory_s": hlo["hbm_bytes"] / HBM_BW,
+        "collective_s": (2 * ar + others) / LINK_BW,
+    }
+
+
+ADVICE = {
+    "compute": "compute-bound: raise MXU utilization (bigger tiles, bf16 "
+               "everywhere) or shard more model dims",
+    "memory": "HBM-bound: cut materialization (fused kernels, tighter remat "
+              "policy, smaller logits dtype) or up arithmetic intensity",
+    "collective": "collective-bound: reshard to remove TP all-reduces "
+                  "(pure-DP / sequence-parallel / 2D), overlap with compute, "
+                  "or compress",
+}
+
+
+def analyze(pattern: str = "*.json") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, pattern))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        t = terms(rec)
+        dom = max(t, key=t.get).replace("_s", "")
+        mf = model_flops_global(rec) / _chips(rec["mesh"])
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "kind": rec["kind"], **{k: round(v, 4) for k, v in t.items()},
+            "dominant": dom,
+            "model_tflops_dev": round(mf / 1e12, 3),
+            "useful_ratio": round(mf / max(rec["hlo"]["dot_flops"], 1), 3),
+            "hbm_floor_s": round(analytic_hbm_floor(rec) / HBM_BW, 4),
+            "mem_per_dev_gib": round(rec.get("memory", {}).get(
+                "per_device_total", 0) / 2**30, 2),
+            "step_s_bound": round(max(t.values()), 4),
+            "roofline_frac": round(
+                (mf / PEAK_FLOPS) / max(max(t.values()), 1e-12), 4),
+            "advice": ADVICE[dom],
+            "file": os.path.basename(path),
+        })
+    return rows
+
+
+def _is_variant(row: Dict) -> bool:
+    """Tagged records (hillclimb variants) vs the plain baselines."""
+    base = f"{row['arch']}_{row['shape']}_{row['mesh']}.json"
+    return row["file"] != base
+
+
+def run(write_csv: bool = True) -> List[Dict]:
+    rows = analyze()
+    if not rows:
+        print("roofline: no dry-run records found (run repro.launch.dryrun)")
+        return rows
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "model_tflops_dev", "useful_ratio", "hbm_floor_s",
+            "mem_per_dev_gib", "roofline_frac"]
+    base_rows = [r for r in rows if not _is_variant(r)]
+    var_rows = [r for r in rows if _is_variant(r)]
+    if write_csv:
+        os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+        with open(OUT_CSV, "w") as f:
+            f.write(",".join(cols + ["variant"]) + "\n")
+            for r in rows:
+                tag = (r["file"].rsplit(".", 1)[0]
+                       .replace(f"{r['arch']}_{r['shape']}_{r['mesh']}", "")
+                       .lstrip("_") or "baseline")
+                f.write(",".join(str(r[c]) for c in cols) + f",{tag}\n")
+    print(",".join(cols))
+    for r in base_rows:
+        print(",".join(str(r[c]) for c in cols))
+    if var_rows:
+        print("# hillclimb variants (EXPERIMENTS.md §Perf):")
+        for r in var_rows:
+            tag = (r["file"].rsplit(".", 1)[0]
+                   .replace(f"{r['arch']}_{r['shape']}_{r['mesh']}", "")
+                   .lstrip("_"))
+            print(",".join(str(r[c]) for c in cols) + f",{tag}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Benchmark harness (deliverable d) — one benchmark per paper table/figure
+plus the roofline summary. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bench_hashagg, bench_kmeans, bench_paging, bench_recovery,
+                   bench_replicas, bench_seqrw, bench_shuffle)
+    from . import roofline
+
+    print("name,us_per_call,derived")
+    bench_paging.run()        # Fig. 3 / 8 / 9
+    bench_seqrw.run()         # Fig. 6 / 7
+    bench_shuffle.run()       # Table 4
+    bench_hashagg.run()       # Table 5
+    bench_kmeans.run()        # Fig. 2
+    bench_replicas.run()      # Fig. 4
+    bench_recovery.run()      # Fig. 5
+    print("\n# roofline (per-device terms from the dry-run; see "
+          "EXPERIMENTS.md)")
+    roofline.run(write_csv=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Architecture config registry: ``get_config("<arch-id>")`` plus reduced
+smoke configs for CPU tests."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from .base import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+                   ArchConfig, ShapeConfig, shapes_for)
+
+ARCH_IDS = [
+    "grok-1-314b",
+    "deepseek-v2-lite-16b",
+    "glm4-9b",
+    "olmo-1b",
+    "qwen3-0.6b",
+    "minitron-8b",
+    "rwkv6-3b",
+    "recurrentgemma-9b",
+    "seamless-m4t-large-v2",
+    "qwen2-vl-72b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def smoke_config(arch_id: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests (assignment: small
+    layers/width, few experts, tiny vocab)."""
+    cfg = get_config(arch_id)
+    kw = dict(
+        n_layers=len(cfg.block_pattern) + 1 if cfg.block_pattern else 2,
+        d_model=64,
+        d_ff=128,
+        vocab=256,
+        remat="none",
+        opt_state_dtype="float32",
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, kv_heads=min(cfg.kv_heads, 2), head_dim=16)
+    if cfg.n_experts:
+        kw.update(n_experts=4, n_shared_experts=min(cfg.n_shared_experts, 1),
+                  top_k=2, d_expert=64)
+    if cfg.kv_lora:
+        kw.update(kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    if cfg.family == "ssm":
+        kw.update(rwkv_head_dim=16)
+    if cfg.n_encoder_layers:
+        kw.update(n_encoder_layers=2)
+    if cfg.window:
+        kw.update(window=16)
+    kw["page_size"] = 8
+    return cfg.with_(**kw)
+
+
+__all__ = ["ALL_SHAPES", "ARCH_IDS", "ArchConfig", "DECODE_32K", "LONG_500K",
+           "PREFILL_32K", "ShapeConfig", "TRAIN_4K", "all_configs",
+           "get_config", "shapes_for", "smoke_config"]

@@ -1,0 +1,17 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434; hf]: 27L d2048 16H MLA kv_lora=512,
+MoE 2 shared + 64 routed top-6, d_expert=1408, vocab=102400.
+
+Deviation noted in DESIGN.md: the public config uses a dense FFN in layer 1;
+we use MoE in every layer for a uniform scan body.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, kv_heads=16, d_ff=1408,
+    vocab=102400, head_dim=128,
+    n_experts=64, n_shared_experts=2, top_k=6, d_expert=1408,
+    moe_strategy="expert_parallel",   # 64 % 16 == 0 -> all-to-all EP
+    kv_lora=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    remat="layer",
+)

@@ -1,0 +1,34 @@
+"""Pangea core — the paper's contribution: locality sets, the unified buffer
+pool, data-aware paging (Alg. 1 / Eq. 1), heterogeneous replication, and the
+pushed-down services."""
+from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
+                         EvictionStrategy, Lifetime, Location, ReadingPattern,
+                         WritingPattern, eviction_ratio, select_strategy,
+                         spilling_cost)
+from .buffer_pool import BufferPool, PoolExhaustedError, SpillStore
+from .kvcache import HBMExhaustedError, PagedKVCache
+from .locality_set import LocalitySet, Page
+from .paging import PagingSystem, eviction_overhead
+from .replication import (DistributedSet, PartitionScheme, ReplicaRegistration,
+                          expected_conflicts, fail_node, partition_set,
+                          random_dispatch, recover_source_shard,
+                          recover_target_shard, register_replica)
+from .services import (HashService, PageIterator, SequentialWriter,
+                       ShuffleService, VirtualShuffleBuffer,
+                       get_page_iterators, join_service, read_all)
+from .statistics import ReplicaInfo, StatisticsDB
+from .tlsf import TLSF
+
+__all__ = [
+    "AttributeSet", "BufferPool", "CurrentOperation", "DistributedSet",
+    "DurabilityType", "EvictionStrategy", "HBMExhaustedError", "HashService",
+    "Lifetime", "LocalitySet", "Location", "Page", "PagedKVCache",
+    "PageIterator", "PagingSystem", "PartitionScheme", "PoolExhaustedError",
+    "ReadingPattern", "ReplicaInfo", "ReplicaRegistration", "SequentialWriter",
+    "ShuffleService", "SpillStore", "StatisticsDB", "TLSF",
+    "VirtualShuffleBuffer", "WritingPattern", "eviction_overhead",
+    "eviction_ratio", "expected_conflicts", "fail_node", "get_page_iterators",
+    "join_service", "partition_set", "random_dispatch", "read_all",
+    "recover_source_shard", "recover_target_shard", "register_replica",
+    "select_strategy", "spilling_cost",
+]

@@ -1,0 +1,239 @@
+"""The unified buffer pool — paper §5.
+
+One pool manages *all* data (user data, job data, shuffle data, hash data, KV
+pages, dataset staging) in a single shared arena, the monolithic alternative to
+per-layer caches. Pages are allocated from the arena by a TLSF allocator
+(paper §5); callers receive zero-copy numpy views (the mmap shared-memory
+analogue). Pin/unpin with reference counting; eviction is delegated to the
+data-aware PagingSystem (paper §6); spilled pages go to a SpillStore ("disk").
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from .attributes import AttributeSet, CurrentOperation, DurabilityType, Lifetime
+from .locality_set import LocalitySet, Page
+from .paging import PagingSystem
+from .tlsf import TLSF
+
+
+class SpillStore:
+    """Secondary storage for evicted pages. In-memory by default; set
+    ``directory`` to spill to real files (used by the I/O benchmarks)."""
+
+    def __init__(self, directory: Optional[str] = None):
+        self.directory = directory
+        self._mem: Dict[int, bytes] = {}
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.write_ops = 0
+        self.read_ops = 0
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def _path(self, page_id: int) -> str:
+        return os.path.join(self.directory, f"page_{page_id}.bin")
+
+    def write(self, page_id: int, data: bytes) -> None:
+        self.bytes_written += len(data)
+        self.write_ops += 1
+        if self.directory:
+            with open(self._path(page_id), "wb") as f:
+                f.write(data)
+        else:
+            self._mem[page_id] = bytes(data)
+
+    def read(self, page_id: int) -> bytes:
+        self.read_ops += 1
+        if self.directory:
+            with open(self._path(page_id), "rb") as f:
+                data = f.read()
+        else:
+            data = self._mem[page_id]
+        self.bytes_read += len(data)
+        return data
+
+    def delete(self, page_id: int) -> None:
+        if self.directory:
+            try:
+                os.remove(self._path(page_id))
+            except FileNotFoundError:
+                pass
+        else:
+            self._mem.pop(page_id, None)
+
+
+class PoolExhaustedError(MemoryError):
+    """Raised when an allocation cannot be satisfied even after eviction
+    (every resident page is pinned)."""
+
+
+class BufferPool:
+    """Monolithic pool over a single arena (paper §5).
+
+    ``capacity`` bytes of "RAM"; everything beyond that spills through the
+    data-aware paging system to ``spill_store``.
+    """
+
+    def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
+                 policy: str = "data-aware"):
+        self.capacity = capacity
+        self.arena = np.zeros(capacity, dtype=np.uint8)
+        self.tlsf = TLSF(capacity)
+        self.spill = spill_store or SpillStore()
+        self.paging = PagingSystem(policy)
+        self.clock = 1  # logical time (paper: AccessRecency integers)
+        self._pages: Dict[int, Page] = {}
+        self._next_page_id = 0
+        self._lock = threading.RLock()
+        self.stats = {"evictions": 0, "spill_bytes": 0, "fetch_bytes": 0,
+                      "alloc_retries": 0}
+
+    # -- locality-set lifecycle -------------------------------------------------
+    def create_set(self, name: str, page_size: int,
+                   attrs: Optional[AttributeSet] = None) -> LocalitySet:
+        with self._lock:
+            if name in self.paging.sets:
+                raise ValueError(f"locality set {name!r} already exists")
+            ls = LocalitySet(name, page_size, attrs)
+            self.paging.register(ls, self.clock)
+            return ls
+
+    def get_set(self, name: str) -> LocalitySet:
+        return self.paging.sets[name]
+
+    def drop_set(self, ls: LocalitySet) -> None:
+        """Free every page (lifetime over, data discarded)."""
+        with self._lock:
+            for page in list(ls.pages.values()):
+                if page.resident:
+                    self.tlsf.free(page.offset)
+                    page.offset = None
+                if page.spilled:
+                    self.spill.delete(page.page_id)
+                self._pages.pop(page.page_id, None)
+            ls.pages.clear()
+            self.paging.unregister(ls.name)
+
+    # -- page operations ----------------------------------------------------------
+    def _tick(self) -> int:
+        self.clock += 1
+        return self.clock
+
+    def new_page(self, ls: LocalitySet, size: Optional[int] = None) -> Page:
+        """Allocate (and pin) a fresh page in ``ls``."""
+        with self._lock:
+            size = size or ls.page_size
+            offset = self._alloc_with_eviction(size)
+            page = Page(page_id=self._next_page_id, set_name=ls.name, size=size,
+                        offset=offset, pin_count=1, dirty=True,
+                        last_access=self._tick())
+            self._next_page_id += 1
+            ls.pages[page.page_id] = page
+            self._pages[page.page_id] = page
+            return page
+
+    def view(self, page: Page) -> np.ndarray:
+        """Zero-copy numpy view of a resident page (the shared-memory interface)."""
+        if not page.resident:
+            raise ValueError(f"page {page.page_id} is not resident")
+        return self.arena[page.offset:page.offset + page.size]
+
+    def pin(self, page: Page) -> np.ndarray:
+        """Pin a page, fetching it from the spill store if necessary; returns
+        the page view. Increments the reference count (paper §5)."""
+        with self._lock:
+            ls = self.get_set(page.set_name)
+            if not page.resident:
+                offset = self._alloc_with_eviction(page.size)
+                page.offset = offset
+                if page.spilled:
+                    data = np.frombuffer(self.spill.read(page.page_id), dtype=np.uint8)
+                    self.arena[offset:offset + page.size] = data
+                    ls.stats["fetch_bytes"] += page.size
+                    self.stats["fetch_bytes"] += page.size
+                page.dirty = False
+            page.pin_count += 1
+            page.last_access = self._tick()
+            return self.view(page)
+
+    def unpin(self, page: Page, dirty: bool = False) -> None:
+        with self._lock:
+            if page.pin_count <= 0:
+                raise ValueError(f"unpin of unpinned page {page.page_id}")
+            page.pin_count -= 1
+            page.dirty = page.dirty or dirty
+            ls = self.get_set(page.set_name)
+            # write-through: persist immediately once written (paper §4)
+            if (page.dirty and ls.attrs.durability == DurabilityType.WRITE_THROUGH):
+                self._spill_page(ls, page, count_eviction=False)
+                page.dirty = False
+                page.spilled = True
+
+    # -- eviction (Algorithm 1 driver) ---------------------------------------------
+    def _alloc_with_eviction(self, size: int) -> int:
+        offset = self.tlsf.alloc(size)
+        while offset is None:
+            self.stats["alloc_retries"] += 1
+            picked = self.paging.pick_victims(self.clock)
+            if picked is None:
+                raise PoolExhaustedError(
+                    f"cannot allocate {size}B: all resident pages pinned "
+                    f"(free={self.tlsf.free_bytes}B of {self.capacity}B)")
+            ls, victims = picked
+            # evict incrementally — "one or more" (paper Alg. 1), stopping as
+            # soon as the allocation fits; evicting the whole candidate list
+            # would defeat MRU's working-prefix retention on sequential scans
+            for page in victims:
+                self._evict_page(ls, page)
+                offset = self.tlsf.alloc(size)
+                if offset is not None:
+                    return offset
+            offset = self.tlsf.alloc(size)
+        return offset
+
+    def _spill_page(self, ls: LocalitySet, page: Page, count_eviction: bool = True) -> None:
+        data = self.arena[page.offset:page.offset + page.size].tobytes()
+        self.spill.write(page.page_id, data)
+        page.spilled = True
+        ls.stats["spill_bytes"] += page.size
+        self.stats["spill_bytes"] += page.size
+
+    def _evict_page(self, ls: LocalitySet, page: Page) -> None:
+        assert page.resident and not page.pinned
+        if ls.needs_spill_on_evict(page):
+            self._spill_page(ls, page)
+        page.dirty = False
+        self.tlsf.free(page.offset)
+        page.offset = None
+        ls.stats["evictions"] += 1
+        self.stats["evictions"] += 1
+        if ls.attrs.lifetime == Lifetime.ENDED:
+            # data will never be read again; drop any spill image too
+            if page.spilled:
+                self.spill.delete(page.page_id)
+                page.spilled = False
+
+    # -- iteration helper (sequential-read service uses this) ----------------------
+    def iter_pages(self, ls: LocalitySet) -> Iterator[Page]:
+        for pid in sorted(ls.pages):
+            yield ls.pages[pid]
+
+    # -- accounting ------------------------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        return self.tlsf.allocated_bytes
+
+    def memory_report(self) -> Dict[str, Dict[str, int]]:
+        rep: Dict[str, Dict[str, int]] = {}
+        for name, ls in self.paging.sets.items():
+            resident = sum(p.size for p in ls.pages.values() if p.resident)
+            spilled = sum(p.size for p in ls.pages.values() if p.spilled and not p.resident)
+            rep[name] = {"resident": resident, "spilled": spilled,
+                         **ls.stats}
+        return rep

@@ -1,0 +1,188 @@
+"""Paged KV cache — the buffer-pool abstraction applied to serving HBM.
+
+Pangea's thesis is that one manager should own *all* memory. On the serving
+path the contested memory is HBM holding KV pages. This module manages a
+preallocated device page pool with the same locality-set machinery as the host
+buffer pool:
+
+* each sequence is a locality set of KV pages (write-back, random-read →
+  LRU within the set, Table-3 spilling cost 5.0);
+* Eq. 1 orders sequences for eviction: finished sequences (lifetime-ended)
+  first, then cold sequences (stale ``t_r``), exactly the paper's dynamic
+  priority;
+* evicted pages are offloaded HBM→host (on this CPU container: a numpy store;
+  on TPU: ``jax.device_put(..., memory_kind="pinned_host")``) and restored on
+  demand.
+
+The device half (attention over the page pool) is ``kernels/paged_attention``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
+                         Lifetime, ReadingPattern, WritingPattern)
+from .locality_set import LocalitySet, Page
+from .paging import PagingSystem
+
+
+def kv_attrs() -> AttributeSet:
+    return AttributeSet(
+        durability=DurabilityType.WRITE_BACK,
+        writing=WritingPattern.RANDOM_MUTABLE_WRITE,
+        reading=ReadingPattern.RANDOM_READ,
+    )
+
+
+class HBMExhaustedError(MemoryError):
+    pass
+
+
+@dataclass
+class SeqState:
+    seq_id: int
+    length: int = 0                    # tokens written
+    page_ids: List[int] = field(default_factory=list)  # logical pages, in order
+
+
+class PagedKVCache:
+    """Page-granular KV storage for one model (all layers share page geometry).
+
+    Physical layout (device): ``kv[L, P, page_size, 2, kv_heads, head_dim]``
+    where P = hbm_pages. Logical pages beyond P live in the host store.
+    ``block_table(seq)`` yields physical slots for the attention kernel.
+    """
+
+    def __init__(self, num_layers: int, hbm_pages: int, page_size: int,
+                 kv_heads: int, head_dim: int, dtype=np.float32):
+        import jax.numpy as jnp  # local import: keep module importable w/o jax
+        self.num_layers = num_layers
+        self.hbm_pages = hbm_pages
+        self.page_size = page_size
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        self.dtype = dtype
+        self.kv = jnp.zeros(
+            (num_layers, hbm_pages, page_size, 2, kv_heads, head_dim), dtype=dtype)
+        self._free_slots: List[int] = list(range(hbm_pages))[::-1]
+        self.paging = PagingSystem()
+        self.clock = 1
+        self._seqs: Dict[int, SeqState] = {}
+        self._sets: Dict[int, LocalitySet] = {}
+        # logical page id -> (physical slot | None, host copy | None)
+        self._pages: Dict[int, Page] = {}
+        self._host_store: Dict[int, np.ndarray] = {}
+        self._next_page_id = 0
+        self.stats = {"offloads": 0, "fetches": 0, "offload_bytes": 0}
+
+    # -- sequence lifecycle -----------------------------------------------------
+    def start_sequence(self, seq_id: int) -> SeqState:
+        if seq_id in self._seqs:
+            raise ValueError(f"sequence {seq_id} already active")
+        st = SeqState(seq_id)
+        ls = LocalitySet(f"seq{seq_id}", self.page_size, kv_attrs())
+        self.clock += 1
+        self.paging.register(ls, self.clock)
+        ls.set_operation(CurrentOperation.READ_AND_WRITE, self.clock)
+        self._seqs[seq_id] = st
+        self._sets[seq_id] = ls
+        return st
+
+    def finish_sequence(self, seq_id: int) -> None:
+        """Lifetime over: its pages become the preferred eviction victims and
+        are reclaimed eagerly (paper §3.1 "evicted as soon as lifetime
+        expires")."""
+        st = self._seqs.pop(seq_id)
+        ls = self._sets.pop(seq_id)
+        self.clock += 1
+        ls.end_lifetime(self.clock)
+        for pid in st.page_ids:
+            page = self._pages.pop(pid)
+            if page.offset is not None:
+                self._free_slots.append(page.offset)
+            self._host_store.pop(pid, None)
+        self.paging.unregister(ls.name)
+
+    # -- page management ----------------------------------------------------------
+    def _evict_one(self) -> None:
+        picked = self.paging.pick_victims(self.clock)
+        if picked is None:
+            raise HBMExhaustedError("all KV pages pinned (every sequence active)")
+        ls, victims = picked
+        for vp in victims:
+            self._offload(vp)
+
+    def _offload(self, page: Page) -> None:
+        assert page.offset is not None
+        # device -> host (CPU container: numpy copy of that page's slab)
+        slab = np.asarray(self.kv[:, page.offset])
+        self._host_store[page.page_id] = slab
+        self.stats["offloads"] += 1
+        self.stats["offload_bytes"] += slab.nbytes
+        self._free_slots.append(page.offset)
+        page.offset = None
+
+    def _restore(self, page: Page, ls: LocalitySet) -> int:
+        import jax.numpy as jnp
+        slot = self._alloc_slot(exclude_set=ls.name)
+        slab = self._host_store.pop(page.page_id, None)
+        if slab is not None:
+            self.kv = self.kv.at[:, slot].set(jnp.asarray(slab))
+            self.stats["fetches"] += 1
+        page.offset = slot
+        return slot
+
+    def _alloc_slot(self, exclude_set: Optional[str] = None) -> int:
+        while not self._free_slots:
+            self._evict_one()
+        return self._free_slots.pop()
+
+    def append_page(self, seq_id: int) -> Page:
+        """Allocate the next logical page for a sequence."""
+        st = self._seqs[seq_id]
+        ls = self._sets[seq_id]
+        self.clock += 1
+        slot = self._alloc_slot()
+        page = Page(page_id=self._next_page_id, set_name=ls.name,
+                    size=self.page_size, offset=slot, pin_count=0, dirty=True,
+                    last_access=self.clock)
+        self._next_page_id += 1
+        ls.pages[page.page_id] = page
+        self._pages[page.page_id] = page
+        st.page_ids.append(page.page_id)
+        return page
+
+    def ensure_capacity(self, seq_id: int, new_tokens: int = 1) -> None:
+        st = self._seqs[seq_id]
+        needed_pages = -(-(st.length + new_tokens) // self.page_size)
+        while len(st.page_ids) < needed_pages:
+            self.append_page(seq_id)
+
+    def block_table(self, seq_id: int, max_pages: int) -> np.ndarray:
+        """Physical slots for the attention kernel; restores any offloaded
+        page of this sequence (decode reads the whole sequence)."""
+        st = self._seqs[seq_id]
+        ls = self._sets[seq_id]
+        self.clock += 1
+        ls.set_operation(CurrentOperation.READ_AND_WRITE, self.clock)
+        table = np.full(max_pages, -1, dtype=np.int32)
+        for i, pid in enumerate(st.page_ids[:max_pages]):
+            page = self._pages[pid]
+            if page.offset is None:
+                self._restore(page, ls)
+            page.last_access = self.clock
+            table[i] = page.offset
+        return table
+
+    def advance(self, seq_id: int, tokens: int = 1) -> None:
+        self._seqs[seq_id].length += tokens
+
+    # -- introspection --------------------------------------------------------------
+    def resident_pages(self) -> int:
+        return self.hbm_pages - len(self._free_slots)
+
+    def active_sequences(self) -> List[int]:
+        return list(self._seqs)

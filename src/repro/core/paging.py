@@ -1,0 +1,136 @@
+"""Data-aware paging system — paper §6, Algorithm 1 + Eq. 1.
+
+The paging system orders all locality sets by the overhead ``O`` of evicting
+their pages:
+
+    O = -1 * (t_now / t_r)   if lifetime == lifetime-ended
+    O =  c * (t_r / t_now)   if lifetime == alive
+
+where ``c`` is the Table-3 spilling-cost constant and ``t_r`` the set's access
+recency. The set with the *lowest* O supplies victims; its per-set strategy
+(MRU for sequential/concurrent patterns, LRU for random patterns) picks which
+pages, and the CurrentOperation attribute caps how many (10% while writing).
+
+A lazy min-heap keyed on O is maintained; entries are invalidated on attribute
+updates (which are "significantly less frequent than page operations", §6).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from .attributes import Lifetime
+from .locality_set import LocalitySet, Page
+
+
+def eviction_overhead(ls: LocalitySet, clock: int) -> float:
+    """Eq. 1. Lower = better eviction victim."""
+    t_r = max(1, ls.attrs.access_recency)
+    t_now = max(t_r, clock, 1)
+    if ls.attrs.lifetime == Lifetime.ENDED:
+        return -1.0 * (t_now / t_r)
+    return ls.attrs.spilling_cost * (t_r / t_now)
+
+
+class PagingSystem:
+    """Algorithm 1: pick the lowest-priority locality set, evict victims from
+    it using its selected strategy and tuned eviction count.
+
+    ``policy`` selects the replacement approach (paper §9 comparisons):
+      * "data-aware" — the paper's Eq.-1 dynamic priority (default);
+      * "lru" / "mru" — global recency order across ALL sets, evicting 10%
+        of unpinned pages per decision (the Fig.-3/8/9 baselines);
+      * "freq-aware" — Eq. 1 with spilling cost replaced by access frequency
+        (the paper's ablation in Fig. 3).
+    """
+
+    def __init__(self, policy: str = "data-aware"):
+        self.policy = policy
+        self._sets: Dict[str, LocalitySet] = {}
+        self._heap: List[Tuple[float, int, str]] = []
+        self._entry_count = itertools.count()
+        self._stale: Dict[str, int] = {}  # name -> latest entry id
+
+    # -- registration ----------------------------------------------------------
+    def register(self, ls: LocalitySet, clock: int) -> None:
+        self._sets[ls.name] = ls
+        ls._on_attr_update = lambda s: self._push(s, clock)
+        self._push(ls, clock)
+
+    def unregister(self, name: str) -> None:
+        self._sets.pop(name, None)
+        self._stale.pop(name, None)
+
+    def _push(self, ls: LocalitySet, clock: int) -> None:
+        eid = next(self._entry_count)
+        self._stale[ls.name] = eid
+        if self.policy == "freq-aware":
+            # Fig.-3 ablation: spilling cost replaced by access frequency
+            if ls.attrs.lifetime == Lifetime.ENDED:
+                o = -1.0
+            else:
+                o = float(ls.stats.get("accesses", 0))
+        else:
+            o = eviction_overhead(ls, clock)
+        heapq.heappush(self._heap, (o, eid, ls.name))
+
+    def refresh(self, clock: int) -> None:
+        """Re-key every set at the current clock (O depends on t_now)."""
+        for ls in self._sets.values():
+            self._push(ls, clock)
+
+    # -- Algorithm 1 -----------------------------------------------------------
+    def pick_victims(self, clock: int) -> Optional[Tuple[LocalitySet, List[Page]]]:
+        """Returns (victim set, victim pages) or None if nothing evictable.
+
+        Lazy-heap walk: skip stale entries and sets with no unpinned resident
+        pages; re-push skipped-but-live sets so they stay in the queue.
+        """
+        if self.policy in ("lru", "mru"):
+            return self._pick_global_recency(self.policy)
+        self.refresh(clock)
+        repush: List[LocalitySet] = []
+        found = None
+        while self._heap:
+            overhead, eid, name = heapq.heappop(self._heap)
+            ls = self._sets.get(name)
+            if ls is None or self._stale.get(name) != eid:
+                continue  # stale entry
+            victims = ls.select_victims()
+            if victims:
+                found = (ls, victims)
+                repush.append(ls)
+                break
+            repush.append(ls)
+        for ls in repush:
+            self._push(ls, clock)
+        return found
+
+    def _pick_global_recency(self, policy: str):
+        """Fig.-3/8/9 baselines: 10% of unpinned pages by global recency,
+        ignoring data semantics. Victims are grouped under their owning set
+        (one set per call — the caller loops)."""
+        pages: List[Tuple[int, LocalitySet, Page]] = []
+        for ls in self._sets.values():
+            for p in ls.unpinned_resident_pages():
+                pages.append((p.last_access, ls, p))
+        if not pages:
+            return None
+        pages.sort(key=lambda t: t[0], reverse=(policy == "mru"))
+        n = max(1, len(pages) // 10)
+        chosen = pages[:n]
+        ls0 = chosen[0][1]
+        same = [p for _, ls, p in chosen if ls is ls0]
+        return ls0, same
+
+    # -- introspection ---------------------------------------------------------
+    def priority_order(self, clock: int) -> List[Tuple[str, float]]:
+        """All sets ordered by Eq.-1 overhead (victims first) — for tests."""
+        items = [(eviction_overhead(ls, clock), name) for name, ls in self._sets.items()]
+        items.sort()
+        return [(name, o) for o, name in items]
+
+    @property
+    def sets(self) -> Dict[str, LocalitySet]:
+        return self._sets

@@ -1,0 +1,510 @@
+"""Pushed-down computational services — paper §8.
+
+Services are how applications touch locality sets; each service exhibits a
+specific access pattern, which is how attributes get inferred automatically
+(paper §3.2). Implemented here over numpy record views into buffer-pool pages:
+
+* Sequential read/write service — multi-worker page writers + concurrent page
+  iterators (the data-pipeline substrate).
+* Shuffle service — virtual shuffle buffers: many writers append records for
+  the same partition into small pages split from one large page
+  (concurrent-write pattern). The device-side half of shuffle for MoE dispatch
+  lives in ``kernels/shuffle_dispatch``.
+* Hash service — virtual hash buffer: each page is an independent open-
+  addressing hash partition (extendible hashing); full pages split; when the
+  pool is exhausted pages spill as partial aggregates and are re-aggregated.
+* Join service — build partitioned hash maps from one set, probe with another.
+
+Page layout for record pages: ``[count:int64][record bytes...]``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .attributes import AttributeSet, CurrentOperation, DurabilityType
+from .buffer_pool import BufferPool, PoolExhaustedError
+from .locality_set import LocalitySet, Page
+
+_HEADER = 8  # int64 record count at page start
+
+
+def _as_record_bytes(records: np.ndarray, dtype: np.dtype) -> np.ndarray:
+    """[N, ...] records -> [N, itemsize] uint8 rows (handles structured AND
+    subarray dtypes, e.g. one token sequence per record)."""
+    records = np.ascontiguousarray(records)
+    n = len(records)
+    raw = records.view(np.uint8).reshape(n, -1)
+    if raw.shape[1] != dtype.itemsize:
+        raise ValueError(f"record bytes {raw.shape[1]} != dtype itemsize "
+                         f"{dtype.itemsize}")
+    return raw
+
+
+def _from_record_bytes(buf: np.ndarray, dtype: np.dtype, n: int) -> np.ndarray:
+    """Inverse of _as_record_bytes: uint8 buffer -> n records of ``dtype``."""
+    raw = buf[:n * dtype.itemsize]
+    if dtype.subdtype is not None:
+        base, shape = dtype.subdtype
+        return raw.view(base).reshape((n, *shape))
+    return raw.view(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sequential read/write service
+# ---------------------------------------------------------------------------
+class SequentialWriter:
+    """Append fixed-dtype records to a locality set, page by page."""
+
+    def __init__(self, pool: BufferPool, ls: LocalitySet, dtype: np.dtype):
+        self.pool = pool
+        self.ls = ls
+        self.dtype = np.dtype(dtype)
+        self.per_page = (ls.page_size - _HEADER) // self.dtype.itemsize
+        if self.per_page < 1:
+            raise ValueError("page too small for one record")
+        self._page: Optional[Page] = None
+        self._count = 0
+        ls.infer_from_service("sequential-write", pool.clock)
+
+    def _open_page(self) -> None:
+        self._page = self.pool.new_page(self.ls)
+        self._count = 0
+
+    def _close_page(self) -> None:
+        if self._page is None:
+            return
+        view = self.pool.view(self._page)
+        view[:_HEADER].view(np.int64)[0] = self._count
+        self.pool.unpin(self._page, dirty=True)
+        self._page = None
+
+    def append_batch(self, records: np.ndarray) -> None:
+        raw = _as_record_bytes(records, self.dtype)
+        i = 0
+        while i < len(raw):
+            if self._page is None:
+                self._open_page()
+            room = self.per_page - self._count
+            take = min(room, len(raw) - i)
+            view = self.pool.view(self._page)
+            start = _HEADER + self._count * self.dtype.itemsize
+            stop = start + take * self.dtype.itemsize
+            view[start:stop] = raw[i:i + take].reshape(-1)
+            self._count += take
+            i += take
+            if self._count == self.per_page:
+                self._close_page()
+
+    def append(self, record) -> None:
+        self.append_batch(np.array([record], dtype=self.dtype))
+
+    def close(self) -> None:
+        self._close_page()
+        self.ls.set_operation(CurrentOperation.IDLE, self.pool.clock)
+
+
+class PageIterator:
+    """Concurrent page iterator over a subset of a locality set's pages."""
+
+    def __init__(self, pool: BufferPool, ls: LocalitySet, dtype: np.dtype,
+                 page_ids: Sequence[int]):
+        self.pool = pool
+        self.ls = ls
+        self.dtype = np.dtype(dtype)
+        self.page_ids = list(page_ids)
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        for pid in self.page_ids:
+            page = self.ls.pages[pid]
+            view = self.pool.pin(page)
+            try:
+                n = int(view[:_HEADER].view(np.int64)[0])
+                yield _from_record_bytes(view[_HEADER:], self.dtype, n)
+            finally:
+                self.pool.unpin(page)
+
+
+def get_page_iterators(pool: BufferPool, ls: LocalitySet, dtype: np.dtype,
+                       num_workers: int) -> List[PageIterator]:
+    """Split the set's pages round-robin across ``num_workers`` iterators
+    (paper §8 sequential read service)."""
+    ls.infer_from_service("sequential-read", pool.clock)
+    pids = sorted(ls.pages)
+    return [PageIterator(pool, ls, dtype, pids[w::num_workers])
+            for w in range(num_workers)]
+
+
+def read_all(pool: BufferPool, ls: LocalitySet, dtype: np.dtype) -> np.ndarray:
+    its = get_page_iterators(pool, ls, dtype, 1)
+    chunks = [recs.copy() for recs in its[0]]
+    if not chunks:
+        return np.empty(0, dtype=dtype)
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Shuffle service — virtual shuffle buffers (paper §8)
+# ---------------------------------------------------------------------------
+SMALL_PAGE = 1 << 16  # 64 KiB small pages split from each large page
+
+
+class _SmallPageAllocator:
+    """Secondary allocator that pins one large page in a partition's locality
+    set and splits it into small pages handed to concurrent writers."""
+
+    def __init__(self, pool: BufferPool, ls: LocalitySet, small_page: int = SMALL_PAGE):
+        self.pool = pool
+        self.ls = ls
+        self.small_page = min(small_page, ls.page_size)
+        self._page: Optional[Page] = None
+        self._next_off = 0
+        self._outstanding = 0
+
+    def alloc_small(self) -> Tuple[Page, int]:
+        if self._page is None or self._next_off + self.small_page > self._page.size:
+            self._rotate()
+        off = self._next_off
+        self._next_off += self.small_page
+        self._outstanding += 1
+        return self._page, off
+
+    def _rotate(self) -> None:
+        if self._page is not None:
+            self.pool.unpin(self._page, dirty=True)
+        self._page = self.pool.new_page(self.ls)
+        self._next_off = 0
+        # zero every small-page count header (arena memory may be recycled)
+        view = self.pool.view(self._page)
+        for base in range(0, self._page.size - self.small_page + 1, self.small_page):
+            view[base:base + _HEADER].view(np.int64)[0] = 0
+
+    def close(self) -> None:
+        if self._page is not None:
+            self.pool.unpin(self._page, dirty=True)
+            self._page = None
+
+
+class VirtualShuffleBuffer:
+    """Per-(worker, partition) append handle writing into small pages
+    (paper §3.2 code example + §8)."""
+
+    def __init__(self, allocator: _SmallPageAllocator, dtype: np.dtype):
+        self.allocator = allocator
+        self.dtype = np.dtype(dtype)
+        self._page: Optional[Page] = None
+        self._base = 0
+        self._count = 0
+        self._cap = (allocator.small_page - _HEADER) // self.dtype.itemsize
+
+    def _open(self) -> None:
+        self._page, self._base = self.allocator.alloc_small()
+        self._count = 0
+        view = self.allocator.pool.view(self._page)
+        view[self._base:self._base + _HEADER].view(np.int64)[0] = 0
+
+    def add_batch(self, records: np.ndarray) -> None:
+        raw = _as_record_bytes(records, self.dtype)
+        i = 0
+        pool = self.allocator.pool
+        while i < len(raw):
+            if self._page is None:
+                self._open()
+            take = min(self._cap - self._count, len(raw) - i)
+            view = pool.view(self._page)
+            start = self._base + _HEADER + self._count * self.dtype.itemsize
+            stop = start + take * self.dtype.itemsize
+            view[start:stop] = raw[i:i + take].reshape(-1)
+            self._count += take
+            view[self._base:self._base + _HEADER].view(np.int64)[0] = self._count
+            i += take
+            if self._count == self._cap:
+                self._page = None  # small page full; next add opens another
+
+    def add(self, record) -> None:
+        self.add_batch(np.array([record], dtype=self.dtype))
+
+
+class ShuffleService:
+    """One locality set per partition; concurrent writers share large pages
+    through small-page sub-allocation. Readers use the sequential service."""
+
+    def __init__(self, pool: BufferPool, name: str, num_partitions: int,
+                 dtype: np.dtype, page_size: int = 1 << 20,
+                 attrs_factory: Optional[Callable[[], AttributeSet]] = None):
+        self.pool = pool
+        self.dtype = np.dtype(dtype)
+        self.num_partitions = num_partitions
+        self.partition_sets: List[LocalitySet] = []
+        self._allocators: List[_SmallPageAllocator] = []
+        for p in range(num_partitions):
+            attrs = attrs_factory() if attrs_factory else AttributeSet()
+            ls = pool.create_set(f"{name}/part{p}", page_size, attrs)
+            ls.infer_from_service("shuffle", pool.clock)
+            self.partition_sets.append(ls)
+            self._allocators.append(_SmallPageAllocator(pool, ls))
+        self._buffers: Dict[Tuple[int, int], VirtualShuffleBuffer] = {}
+
+    def get_buffer(self, worker_id: int, partition_id: int) -> VirtualShuffleBuffer:
+        key = (worker_id, partition_id)
+        if key not in self._buffers:
+            self._buffers[key] = VirtualShuffleBuffer(
+                self._allocators[partition_id], self.dtype)
+        return self._buffers[key]
+
+    def shuffle_batch(self, worker_id: int, records: np.ndarray,
+                      key_fn: Callable[[np.ndarray], np.ndarray]) -> None:
+        """Vectorized shuffle: route ``records`` to partitions by key hash."""
+        keys = key_fn(records)
+        parts = keys % self.num_partitions
+        for p in np.unique(parts):
+            self.get_buffer(worker_id, int(p)).add_batch(records[parts == p])
+
+    def finish_writes(self) -> None:
+        for alloc in self._allocators:
+            alloc.close()
+        for ls in self.partition_sets:
+            ls.set_operation(CurrentOperation.IDLE, self.pool.clock)
+
+    def read_partition(self, partition_id: int) -> np.ndarray:
+        """Read back one partition (walks the small-page directory)."""
+        ls = self.partition_sets[partition_id]
+        ls.infer_from_service("sequential-read", self.pool.clock)
+        small = self._allocators[partition_id].small_page
+        out: List[np.ndarray] = []
+        for pid in sorted(ls.pages):
+            page = ls.pages[pid]
+            view = self.pool.pin(page)
+            try:
+                for base in range(0, page.size - small + 1, small):
+                    n = int(view[base:base + _HEADER].view(np.int64)[0])
+                    if n == 0:
+                        continue
+                    out.append(_from_record_bytes(
+                        view[base + _HEADER:], self.dtype, n).copy())
+            finally:
+                self.pool.unpin(page)
+        if not out:
+            return np.empty(0, dtype=self.dtype)
+        return np.concatenate(out)
+
+
+# ---------------------------------------------------------------------------
+# Hash service — virtual hash buffer (paper §8)
+# ---------------------------------------------------------------------------
+def _hash_slot(keys: np.ndarray, cap: int) -> np.ndarray:
+    """Fibonacci hash → initial probe slot."""
+    h = (keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15))
+    return (h % np.uint64(cap)).astype(np.int64)
+
+
+class _HashPage:
+    """Open-addressing (linear probing) int64->float64 aggregate table living
+    inside one buffer-pool page. Layout: [count:int64][used:u1 xC][pad]
+    [keys:int64 xC][vals:float64 xC]."""
+
+    def __init__(self, pool: BufferPool, ls: LocalitySet, page: Page):
+        self.pool = pool
+        self.ls = ls
+        self.page = page
+        cap = (page.size - _HEADER - 7) // (1 + 8 + 8)
+        cap -= cap % 8 or 0
+        self.cap = max(8, cap - 8)
+        self._layout()
+
+    def _layout(self) -> None:
+        view = self.pool.view(self.page)
+        off = _HEADER
+        self.used = view[off:off + self.cap].view(np.uint8)
+        off += self.cap
+        off += (-off) % 8
+        self.keys = view[off:off + 8 * self.cap].view(np.int64)
+        off += 8 * self.cap
+        self.vals = view[off:off + 8 * self.cap].view(np.float64)
+
+    @property
+    def count(self) -> int:
+        return int(self.pool.view(self.page)[:_HEADER].view(np.int64)[0])
+
+    def _set_count(self, n: int) -> None:
+        self.pool.view(self.page)[:_HEADER].view(np.int64)[0] = n
+
+    def insert_add(self, keys: np.ndarray,
+                   vals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized aggregate-insert. Returns (rem_keys, rem_vals): pairs
+        not inserted because the table hit its load limit — the caller seals
+        this page and retries on a fresh one. Rejections are safe even when a
+        rejected key exists deeper in the probe chain, because ``finalize()``
+        re-aggregates partials across the whole partition chain."""
+        if len(keys) == 0:
+            return keys, vals
+        # pre-aggregate duplicate keys within the batch
+        ukeys, inv = np.unique(keys, return_inverse=True)
+        uvals = np.zeros(len(ukeys), dtype=np.float64)
+        np.add.at(uvals, inv, vals)
+        keys, vals = ukeys, uvals
+
+        limit = int(self.cap * 0.7)
+        n = self.count
+        base = _hash_slot(keys, self.cap)
+        pending = np.arange(len(keys))
+        for probe in range(self.cap):
+            if len(pending) == 0:
+                break
+            s = (base[pending] + probe) % self.cap
+            occupied = self.used[s].astype(bool)
+            match = occupied & (self.keys[s] == keys[pending])
+            if match.any():
+                self.vals[s[match]] += vals[pending[match]]  # unique keys → unique slots
+            empty = ~occupied
+            survivors = pending[occupied & ~match]  # collided; probe further
+            if empty.any():
+                cand = pending[empty]
+                cslot = s[empty]
+                order = np.argsort(cslot, kind="stable")
+                cand, cslot = cand[order], cslot[order]
+                first = np.ones(len(cslot), dtype=bool)
+                first[1:] = cslot[1:] != cslot[:-1]
+                winners, wslots = cand[first], cslot[first]
+                losers = cand[~first]
+                room = max(0, limit - n)
+                if room < len(winners):
+                    rejected = winners[room:]
+                    winners, wslots = winners[:room], wslots[:room]
+                    if len(winners):
+                        self.used[wslots] = 1
+                        self.keys[wslots] = keys[winners]
+                        self.vals[wslots] = vals[winners]
+                        n += len(winners)
+                    self._set_count(n)
+                    rem = np.concatenate([rejected, losers, survivors])
+                    return keys[rem], vals[rem]
+                self.used[wslots] = 1
+                self.keys[wslots] = keys[winners]
+                self.vals[wslots] = vals[winners]
+                n += len(winners)
+                survivors = np.concatenate([survivors, losers])
+            pending = survivors
+        self._set_count(n)
+        return keys[pending], vals[pending]
+
+    def items(self) -> Tuple[np.ndarray, np.ndarray]:
+        mask = self.used.astype(bool)
+        return self.keys[mask].copy(), self.vals[mask].copy()
+
+
+class HashService:
+    """Hash aggregation over buffer-pool pages (paper §8).
+
+    K root partitions, each a *chain* of hash pages. The chain head is pinned
+    and receives inserts; when it fills, it is sealed (unpinned → becomes an
+    evictable/spillable partial-aggregate page, exactly the paper's "select a
+    page, unpin it, and spill it to disk as partial-aggregation results") and
+    a fresh head is allocated. ``finalize()`` re-aggregates each partition's
+    chain — pinning sealed pages pulls any spilled partials back through the
+    buffer pool transparently (the monolithic-design payoff: no separate
+    spill-file machinery).
+    """
+
+    PAIR_DTYPE = np.dtype([("key", np.int64), ("val", np.float64)])
+
+    def __init__(self, pool: BufferPool, name: str, num_root_partitions: int = 8,
+                 page_size: int = 1 << 20):
+        self.pool = pool
+        self.name = name
+        self.ls = pool.create_set(name, page_size)
+        self.ls.infer_from_service("hash", pool.clock)
+        self.depth = max(1, int(np.ceil(np.log2(max(2, num_root_partitions)))))
+        self._heads: Dict[int, _HashPage] = {}
+        self._sealed: Dict[int, List[int]] = {p: [] for p in range(1 << self.depth)}
+        for p in range(1 << self.depth):
+            self._heads[p] = self._new_hash_page()
+
+    def _new_hash_page(self) -> _HashPage:
+        page = self.pool.new_page(self.ls)  # returned pinned
+        view = self.pool.view(page)
+        view[:] = 0
+        return _HashPage(self.pool, self.ls, page)
+
+    def _partition_of(self, keys: np.ndarray) -> np.ndarray:
+        h = keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+        return (h >> np.uint64(64 - self.depth)).astype(np.int64)
+
+    def _seal_and_replace(self, part: int) -> None:
+        hp = self._heads[part]
+        self._sealed[part].append(hp.page.page_id)
+        self.pool.unpin(hp.page, dirty=True)  # now evictable (paper §8)
+        self._heads[part] = self._new_hash_page()
+
+    def insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        vals = np.asarray(vals, dtype=np.float64)
+        parts = self._partition_of(keys)
+        for p in np.unique(parts):
+            m = parts == p
+            k, v = keys[m], vals[m]
+            while len(k):
+                k, v = self._heads[int(p)].insert_add(k, v)
+                if len(k):
+                    self._seal_and_replace(int(p))
+
+    def finalize(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Re-aggregate each partition chain (head + sealed partials)."""
+        all_keys: List[np.ndarray] = []
+        all_vals: List[np.ndarray] = []
+        for p, hp in self._heads.items():
+            k, v = hp.items()
+            all_keys.append(k)
+            all_vals.append(v)
+            for pid in self._sealed[p]:
+                page = self.ls.pages[pid]
+                self.pool.pin(page)  # transparently restores spilled partials
+                try:
+                    sk, sv = _HashPage(self.pool, self.ls, page).items()
+                    all_keys.append(sk)
+                    all_vals.append(sv)
+                finally:
+                    self.pool.unpin(page)
+        keys = np.concatenate(all_keys) if all_keys else np.empty(0, np.int64)
+        vals = np.concatenate(all_vals) if all_vals else np.empty(0, np.float64)
+        if len(keys) == 0:
+            return keys, vals
+        uk, inv = np.unique(keys, return_inverse=True)
+        out = np.zeros(len(uk), dtype=np.float64)
+        np.add.at(out, inv, vals)
+        return uk, out
+
+    def close(self) -> None:
+        for hp in self._heads.values():
+            self.pool.unpin(hp.page, dirty=True)
+        self.ls.set_operation(CurrentOperation.IDLE, self.pool.clock)
+
+
+# ---------------------------------------------------------------------------
+# Join service (paper §8, sketched there; full implementation here)
+# ---------------------------------------------------------------------------
+def join_service(pool: BufferPool, build_ls: LocalitySet, probe_ls: LocalitySet,
+                 build_dtype: np.dtype, probe_dtype: np.dtype,
+                 build_key: str, probe_key: str,
+                 out_name: str = "join_out") -> np.ndarray:
+    """Hash join: build a map from ``build_ls`` records, probe with
+    ``probe_ls`` records, return matched (probe, build) pairs' keys.
+
+    Uses the sequential read service on both sides; the build map is an
+    ordinary dict here (its pages are what the hash service manages when the
+    build side exceeds memory — benchmarks use HashService for that case).
+    """
+    table: Dict[int, List[int]] = {}
+    for recs in PageIterator(pool, build_ls, build_dtype, sorted(build_ls.pages)):
+        keys = recs[build_key]
+        for idx, k in enumerate(keys.tolist()):
+            table.setdefault(k, []).append(idx)
+    matches = 0
+    for recs in PageIterator(pool, probe_ls, probe_dtype, sorted(probe_ls.pages)):
+        keys = recs[probe_key]
+        for k in keys.tolist():
+            if k in table:
+                matches += len(table[k])
+    return np.array([matches], dtype=np.int64)

@@ -1,0 +1,61 @@
+"""Pangea "statistics database" — paper §3.2 / §7 / §9.2.2.
+
+The manager node's catalog: which locality sets exist, which replicas of each
+logical dataset exist under which partition scheme, plus access statistics.
+Query planners (and the checkpoint restorer) ask it for the replica whose
+partitioning best matches an operation — the paper's "select a Pangea replica
+that is the best for the query execution".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class ReplicaInfo:
+    set_name: str
+    partition_key: Optional[str]      # None = randomly dispatched (source set)
+    num_partitions: int
+    num_nodes: int
+    page_size: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+class StatisticsDB:
+    def __init__(self):
+        # logical dataset -> list of physical replicas
+        self._replicas: Dict[str, List[ReplicaInfo]] = {}
+        self._access_counts: Dict[str, int] = {}
+
+    def register_replica(self, logical_name: str, info: ReplicaInfo) -> None:
+        self._replicas.setdefault(logical_name, []).append(info)
+
+    def replicas_of(self, logical_name: str) -> List[ReplicaInfo]:
+        return list(self._replicas.get(logical_name, []))
+
+    def record_access(self, set_name: str) -> None:
+        self._access_counts[set_name] = self._access_counts.get(set_name, 0) + 1
+
+    def access_count(self, set_name: str) -> int:
+        return self._access_counts.get(set_name, 0)
+
+    def best_replica(self, logical_name: str,
+                     desired_key: Optional[str]) -> Optional[ReplicaInfo]:
+        """Pick the replica partitioned on ``desired_key`` if one exists
+        (enables co-partitioned, shuffle-free joins — paper §9.2.2); fall back
+        to any replica (source set first)."""
+        replicas = self._replicas.get(logical_name, [])
+        if not replicas:
+            return None
+        for r in replicas:
+            if desired_key is not None and r.partition_key == desired_key:
+                self.record_access(r.set_name)
+                return r
+        # prefer the unpartitioned source set as the generic fallback
+        for r in replicas:
+            if r.partition_key is None:
+                self.record_access(r.set_name)
+                return r
+        self.record_access(replicas[0].set_name)
+        return replicas[0]

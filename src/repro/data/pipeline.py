@@ -1,0 +1,157 @@
+"""Data pipeline = the sequential read/write service applied to training.
+
+Tokenized shards are stored as locality-set pages in the unified buffer pool
+(write-through user data, paper §3.1), optionally with heterogeneously
+partitioned replicas (e.g. by length bucket) registered in the statistics
+catalog. The loader stages batches through the pool — when the dataset
+exceeds the pool budget, the data-aware paging policy (MRU for sequential
+scans) decides residency, which is exactly the paper's Fig.-6/7 experiment.
+
+Also hosts the straggler-mitigation hook: per-host shard ownership with
+re-dispatch of a slow host's pending pages (runtime/ drives it).
+"""
+from __future__ import annotations
+
+import threading
+import queue
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.attributes import (AttributeSet, DurabilityType, ReadingPattern,
+                               WritingPattern)
+from ..core.buffer_pool import BufferPool
+from ..core.locality_set import LocalitySet
+from ..core.replication import (DistributedSet, PartitionScheme,
+                                partition_set, random_dispatch,
+                                register_replica)
+from ..core.services import SequentialWriter, get_page_iterators
+from ..core.statistics import ReplicaInfo, StatisticsDB
+
+
+def user_data_attrs() -> AttributeSet:
+    return AttributeSet(durability=DurabilityType.WRITE_THROUGH,
+                        writing=WritingPattern.SEQUENTIAL_WRITE,
+                        reading=ReadingPattern.SEQUENTIAL_READ)
+
+
+@dataclass
+class TokenDataset:
+    """A tokenized dataset persisted as a locality set of sequence records."""
+
+    pool: BufferPool
+    ls: LocalitySet
+    seq_len: int
+    num_sequences: int
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np.dtype((np.int32, (self.seq_len,)))
+
+
+def write_token_dataset(pool: BufferPool, name: str, tokens: np.ndarray,
+                        page_size: int = 1 << 20) -> TokenDataset:
+    """tokens: [N, seq_len] int32 -> write-through locality set."""
+    n, seq_len = tokens.shape
+    ls = pool.create_set(name, page_size, user_data_attrs())
+    dt = np.dtype((np.int32, (seq_len,)))
+    w = SequentialWriter(pool, ls, dt)
+    w.append_batch(tokens.astype(np.int32))
+    w.close()
+    return TokenDataset(pool, ls, seq_len, n)
+
+
+def synthetic_token_dataset(pool: BufferPool, name: str, *, vocab: int,
+                            num_sequences: int, seq_len: int,
+                            seed: int = 0) -> TokenDataset:
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, vocab, (num_sequences, seq_len), dtype=np.int32)
+    return write_token_dataset(pool, name, toks)
+
+
+class BatchLoader:
+    """Sequential-read-service loader with background prefetch.
+
+    Yields {"tokens": [B, T], "labels": [B, T]} numpy batches. The prefetch
+    thread pulls pages through the buffer pool (pin → copy → unpin), so cold
+    pages come back from the spill store transparently.
+    """
+
+    def __init__(self, ds: TokenDataset, batch_size: int,
+                 num_workers: int = 1, prefetch: int = 2,
+                 drop_last: bool = True, seed: Optional[int] = None):
+        self.ds = ds
+        self.batch_size = batch_size
+        self.num_workers = num_workers
+        self.prefetch = prefetch
+        self.drop_last = drop_last
+        self.seed = seed
+
+    def _record_stream(self) -> Iterator[np.ndarray]:
+        its = get_page_iterators(self.ds.pool, self.ds.ls, self.ds.dtype,
+                                 self.num_workers)
+        for it in its:
+            for recs in it:
+                yield recs
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = object()
+
+        def producer():
+            buf: List[np.ndarray] = []
+            have = 0
+            try:
+                for recs in self._record_stream():
+                    buf.append(np.asarray(recs))
+                    have += len(recs)
+                    while have >= self.batch_size:
+                        allr = np.concatenate(buf) if len(buf) > 1 else buf[0]
+                        batch, rest = (allr[:self.batch_size],
+                                       allr[self.batch_size:])
+                        buf = [rest] if len(rest) else []
+                        have = len(rest)
+                        toks = batch
+                        q.put({"tokens": toks,
+                               "labels": np.concatenate(
+                                   [toks[:, 1:],
+                                    np.full((len(toks), 1), -100,
+                                            np.int32)], axis=1)})
+                if buf and not self.drop_last:
+                    allr = np.concatenate(buf) if len(buf) > 1 else buf[0]
+                    q.put({"tokens": allr,
+                           "labels": np.concatenate(
+                               [allr[:, 1:],
+                                np.full((len(allr), 1), -100, np.int32)],
+                               axis=1)})
+            finally:
+                q.put(stop)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous dataset replicas (paper §7 applied to training data)
+# ---------------------------------------------------------------------------
+def register_dataset_replicas(
+        stats: StatisticsDB, name: str, records: np.ndarray,
+        num_nodes: int, schemes: Sequence[PartitionScheme]):
+    """Partition a dataset under several schemes; register each replica and
+    its conflicting-object guards. Training picks the replica co-partitioned
+    with its sampling key (e.g. length buckets) via ``stats.best_replica``."""
+    source = random_dispatch(name, records, num_nodes)
+    stats.register_replica(name, ReplicaInfo(
+        set_name=name, partition_key=None, num_partitions=num_nodes,
+        num_nodes=num_nodes))
+    regs = []
+    for scheme in schemes:
+        target = partition_set(source, f"{name}_by_{scheme.name}", scheme)
+        regs.append(register_replica(source, target, scheme, stats, name))
+    return source, regs

@@ -1,0 +1,147 @@
+"""Flash attention Pallas TPU kernel (online softmax, tiled for VMEM/MXU).
+
+Grid: ``(B, H, num_q_blocks, num_kv_blocks)`` with the kv dimension innermost
+and sequential ("arbitrary"); accumulators (running max / sum / output) are
+VMEM scratch persisted across kv steps. Causal and sliding-window blocks that
+are fully masked are skipped via ``pl.when`` (structural win: the compiler
+drops their DMAs). Block shapes default to 128×128 (MXU-aligned); head_dim is
+the lane dimension and should be a multiple of 128 for peak MXU utilization —
+smaller head dims still work (padded lanes).
+
+TARGET: TPU. On this CPU container the kernel is validated with
+``interpret=True`` (see ops.py / tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, kv_len: int, q_offset: int):
+    q_idx = pl.program_id(2)
+    k_idx = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # global positions of this block's rows/cols
+    q_start = q_idx * block_q + q_offset
+    k_start = k_idx * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len                          # padding
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                 # [bq, 1]
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal or window is not None:
+        # structural block skipping
+        live = jnp.array(True)
+        if causal:
+            live &= k_start <= q_start + block_q - 1
+        if window is not None:
+            live &= k_start + block_k - 1 > q_start - window
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(k_idx == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           scale: Optional[float] = None, q_offset: int = 0,
+                           kv_len: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, Tq, D] (Tq % block_q == 0); k,v: [B, KH, Tk, D]
+    (Tk % block_k == 0). ``kv_len``: true (unpadded) key count."""
+    B, H, Tq, D = q.shape
+    _, KH, Tk, _ = k.shape
+    assert H % KH == 0, (H, KH)
+    group = H // KH
+    if scale is None:
+        scale = D ** -0.5
+    if kv_len is None:
+        kv_len = Tk
+    nq = Tq // block_q
+    nk = Tk // block_k
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=kv_len, q_offset=q_offset)
+
+    kwargs = {}
+    params = _tpu_params()
+    if params is not None and not interpret:
+        kwargs["compiler_params"] = params
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, D)),
+            _vmem((block_q, 1)),
+            _vmem((block_q, 1)),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)
+    return out
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _tpu_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+    except Exception:
+        return None

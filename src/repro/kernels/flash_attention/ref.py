@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA).
+
+GQA is handled by grouping query heads per kv head (einsum batch dim) rather
+than ``jnp.repeat``-ing k/v — identical math, but no materialized repeat, so
+under SPMD the kv tensors keep their sharding (repeat's reshape+broadcast
+forces a full rematerialization of sequence-sharded KV caches; found on the
+grok decode cell — see EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Naive softmax attention.
+
+    q: [B, H, Tq, D]; k, v: [B, KH, Tk, D] with H % KH == 0 (GQA).
+    ``window``: sliding-window size (keys within ``window`` positions before
+    the query, inclusive). ``q_offset``: global position of q[..., 0, :]
+    relative to k (decode: Tk - Tq).
+    """
+    B, H, Tq, D = q.shape
+    KH, Tk = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = D ** -0.5
+    qg = q.reshape(B, KH, G, Tq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, kf) * scale
+    q_pos = jnp.arange(Tq)[:, None] + q_offset
+    k_pos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(s - s.max(axis=-1, keepdims=True)))
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, vf)
+    denom = p.sum(axis=-1, keepdims=True)
+    o = o / jnp.maximum(denom, 1e-20)
+    Dv = v.shape[-1]
+    return o.reshape(B, H, Tq, Dv).astype(q.dtype)

@@ -1,0 +1,168 @@
+"""Linear-scan Pallas TPU kernels: diagonal recurrence (RG-LRU) and chunked
+matrix-state GLA (RWKV6 wkv core).
+
+Hardware adaptation (DESIGN.md §2): the GPU implementations of these models
+use warp-level scans; on TPU we tile time into VMEM-resident chunks and carry
+the recurrent state in VMEM scratch across a sequential grid dimension. The
+GLA chunk math uses the decay-telescoped factorization
+
+    A_ij = (r_i ∘ e^{c_i - w_i - c_L}) · (k_j ∘ e^{c_L - c_j}),  c = cumsum(log w)
+
+in which both factors have non-positive exponents — numerically stable for
+any chunk length (no 1/cumprod blow-up), and the contraction is an MXU matmul.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Diagonal scan: h_t = a_t * h_{t-1} + b_t        (RG-LRU)
+# ---------------------------------------------------------------------------
+def _diag_kernel(a_ref, b_ref, h0_ref, o_ref, hT_ref, h_ref, *, chunk: int):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)[None]
+
+    def body(i, h):
+        h = a_ref[0, i].astype(jnp.float32) * h + b_ref[0, i].astype(jnp.float32)
+        o_ref[0, i] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[0])
+    h_ref[...] = h[None]
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+def diag_scan_kernel(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
+                     chunk: int = 256, interpret: bool = False
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: [B, T, D] (T % chunk == 0); h0: [B, D] -> (h, h_final)."""
+    B, T, D = a.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    grid = (B, nc)
+    out = pl.pallas_call(
+        functools.partial(_diag_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda b_, c: (b_, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b_, c: (b_, c, 0)),
+            pl.BlockSpec((1, D), lambda b_, c: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, D), lambda b_, c: (b_, c, 0)),
+            pl.BlockSpec((1, D), lambda b_, c: (b_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# Chunked GLA / RWKV6 wkv:
+#   S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T ;  o_t = r_t (S_{t-1} + u k_t v_t^T)
+# ---------------------------------------------------------------------------
+def _gla_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sT_ref, s_ref, *,
+                chunk: int):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)      # [L, Dk]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)      # [L, Dv]
+    w = w_ref[0].astype(jnp.float32)      # [L, Dk] log decays (<= 0)
+    u = u_ref[0].astype(jnp.float32)      # [1? -> Dk] bonus
+    L = r.shape[0]
+
+    cum = jnp.cumsum(w, axis=0)           # inclusive: c_i
+    ex_cum = cum - w                      # exclusive: c_{i-1}
+    c_last = cum[-1:]                     # [1, Dk]
+
+    q_inter = r * jnp.exp(ex_cum)                       # decay start→i-1
+    q_intra = r * jnp.exp(ex_cum - c_last)              # ≤ |r|
+    k_intra = k * jnp.exp(c_last - cum)                 # ≤ |k|
+
+    S = s_ref[...]                                      # [Dk, Dv]
+    o = jax.lax.dot_general(q_inter, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, Dv]
+
+    A = jax.lax.dot_general(q_intra, k_intra, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, L]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    A = jnp.where(jj < ii, A, 0.0)                      # strict lower triangle
+    bonus = jnp.sum(r * u * k, axis=-1)                 # [L] diagonal term
+    o = o + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o = o + bonus[:, None] * v
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    # state update: S_L = diag(e^{c_L}) S_0 + Σ_j (k_j e^{c_L - c_j}) v_j^T
+    S_new = jnp.exp(c_last).T * S + jax.lax.dot_general(
+        k_intra, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = S_new
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        sT_ref[0] = S_new.astype(sT_ref.dtype)
+
+
+def gla_scan_kernel(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    w: jnp.ndarray, u: jnp.ndarray, *, chunk: int = 64,
+                    interpret: bool = False
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,w: [B,T,Dk]; v: [B,T,Dv]; u: [B,Dk] -> (o [B,T,Dv], S [B,Dk,Dv]).
+
+    B is typically batch×heads. T % chunk == 0 (pad upstream).
+    """
+    B, T, Dk = r.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    out = pl.pallas_call(
+        functools.partial(_gla_kernel, chunk=chunk),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Dk), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, Dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Dk, Dv), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, Dv), v.dtype),
+            jax.ShapeDtypeStruct((B, Dk, Dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out[0], out[1]

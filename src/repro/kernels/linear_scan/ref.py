@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the linear-scan kernels.
+
+Two recurrences:
+* diag_scan   — h_t = a_t ⊙ h_{t-1} + b_t (vector state; RG-LRU).
+* gla_scan    — S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t,
+                o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)  (RWKV6 wkv core).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def diag_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                  h0: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: [B, T, D]; h0: [B, D]. Returns (h[B,T,D], h_final[B,D])."""
+    B, T, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+                           jnp.moveaxis(b, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), hT.astype(a.dtype)
+
+
+def gla_scan_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 w: jnp.ndarray, u: jnp.ndarray,
+                 s0: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6 wkv (sequential oracle).
+
+    r, k, w: [B, T, Dk]; v: [B, T, Dv]; u: [B, Dk] (per-head bonus);
+    w holds LOG decays (log w_t ≤ 0). s0: [B, Dk, Dv].
+    Returns (o [B, T, Dv], s_final [B, Dk, Dv]).
+    """
+    B, T, Dk = r.shape
+    Dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, Dk, Dv), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # [B, Dk], [B, Dk], [B, Dv], [B, Dk]
+        kv = kt[:, :, None] * vt[:, None, :]              # [B, Dk, Dv]
+        o = jnp.einsum("bk,bkv->bv", rt, S + u[:, :, None] * kv)
+        S = jnp.exp(wt)[:, :, None] * S + kv
+        return S, o
+
+    inputs = tuple(jnp.moveaxis(x, 1, 0).astype(jnp.float32)
+                   for x in (r, k, v, w))
+    ST, os = jax.lax.scan(step, s0.astype(jnp.float32), inputs)
+    return jnp.moveaxis(os, 0, 1).astype(v.dtype), ST

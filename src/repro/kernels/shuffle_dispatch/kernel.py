@@ -1,0 +1,129 @@
+"""MoE shuffle-dispatch Pallas TPU kernel — the device half of Pangea's
+shuffle service (paper §8).
+
+Hardware adaptation: a GPU implementation scatters tokens with atomics; the
+TPU-native formulation builds block-local one-hot masks in VMEM and uses MXU
+matmuls (``maskᵀ @ tokens``) to materialize per-expert buffers — scatter
+becomes a matmul, which is exactly how the MXU wants it. Grid is
+``(experts, token_blocks)``, token blocks sequential, accumulating into a
+VMEM scratch buffer; one expert's buffer [C, D] is written per grid row.
+
+The combine kernel is the transpose: grid ``(token_blocks, experts)``,
+accumulating gated gathers as ``mask @ expert_out``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dispatch_kernel(eid_ref, slot_ref, x_ref, o_ref, acc_ref, *,
+                     capacity: int, block_t: int, topk: int):
+    e = pl.program_id(0)
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                       # [bt, D]
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block_t, capacity), 1)
+    mask = jnp.zeros((block_t, capacity), jnp.float32)
+    for kk in range(topk):                                   # small, unrolled
+        eid = eid_ref[:, kk]                                 # [bt]
+        sl = slot_ref[:, kk]
+        hit = (eid == e) & (sl >= 0) & (sl < capacity)
+        mask += jnp.where(hit[:, None] & (slots == sl[:, None]), 1.0, 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        mask, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # [C, D]
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dispatch_kernel(x: jnp.ndarray, expert_id: jnp.ndarray,
+                    slot: jnp.ndarray, num_experts: int, capacity: int, *,
+                    block_t: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: [T, D]; expert_id/slot: [T, K] -> [E, C, D]."""
+    T, D = x.shape
+    K = expert_id.shape[1]
+    block_t = min(block_t, T)
+    assert T % block_t == 0, (T, block_t)
+    nt = T // block_t
+    return pl.pallas_call(
+        functools.partial(_dispatch_kernel, capacity=capacity,
+                          block_t=block_t, topk=K),
+        grid=(num_experts, nt),
+        in_specs=[
+            pl.BlockSpec((block_t, K), lambda e, t: (t, 0)),
+            pl.BlockSpec((block_t, K), lambda e, t: (t, 0)),
+            pl.BlockSpec((block_t, D), lambda e, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, capacity, D), lambda e, t: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_experts, capacity, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((capacity, D), jnp.float32)],
+        interpret=interpret,
+    )(expert_id.astype(jnp.int32), slot.astype(jnp.int32), x)
+
+
+def _combine_kernel(eid_ref, slot_ref, gate_ref, y_ref, o_ref, acc_ref, *,
+                    capacity: int, block_t: int, topk: int):
+    t = pl.program_id(0)
+    e = pl.program_id(1)
+    ne = pl.num_programs(1)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    y = y_ref[0].astype(jnp.float32)                         # [C, D]
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block_t, capacity), 1)
+    mask = jnp.zeros((block_t, capacity), jnp.float32)
+    for kk in range(topk):
+        eid = eid_ref[:, kk]
+        sl = slot_ref[:, kk]
+        g = gate_ref[:, kk].astype(jnp.float32)
+        hit = (eid == e) & (sl >= 0) & (sl < capacity)
+        mask += jnp.where(hit[:, None] & (slots == sl[:, None]),
+                          g[:, None], 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        mask, y, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # [bt, D]
+
+    @pl.when(e == ne - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def combine_kernel(y: jnp.ndarray, expert_id: jnp.ndarray, slot: jnp.ndarray,
+                   gates: jnp.ndarray, num_tokens: int, *, block_t: int = 256,
+                   interpret: bool = False) -> jnp.ndarray:
+    """y: [E, C, D]; expert_id/slot/gates: [T, K] -> [T, D]."""
+    E, C, D = y.shape
+    T, K = expert_id.shape
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    nt = T // block_t
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, capacity=C, block_t=block_t,
+                          topk=K),
+        grid=(nt, E),
+        in_specs=[
+            pl.BlockSpec((block_t, K), lambda t, e: (t, 0)),
+            pl.BlockSpec((block_t, K), lambda t, e: (t, 0)),
+            pl.BlockSpec((block_t, K), lambda t, e: (t, 0)),
+            pl.BlockSpec((1, C, D), lambda t, e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, D), lambda t, e: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), y.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, D), jnp.float32)],
+        interpret=interpret,
+    )(expert_id.astype(jnp.int32), slot.astype(jnp.int32),
+      gates, y)

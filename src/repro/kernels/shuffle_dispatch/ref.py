@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for MoE shuffle dispatch/combine (dense one-hot einsum)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _mask(expert_id: jnp.ndarray, slot: jnp.ndarray, num_experts: int,
+          capacity: int) -> jnp.ndarray:
+    """[T, K] assignments -> dense dispatch mask [T, E, C]. expert_id < 0
+    (dropped token) contributes nothing."""
+    eo = expert_id[..., None] == jnp.arange(num_experts)[None, None, :]
+    so = slot[..., None] == jnp.arange(capacity)[None, None, :]
+    valid = (expert_id >= 0) & (slot >= 0) & (slot < capacity)
+    m = eo[:, :, :, None] & so[:, :, None, :] & valid[:, :, None, None]
+    return m.astype(jnp.float32).sum(axis=1)  # [T, E, C]
+
+
+def dispatch_ref(x: jnp.ndarray, expert_id: jnp.ndarray, slot: jnp.ndarray,
+                 num_experts: int, capacity: int) -> jnp.ndarray:
+    """x: [T, D] -> expert buffers [E, C, D]."""
+    m = _mask(expert_id, slot, num_experts, capacity)
+    return jnp.einsum("tec,td->ecd", m, x.astype(jnp.float32)).astype(x.dtype)
+
+
+def combine_ref(y: jnp.ndarray, expert_id: jnp.ndarray, slot: jnp.ndarray,
+                gates: jnp.ndarray) -> jnp.ndarray:
+    """y: [E, C, D] expert outputs -> [T, D] gated combine."""
+    E, C, D = y.shape
+    eo = expert_id[..., None] == jnp.arange(E)[None, None, :]
+    so = slot[..., None] == jnp.arange(C)[None, None, :]
+    valid = (expert_id >= 0) & (slot >= 0) & (slot < C)
+    mg = (eo[:, :, :, None] * so[:, :, None, :]
+          * valid[:, :, None, None]).astype(jnp.float32)
+    mg = (mg * gates[:, :, None, None]).sum(axis=1)  # [T, E, C]
+    return jnp.einsum("tec,ecd->td", mg, y.astype(jnp.float32)).astype(y.dtype)

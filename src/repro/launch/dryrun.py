@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell: build abstract inputs
+(ShapeDtypeStruct — no allocation), lower the step function with explicit
+in_shardings, compile, and record memory_analysis / cost_analysis / the
+HLO-derived roofline inputs. The FIRST TWO LINES of this file force 512
+placeholder CPU devices BEFORE any jax import (jax locks the device count on
+first init); do not set that flag globally.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2x16x16
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shardlib
+from repro.configs import ARCH_IDS, get_config, shapes_for
+from repro.configs.base import ALL_SHAPES, ArchConfig, ShapeConfig
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import (batch_shardings, cache_shardings,
+                               make_production_mesh, param_shardings,
+                               sharding_rules)
+from repro.models.model import (active_params, build_model, count_params,
+                                decode_cache_specs, input_specs)
+from repro.optim import make_train_step
+from repro.optim.adamw import AdamWState
+from repro.optim.train_state import TrainState
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _serve_param_sds(params_sds, compute_dtype):
+    dt = jnp.dtype(compute_dtype)
+
+    def cast(s):
+        if s.dtype == jnp.float32 and len(s.shape) >= 2:
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return s
+    return jax.tree.map(cast, params_sds)
+
+
+def lower_cell(arch_id: str, shape: ShapeConfig, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               mla_absorbed: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the analysis record."""
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = sharding_rules(cfg, mesh)
+    model = build_model(cfg, mla_absorbed=mla_absorbed)
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "params": count_params(cfg), "active_params": active_params(cfg),
+    }
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_shardings(model, cfg, mesh, rules)
+
+    t0 = time.time()
+    with shardlib.use_rules(rules, mesh):
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(
+                lambda: AdamWState(
+                    step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            s.shape, jnp.dtype(cfg.opt_state_dtype)),
+                        params_sds),
+                    v=jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            s.shape, jnp.dtype(cfg.opt_state_dtype)),
+                        params_sds)))
+            state_sds = TrainState(params=params_sds, opt=opt_sds)
+            state_sh = TrainState(
+                params=pspecs,
+                opt=AdamWState(step=NamedSharding(mesh, P()),
+                               m=pspecs, v=pspecs))
+            batch_sds = input_specs(cfg, shape)["batch"]
+            batch_sh = batch_shardings(batch_sds, mesh)
+            step = make_train_step(model.loss,
+                                   microbatches=cfg.microbatches)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            sp_sds = _serve_param_sds(params_sds, cfg.compute_dtype)
+            batch_sds = input_specs(cfg, shape)["batch"]
+            batch_sh = batch_shardings(batch_sds, mesh)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch)
+
+            if cfg.family == "encdec":
+                def prefill_fn(params, batch):  # noqa: F811
+                    memory = model.encode(params, batch["src_embeds"])
+                    cache = model.decode_cache_init(
+                        batch["tokens"].shape[0], shape.seq_len,
+                        memory=memory, params=params)
+                    return memory, cache
+
+            jitted = jax.jit(prefill_fn, in_shardings=(pspecs, batch_sh))
+            lowered = jitted.lower(sp_sds, batch_sds)
+        else:  # decode
+            sp_sds = _serve_param_sds(params_sds, cfg.compute_dtype)
+            specs = input_specs(cfg, shape, model=model)
+            batch_sds, cache_sds = specs["batch"], specs["cache"]
+            batch_sh = batch_shardings(batch_sds, mesh)
+            cache_sh = cache_shardings(cache_sds, cfg, mesh, rules)
+
+            def decode_fn(params, batch, cache, pos):
+                return model.decode_step(params, batch, cache, pos)
+
+            jitted = jax.jit(decode_fn,
+                             in_shardings=(pspecs, batch_sh, cache_sh,
+                                           NamedSharding(mesh, P())),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(sp_sds, batch_sds, cache_sds,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        rec["memory"]["per_device_total"] = (
+            rec["memory"]["argument_bytes"] + rec["memory"]["output_bytes"]
+            + rec["memory"]["temp_bytes"] - rec["memory"]["alias_bytes"])
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "note": "XLA cost_analysis does not scale while-loop bodies; "
+                "see hlo stats for trip-scaled numbers",
+    }
+    stats = analyze_hlo(compiled.as_text())
+    rec["hlo"] = {
+        "dot_flops": stats.dot_flops,
+        "hbm_bytes": stats.hbm_bytes,
+        "collective_bytes": stats.collective_bytes,
+        "collective_count": stats.collective_count,
+        "total_collective_bytes": stats.total_collective_bytes,
+    }
+    rec["status"] = "ok"
+    return rec
+
+
+def cell_path(arch_id: str, shape_name: str, multi_pod: bool,
+              tag: str = "") -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR,
+                        f"{arch_id}_{shape_name}_{mesh}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape name")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="results filename tag")
+    ap.add_argument("--mla-absorbed", action="store_true")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ArchConfig overrides")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = json.loads(args.override) if args.override else None
+
+    failures = []
+    for arch_id in archs:
+        cfg = get_config(arch_id)
+        shapes = shapes_for(cfg)
+        skips = [s for s in ALL_SHAPES if s not in shapes]
+        for s in skips:
+            if args.shape and s.name != args.shape:
+                continue
+            print(f"SKIP  {arch_id:24s} {s.name:12s} "
+                  f"(full-attention arch; see DESIGN.md)")
+        for shape in shapes:
+            if args.shape and shape.name != args.shape:
+                continue
+            for mp in meshes:
+                path = cell_path(arch_id, shape.name, mp, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"CACHED {arch_id:24s} {shape.name:12s} "
+                          f"{'2x16x16' if mp else '16x16'}")
+                    continue
+                label = (f"{arch_id:24s} {shape.name:12s} "
+                         f"{'2x16x16' if mp else '16x16'}")
+                try:
+                    rec = lower_cell(arch_id, shape, mp,
+                                     overrides=overrides,
+                                     mla_absorbed=args.mla_absorbed)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    mem = rec.get("memory", {}).get("per_device_total", 0)
+                    print(f"OK    {label} lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"mem/dev={mem/2**30:.2f}GiB "
+                          f"dotTF={rec['hlo']['dot_flops']/1e12:.2f} "
+                          f"coll={rec['hlo']['total_collective_bytes']/2**30:.3f}GiB")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((label, repr(e)))
+                    print(f"FAIL  {label}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for l, e in failures:
+            print(" ", l, e)
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Training driver: data pipeline (buffer pool) → jitted train_step →
+checkpoint manager (async, heterogeneous layouts) → fault-tolerance hooks.
+
+Runs end-to-end on CPU at reduced scale (examples/train_100m.py) and carries
+the same structure the production mesh uses (the dry-run lowers exactly this
+step function at full scale).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ArchConfig
+from repro.core import BufferPool
+from repro.data.pipeline import BatchLoader, synthetic_token_dataset
+from repro.models.model import build_model
+from repro.optim import make_train_step
+from repro.optim.train_state import TrainState, make_train_state
+from repro.runtime import StepTimer
+
+
+@dataclass
+class TrainLoopResult:
+    losses: list
+    steps: int
+    restored_from: Optional[int]
+    tokens_per_s: float
+
+
+def run_training(cfg: ArchConfig, *, steps: int = 20, batch_size: int = 8,
+                 seq_len: int = 64, lr: float = 3e-4,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 10,
+                 microbatches: int = 1, pool_bytes: int = 256 << 20,
+                 num_sequences: Optional[int] = None, seed: int = 0,
+                 log_every: int = 5,
+                 fail_at_step: Optional[int] = None) -> TrainLoopResult:
+    """Train on synthetic data staged through the Pangea buffer pool.
+
+    ``fail_at_step`` simulates a crash (raises); calling run_training again
+    with the same ckpt_dir restores and continues — the fault-tolerance test
+    uses this.
+    """
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    state = make_train_state(params, cfg.opt_state_dtype)
+    step_fn = jax.jit(make_train_step(model.loss, lr=lr,
+                                      microbatches=microbatches),
+                      donate_argnums=(0,))
+
+    mgr = None
+    restored_from = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, layouts=("row", "col"),
+                                num_shards=4)
+        last = mgr.latest_step()
+        if last is not None:
+            state = mgr.restore(state, step=last)
+            state = jax.tree.map(jnp.asarray, state)
+            restored_from = last
+
+    pool = BufferPool(pool_bytes)
+    nseq = num_sequences or batch_size * max(steps, 1)
+    ds = synthetic_token_dataset(pool, "train_tokens", vocab=cfg.vocab,
+                                 num_sequences=nseq, seq_len=seq_len,
+                                 seed=seed)
+    timer = StepTimer([0])
+    losses = []
+    done = int(state.opt.step)
+    t_start = time.time()
+    tokens = 0
+
+    def batches() -> Iterable[Dict[str, np.ndarray]]:
+        while True:
+            for b in BatchLoader(ds, batch_size=batch_size):
+                yield b
+
+    for batch in batches():
+        if done >= steps:
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.rope == "mrope":
+            T = jb["tokens"].shape[1]
+            jb["positions"] = jnp.broadcast_to(
+                jnp.arange(T)[None, None, :],
+                (jb["tokens"].shape[0], 3, T)).astype(jnp.int32)
+        if cfg.embed_inputs and cfg.family != "encdec":
+            jb["embeds"] = state.params["embed"][jb.pop("tokens")]
+        if cfg.family == "encdec":
+            jb["src_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, done),
+                (jb["tokens"].shape[0], seq_len, cfg.d_model))
+        t0 = time.time()
+        state, metrics = step_fn(state, jb)
+        loss = float(metrics["loss"])
+        timer.record(0, time.time() - t0)
+        losses.append(loss)
+        tokens += batch_size * seq_len
+        done = int(metrics["step"])
+        if done % log_every == 0 or done == steps:
+            print(f"step {done:5d} loss {loss:.4f} "
+                  f"({timer.ewma[0]*1e3:.0f} ms/step)")
+        if mgr and done % ckpt_every == 0:
+            mgr.save(done, jax.device_get(state), async_=True)
+        if fail_at_step is not None and done >= fail_at_step:
+            if mgr:
+                mgr.wait()
+            raise RuntimeError(f"simulated failure at step {done}")
+    if mgr:
+        mgr.save(done, jax.device_get(state), async_=False)
+    dt = max(time.time() - t_start, 1e-9)
+    return TrainLoopResult(losses=losses, steps=done,
+                           restored_from=restored_from,
+                           tokens_per_s=tokens / dt)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    res = run_training(cfg, steps=args.steps, batch_size=args.batch_size,
+                       seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                       microbatches=args.microbatches)
+    print(f"done: {res.steps} steps, final loss {res.losses[-1]:.4f}, "
+          f"{res.tokens_per_s:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,634 @@
+"""Per-layer blocks for all assigned architecture families.
+
+Every ``*_init`` builds ONE layer's params and returns ``(params, axes)``;
+the LM stacks layers by vmapping init over per-layer keys (scan-friendly).
+Every ``*_apply`` handles both full-sequence ("train"/"prefill") and
+single-token decode (``cache`` + ``pos``) modes.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.flash_attention.ops import flash_attention
+from ..kernels.flash_attention.ref import attention_ref
+from ..kernels.linear_scan.ops import diag_scan, gla_scan
+from ..sharding import constrain, constrain_seq
+from .common import apply_mrope, apply_rope, dense_init, layer_norm, rms_norm
+
+Pytree = Any
+
+
+def _norm_init(cfg: ArchConfig, d: int):
+    if cfg.norm == "nonparam_ln":
+        return None, None
+    return jnp.ones((d,)), ("embed_vec",)
+
+
+def apply_norm(cfg: ArchConfig, w, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, w)
+    if cfg.norm == "layernorm":
+        return layer_norm(x, w)
+    if cfg.norm == "nonparam_ln":
+        return layer_norm(x, None)
+    raise ValueError(cfg.norm)
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (dense / qwen3 qk_norm / mrope / sliding window)
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ArchConfig) -> Tuple[Pytree, Pytree]:
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], d, (H, hd), "embed", ("heads", None))
+    p["wk"], a["wk"] = dense_init(ks[1], d, (KH, hd), "embed", ("kv", None))
+    p["wv"], a["wv"] = dense_init(ks[2], d, (KH, hd), "embed", ("kv", None))
+    wo = jax.random.normal(ks[3], (H, hd, d)) * (1.0 / math.sqrt(H * hd))
+    p["wo"], a["wo"] = wo, ("heads", None, "embed")
+    p["norm"], a["norm"] = _norm_init(cfg, d)
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = jnp.ones((hd,)), (None,)
+        p["k_norm"], a["k_norm"] = jnp.ones((hd,)), (None,)
+    return p, a
+
+
+def _rope_qk(cfg: ArchConfig, q, k, positions):
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, theta=cfg.rope_theta)
+        k = apply_mrope(k, positions, theta=cfg.rope_theta)
+    return q, k
+
+
+def attn_apply(p, x, *, cfg: ArchConfig, positions, causal: bool = True,
+               cache: Optional[Dict] = None, pos=None,
+               attn_impl: str = "xla",
+               kv_memory: Optional[Tuple] = None):
+    """x: [B, T, d]. Full mode when cache is None; decode otherwise.
+
+    ``kv_memory``: precomputed (k, v) for cross-attention (enc-dec) — skips
+    self kv projection and causal masking.
+    """
+    B, T, d = x.shape
+    H, KH, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    x = constrain_seq(x)  # seq-parallel residual stream (fsdp_tp_sp only)
+    h = apply_norm(cfg, p.get("norm"), x)
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+
+    if kv_memory is not None:
+        # cross attention: kv precomputed, head-major [B, KH, S, hd]
+        qh = q.swapaxes(1, 2)
+        kh, vh = kv_memory
+        o = attention_ref(qh, kh.astype(qh.dtype), vh.astype(qh.dtype),
+                          causal=False)
+        o = o.swapaxes(1, 2)
+        y = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+        return x + y, None
+
+    k = jnp.einsum("btd,dhk->bthk", h, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", h, p["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    q, k = _rope_qk(cfg, q, k, positions)
+    qh = q.swapaxes(1, 2)                       # [B, H, T, hd]
+    kh = k.swapaxes(1, 2)                       # [B, KH, Tk, hd]
+    vh = v.swapaxes(1, 2)
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]          # [B, KH, Tmax, hd]
+        Tmax = ck.shape[2]
+        if cfg.window is not None and Tmax == cfg.window:
+            o, new_cache = _window_ring_decode(cfg, qh, kh, vh, ck, cv, pos)
+        else:
+            # decode: write new kv at pos, attend over the whole cache
+            ck = jax.lax.dynamic_update_slice(ck, kh.astype(ck.dtype),
+                                              (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vh.astype(cv.dtype),
+                                              (0, 0, pos, 0))
+            new_cache = {"k": ck, "v": cv}
+            o = attention_ref(qh, ck.astype(qh.dtype), cv.astype(qh.dtype),
+                              causal=True, window=cfg.window, q_offset=pos)
+    else:
+        o = flash_attention(qh, kh, vh, causal=causal, window=cfg.window,
+                            impl=attn_impl, block_k=cfg.attn_block_k,
+                            p_bf16=cfg.attn_p_bf16)
+    o = o.swapaxes(1, 2)                        # [B, T, H, hd]
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return x + y, new_cache
+
+
+def _window_ring_decode(cfg: ArchConfig, qh, kh, vh, ck, cv, pos):
+    """O(window) decode with a ring-buffer KV cache (T=1). Slot ``i`` holds
+    absolute position ``pos - ((pos - i) mod W)``. GQA via grouped einsum
+    (no repeat — keeps the cache sharding intact under SPMD)."""
+    W = cfg.window
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice(ck, kh.astype(ck.dtype),
+                                      (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cv, vh.astype(cv.dtype),
+                                      (0, 0, slot, 0))
+    B, H, Tq, D = qh.shape
+    KH = ck.shape[1]
+    G = H // KH
+    qg = qh.reshape(B, KH, G, Tq, D).astype(jnp.float32)
+    scale = D ** -0.5
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg,
+                   ck.astype(jnp.float32)) * scale
+    idx = jnp.arange(W)
+    abs_pos = pos - jnp.mod(pos - idx, W)
+    valid = abs_pos >= 0          # (> pos - W and <= pos hold by construction)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p_ = jnp.exp(s - s.max(-1, keepdims=True))
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p_, cv.astype(jnp.float32))
+    o = o / jnp.maximum(p_.sum(-1, keepdims=True), 1e-20)
+    return o.reshape(B, H, Tq, D).astype(qh.dtype), {"k": ck, "v": cv}
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.kv_heads, max_len, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_prefill_kv(p, x, *, cfg: ArchConfig, positions):
+    """Compute this layer's k/v for a prompt (to seed the decode cache)."""
+    h = apply_norm(cfg, p.get("norm"), x)
+    k = jnp.einsum("btd,dhk->bthk", h, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", h, p["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    if cfg.rope == "rope":
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        k = apply_mrope(k, positions, theta=cfg.rope_theta)
+    return k.swapaxes(1, 2), v.swapaxes(1, 2)
+
+
+def pack_prefill_cache(cfg: ArchConfig, kv, max_len: int, dtype):
+    """Arrange prompt k/v [B, KH, T, hd] into a decode cache.
+
+    Sliding-window archs get a ring buffer of size ``window`` when the prompt
+    is at least that long (slot i holds abs position T-1-((T-1-i) mod W));
+    otherwise a dense cache of ``min(max_len, window or inf)`` padded slots.
+    """
+    k, v = kv
+    T = k.shape[2]
+    W = cfg.window
+    cache_len = min(max_len, W) if W else max_len
+    if W and cache_len == W and T >= W:
+        idx = jnp.arange(W)
+        abs_idx = (T - 1) - jnp.mod((T - 1) - idx, W)
+        return {"k": k[:, :, abs_idx].astype(dtype),
+                "v": v[:, :, abs_idx].astype(dtype)}
+    pad = cache_len - T
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    elif pad < 0:
+        k, v = k[:, :, :cache_len], v[:, :, :cache_len]
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+
+def mla_prefill_cache(p, x, *, cfg: ArchConfig, positions, max_len: int,
+                      dtype, absorbed: bool = False):
+    """Build the MLA decode cache from a prompt."""
+    B, T, _ = x.shape
+    h = apply_norm(cfg, p.get("norm"), x)
+    c_kv = rms_norm(jnp.einsum("btd,dl->btl", h, p["w_dkv"]), p["kv_norm"])
+    k_rope = apply_rope(jnp.einsum("btd,dr->btr", h, p["w_kr"])[:, :, None],
+                        positions, cfg.rope_theta)[:, :, 0]
+    pad = max_len - T
+    if absorbed:
+        cc = jnp.pad(c_kv, ((0, 0), (0, max(pad, 0)), (0, 0)))[:, :max_len]
+        kr = jnp.pad(k_rope, ((0, 0), (0, max(pad, 0)), (0, 0)))[:, :max_len]
+        return {"c_kv": cc.astype(dtype), "k_rope": kr.astype(dtype)}
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    k_nope = jnp.einsum("btl,lhn->bthn", c_kv, p["w_uk"])
+    v = jnp.einsum("btl,lhv->bthv", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (B, T, cfg.n_heads, rope_d))], axis=-1)
+    kh, vh = k.swapaxes(1, 2), v.swapaxes(1, 2)
+    if pad > 0:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return {"k": kh[:, :, :max_len].astype(dtype),
+            "v": vh[:, :, :max_len].astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v2): low-rank compressed KV
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ArchConfig) -> Tuple[Pytree, Pytree]:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                              cfg.v_head_dim, cfg.kv_lora)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], d, (H, nope + rope_d), "embed",
+                                  ("heads", None))
+    p["w_dkv"], a["w_dkv"] = dense_init(ks[1], d, lora, "embed", "lora")
+    p["w_kr"], a["w_kr"] = dense_init(ks[2], d, rope_d, "embed", None)
+    p["w_uk"], a["w_uk"] = dense_init(ks[3], lora, (H, nope), "lora",
+                                      ("heads", None))
+    p["w_uv"], a["w_uv"] = dense_init(ks[4], lora, (H, vd), "lora",
+                                      ("heads", None))
+    wo = jax.random.normal(ks[5], (H, vd, d)) * (1.0 / math.sqrt(H * vd))
+    p["wo"], a["wo"] = wo, ("heads", None, "embed")
+    p["norm"], a["norm"] = _norm_init(cfg, d)
+    p["kv_norm"], a["kv_norm"] = jnp.ones((lora,)), (None,)
+    return p, a
+
+
+def mla_apply(p, x, *, cfg: ArchConfig, positions, cache: Optional[Dict] = None,
+              pos=None, attn_impl: str = "xla", absorbed: bool = False):
+    """MLA. Baseline decode caches EXPANDED per-head k/v (naive port);
+    ``absorbed=True`` caches compressed c_kv/k_rope and absorbs the up-
+    projections into the query/output (the §Perf-optimized path)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    x = constrain_seq(x)  # seq-parallel residual stream (fsdp_tp_sp only)
+    h = apply_norm(cfg, p.get("norm"), x)
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"])          # [B,T,H,nope+rope]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = rms_norm(jnp.einsum("btd,dl->btl", h, p["w_dkv"]), p["kv_norm"])
+    k_rope = apply_rope(jnp.einsum("btd,dr->btr", h, p["w_kr"])[:, :, None],
+                        positions, cfg.rope_theta)       # [B,T,1,rope]
+
+    if absorbed and cache is not None:
+        # --- absorbed decode: scores in latent space ---
+        cc, ckr = cache["c_kv"], cache["k_rope"]         # [B,Tmax,l], [B,Tmax,r]
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
+                                          (0, pos, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            ckr, k_rope[:, :, 0].astype(ckr.dtype), (0, pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": ckr}
+        # absorb W_uk into q: q_lat [B,T,H,l]
+        q_lat = jnp.einsum("bthn,lhn->bthl", q_nope, p["w_uk"])
+        s = (jnp.einsum("bthl,bsl->bhts", q_lat.astype(jnp.float32),
+                        cc.astype(jnp.float32))
+             + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                          ckr.astype(jnp.float32)))
+        s *= (nope + rope_d) ** -0.5
+        Tmax = cc.shape[1]
+        mask = jnp.arange(Tmax)[None, None, None, :] <= (
+            pos + jnp.arange(T)[None, None, :, None])
+        s = jnp.where(mask, s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhts,bsl->bthl", pr, cc.astype(jnp.float32))
+        o = jnp.einsum("bthl,lhv->bthv", o_lat, p["w_uv"].astype(jnp.float32))
+        y = jnp.einsum("bthv,hvd->btd", o.astype(x.dtype), p["wo"])
+        return x + y, new_cache
+
+    # expand per-head keys/values
+    k_nope = jnp.einsum("btl,lhn->bthn", c_kv, p["w_uk"])
+    v = jnp.einsum("btl,lhv->bthv", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, H, rope_d))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qh, kh, vh = (t.swapaxes(1, 2) for t in (qq, k, v))
+    new_cache = None
+    if cache is not None:                                # naive decode
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice(ck, kh.astype(ck.dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vh.astype(cv.dtype),
+                                          (0, 0, pos, 0))
+        new_cache = {"k": ck, "v": cv}
+        o = attention_ref(qh, ck.astype(qh.dtype), cv.astype(qh.dtype),
+                          causal=True, q_offset=pos)
+    else:
+        o = flash_attention(qh, kh, vh, causal=True, impl=attn_impl,
+                            block_k=cfg.attn_block_k)
+    o = o.swapaxes(1, 2)
+    y = jnp.einsum("bthv,hvd->btd", o[..., :vd], p["wo"])
+    return x + y, new_cache
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                   absorbed: bool = False):
+    if absorbed:
+        return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+    hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {"k": jnp.zeros((batch, cfg.n_heads, max_len, hd), dtype),
+            "v": jnp.zeros((batch, cfg.n_heads, max_len, cfg.v_head_dim),
+                           dtype)}
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def ffn_init(key, cfg: ArchConfig, d_ff: Optional[int] = None
+             ) -> Tuple[Pytree, Pytree]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["w1"], a["w1"] = dense_init(ks[0], d, f, "embed", "mlp")
+    p["w3"], a["w3"] = dense_init(ks[1], d, f, "embed", "mlp")
+    p["w2"], a["w2"] = dense_init(ks[2], f, d, "mlp", "embed")
+    p["norm"], a["norm"] = _norm_init(cfg, d)
+    return p, a
+
+
+def ffn_apply(p, x, *, cfg: ArchConfig, act: str = "silu"):
+    x = constrain_seq(x)  # seq-parallel residual stream (fsdp_tp_sp only)
+    h = apply_norm(cfg, p.get("norm"), x)
+    # serve_2d preset: gather activations over "data" here so the 2D-sharded
+    # weights stay put (weight-stationary decode); identity otherwise
+    h = constrain(h, ("ffn_batch", None, None))
+    g = jnp.einsum("btd,df->btf", h, p["w1"])
+    u = jnp.einsum("btd,df->btf", h, p["w3"])
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    y = jnp.einsum("btf,fd->btd", g * u, p["w2"])
+    y = constrain(y, ("batch", None, None))
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# MoE (grok: expert-TP; deepseek: expert-parallel + shared experts)
+# ---------------------------------------------------------------------------
+def moe_init(key, cfg: ArchConfig) -> Tuple[Pytree, Pytree]:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["w_router"], a["w_router"] = dense_init(ks[0], d, E, "embed", None)
+    escale = 1.0 / math.sqrt(d)
+    # expert_parallel: experts dim on "model" (all-to-all EP), ffn local;
+    # expert_tp: experts replicated, each expert's ffn sharded on "model".
+    if cfg.moe_strategy == "expert_parallel":
+        ep, fp = "experts", None
+    else:
+        ep, fp = None, "mlp"
+    p["w1"] = jax.random.normal(ks[1], (E, d, f)) * escale
+    a["w1"] = (ep, "embed", fp)
+    p["w3"] = jax.random.normal(ks[2], (E, d, f)) * escale
+    a["w3"] = (ep, "embed", fp)
+    p["w2"] = jax.random.normal(ks[3], (E, f, d)) * (1.0 / math.sqrt(f))
+    a["w2"] = (ep, fp, "embed")
+    p["norm"], a["norm"] = _norm_init(cfg, d)
+    if cfg.n_shared_experts:
+        sh, sa = ffn_init(ks[4], cfg, d_ff=cfg.n_shared_experts * f)
+        sh.pop("norm"), sa.pop("norm")   # share the block norm
+        p["shared"], a["shared"] = sh, sa
+    return p, a
+
+
+def _capacity(cfg: ArchConfig, T: int) -> int:
+    c = int(math.ceil(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_apply(p, x, *, cfg: ArchConfig):
+    """Einsum (dispatch-mask) MoE — the device-side shuffle service.
+
+    Per-batch-row capacity bounds the mask to [B, T, E, C]. Returns
+    (y, aux_loss).
+    """
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, T)
+    x = constrain_seq(x)  # seq-parallel residual stream (fsdp_tp_sp only)
+    h = apply_norm(cfg, p.get("norm"), x)
+    h = constrain(h, ("ffn_batch", None, None))  # serve_2d: gather over data
+    logits = jnp.einsum("btd,de->bte", h, p["w_router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eid = jax.lax.top_k(probs, K)                  # [B,T,K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # slots: position of each (t,k) within its expert, per batch row
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)      # [B,T,K,E]
+    flat = onehot.reshape(B, T * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                 # exclusive
+    slot = (pos * flat).sum(-1).reshape(B, T, K)          # [B,T,K]
+    keep = slot < C
+    # dispatch mask [B,T,E,C]
+    slot_oh = jax.nn.one_hot(jnp.where(keep, slot, C), C + 1,
+                             dtype=h.dtype)[..., :C]      # [B,T,K,C]
+    mask = jnp.einsum("btke,btkc->btec", onehot.astype(h.dtype), slot_oh)
+    gmask = jnp.einsum("btke,btkc,btk->btec", onehot.astype(h.dtype),
+                       slot_oh, gates.astype(h.dtype))
+
+    disp = jnp.einsum("btec,btd->becd", mask, h)
+    disp = constrain(disp, ("ffn_batch", "experts", None, None))
+    g1 = jnp.einsum("becd,edf->becf", disp, p["w1"])
+    u1 = jnp.einsum("becd,edf->becf", disp, p["w3"])
+    eo = jnp.einsum("becf,efd->becd", jax.nn.silu(g1) * u1, p["w2"])
+    eo = constrain(eo, ("ffn_batch", "experts", None, None))
+    y = jnp.einsum("btec,becd->btd", gmask, eo)
+
+    if cfg.n_shared_experts:
+        sp = dict(p["shared"])
+        sp["norm"] = None
+        g = jnp.einsum("btd,df->btf", h, sp["w1"])
+        u = jnp.einsum("btd,df->btf", h, sp["w3"])
+        y = y + jnp.einsum("btf,fd->btd", jax.nn.silu(g) * u, sp["w2"])
+
+    # switch-style load-balance aux loss
+    density = mask.sum(axis=(1, 3)) / T                   # [B,E] tokens frac
+    router_prob = probs.mean(axis=1)                      # [B,E]
+    aux = (density * router_prob).sum(-1).mean() * E
+    y = constrain(y, ("batch", None, None))
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — time mix (wkv) + channel mix
+# ---------------------------------------------------------------------------
+def rwkv_init(key, cfg: ArchConfig) -> Tuple[Pytree, Pytree]:
+    d = cfg.d_model
+    ff = cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 12)
+    p, a = {}, {}
+    for i, nm in enumerate(("mu_r", "mu_k", "mu_v", "mu_w", "mu_g")):
+        p[nm] = jax.random.uniform(ks[0], (d,), minval=0.0, maxval=1.0)
+        a[nm] = (None,)
+    p["w0"] = jnp.full((d,), -2.0) + jax.random.normal(ks[1], (d,)) * 0.1
+    a["w0"] = (None,)
+    p["wA"], a["wA"] = dense_init(ks[2], d, lora, "embed", None)
+    p["wB"], a["wB"] = dense_init(ks[3], lora, d, None, "embed")
+    for i, nm in enumerate(("w_r", "w_k", "w_v", "w_g")):
+        p[nm], a[nm] = dense_init(ks[4 + i], d, d, "embed", "heads_embed")
+    p["u"] = jax.random.normal(ks[8], (d,)) * 0.1
+    a["u"] = (None,)
+    p["ln_x"] = jnp.ones((d,))
+    a["ln_x"] = (None,)
+    p["w_o"], a["w_o"] = dense_init(ks[9], d, d, "heads_embed", "embed")
+    p["norm1"], a["norm1"] = _norm_init(cfg, d)
+    # channel mix
+    p["cmu_k"] = jax.random.uniform(ks[10], (d,), minval=0.0, maxval=1.0)
+    a["cmu_k"] = (None,)
+    p["cmu_r"] = jax.random.uniform(ks[10], (d,), minval=0.0, maxval=1.0)
+    a["cmu_r"] = (None,)
+    p["cw_k"], a["cw_k"] = dense_init(ks[11], d, ff, "embed", "mlp")
+    p["cw_v"], a["cw_v"] = dense_init(ks[11], ff, d, "mlp", "embed")
+    p["cw_r"], a["cw_r"] = dense_init(ks[11], d, d, "embed", "embed_out")
+    p["norm2"], a["norm2"] = _norm_init(cfg, d)
+    return p, a
+
+
+def _token_shift(x, prev):
+    """[B,T,d] -> previous token's activations ([B,1,d] prev for t=0)."""
+    if x.shape[1] == 1:
+        return prev[:, None] if prev.ndim == 2 else prev
+    shifted = jnp.concatenate([x[:, :1] * 0, x[:, :-1]], axis=1)
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev if prev.ndim == 2 else prev[:, 0])
+    return shifted
+
+
+def rwkv_apply(p, x, *, cfg: ArchConfig, state: Optional[Dict] = None,
+               scan_impl: str = "xla_chunked"):
+    """Returns (y, new_state). state: {"tm_x","cm_x": [B,d], "S": [B,H,dk,dv]}."""
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    decode = state is not None and T == 1
+
+    # ---- time mix ----
+    h = apply_norm(cfg, p.get("norm1"), x)
+    prev = state["tm_x"] if state is not None else None
+    hs = _token_shift(h, prev)
+    def mix(mu):
+        return h + (hs - h) * mu
+    xr, xk, xv, xw, xg = (mix(p[m]) for m in
+                          ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"))
+    w_log = -jnp.exp(p["w0"] + jnp.tanh(
+        jnp.einsum("btd,dl->btl", xw, p["wA"])) @ p["wB"])  # [B,T,d] <= 0
+    r = jnp.einsum("btd,de->bte", xr, p["w_r"])
+    k = jnp.einsum("btd,de->bte", xk, p["w_k"])
+    v = jnp.einsum("btd,de->bte", xv, p["w_v"])
+    g = jnp.einsum("btd,de->bte", xg, p["w_g"])
+
+    def heads(t):  # [B,T,d] -> [B*H, T, hd]
+        return (t.reshape(B, T, H, hd).swapaxes(1, 2)
+                .reshape(B * H, T, hd))
+    rh, kh, vh, wh = heads(r), heads(k), heads(v), heads(w_log)
+    u = jnp.broadcast_to(p["u"].reshape(H, hd)[None], (B, H, hd)
+                         ).reshape(B * H, hd)
+    if decode:
+        S = state["S"].reshape(B * H, hd, hd)
+        kv = kh[:, 0, :, None] * vh[:, 0, None, :]
+        o = jnp.einsum("bk,bkv->bv", rh[:, 0],
+                       S + u[:, :, None] * kv)[:, None]
+        S = jnp.exp(wh[:, 0])[:, :, None] * S + kv
+        new_S = S.reshape(B, H, hd, hd)
+    else:
+        o, Sf = gla_scan(rh, kh, vh, wh, u, impl=scan_impl)
+        new_S = Sf.reshape(B, H, hd, hd)
+    o = (o.reshape(B, H, T, hd).swapaxes(1, 2).reshape(B, T, d))
+    # per-head group norm
+    og = o.reshape(B, T, H, hd)
+    og = rms_norm(og, None) * p["ln_x"].reshape(H, hd)
+    o = og.reshape(B, T, d).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    x = x + jnp.einsum("btd,de->bte", o, p["w_o"])
+
+    # ---- channel mix ----
+    h2 = apply_norm(cfg, p.get("norm2"), x)
+    prev2 = state["cm_x"] if state is not None else None
+    hs2 = _token_shift(h2, prev2)
+    ck = h2 + (hs2 - h2) * p["cmu_k"]
+    cr = h2 + (hs2 - h2) * p["cmu_r"]
+    kk = jnp.einsum("btd,df->btf", ck, p["cw_k"])
+    kk = jnp.maximum(kk, 0.0) ** 2
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", cr, p["cw_r"])) * \
+        jnp.einsum("btf,fd->btd", kk, p["cw_v"])
+    x = x + out
+
+    new_state = None
+    if state is not None:
+        new_state = {"tm_x": h[:, -1], "cm_x": h2[:, -1], "S": new_S}
+    return x, new_state
+
+
+def rwkv_state_init(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {"tm_x": jnp.zeros((batch, d), dtype),
+            "cm_x": jnp.zeros((batch, d), dtype),
+            "S": jnp.zeros((batch, H, hd, hd), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma)
+# ---------------------------------------------------------------------------
+CONV_W = 4
+LRU_C = 8.0
+
+
+def rglru_init(key, cfg: ArchConfig) -> Tuple[Pytree, Pytree]:
+    d = cfg.d_model
+    w = d  # lru_width = d_model
+    ks = jax.random.split(key, 7)
+    p, a = {}, {}
+    p["w_gate"], a["w_gate"] = dense_init(ks[0], d, w, "embed", "mlp")
+    p["w_x"], a["w_x"] = dense_init(ks[1], d, w, "embed", "mlp")
+    p["conv_w"] = jax.random.normal(ks[2], (CONV_W, w)) * 0.1
+    a["conv_w"] = (None, "mlp")
+    p["conv_b"] = jnp.zeros((w,))
+    a["conv_b"] = ("mlp",)
+    # [w_in, w_out]: FSDP on the input dim, TP on the output dim (the
+    # recurrence state h stays sharded on "model" end to end)
+    p["w_a"], a["w_a"] = dense_init(ks[3], w, w, "embed", "mlp_out")
+    p["b_a"] = jnp.zeros((w,)); a["b_a"] = ("mlp_out",)
+    p["w_i"], a["w_i"] = dense_init(ks[4], w, w, "embed", "mlp_out")
+    p["b_i"] = jnp.zeros((w,)); a["b_i"] = ("mlp_out",)
+    p["lam"] = jax.random.uniform(ks[5], (w,), minval=0.5, maxval=2.0)
+    a["lam"] = ("mlp_out",)
+    p["w_out"], a["w_out"] = dense_init(ks[6], w, d, "mlp_out", "embed")
+    p["norm"], a["norm"] = _norm_init(cfg, d)
+    return p, a
+
+
+def rglru_apply(p, x, *, cfg: ArchConfig, state: Optional[Dict] = None,
+                scan_impl: str = "xla"):
+    """Returns (y, new_state); state: {"conv": [B,CONV_W-1,w], "h": [B,w]}."""
+    B, T, d = x.shape
+    h0 = apply_norm(cfg, p.get("norm"), x)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", h0, p["w_gate"]))
+    xx = jnp.einsum("btd,dw->btw", h0, p["w_x"])
+    # causal depthwise conv, window CONV_W
+    prev_conv = (state["conv"] if state is not None
+                 else jnp.zeros((B, CONV_W - 1, xx.shape[-1]), xx.dtype))
+    xcat = jnp.concatenate([prev_conv, xx], axis=1)
+    conv = sum(xcat[:, i:i + T] * p["conv_w"][i] for i in range(CONV_W))
+    conv = conv + p["conv_b"]
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", conv, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", conv, p["w_i"]) + p["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    aa = jnp.exp(log_a)
+    bb = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * conv)
+    hprev = state["h"] if state is not None else None
+    hs, hT = diag_scan(aa, bb, hprev, impl=scan_impl)
+    y = jnp.einsum("btw,wd->btd", hs * gate, p["w_out"])
+    new_state = None
+    if state is not None:
+        new_state = {"conv": xcat[:, -(CONV_W - 1):], "h": hT}
+    return x + y, new_state
+
+
+def rglru_state_init(cfg: ArchConfig, batch: int, dtype):
+    w = cfg.d_model
+    return {"conv": jnp.zeros((batch, CONV_W - 1, w), dtype),
+            "h": jnp.zeros((batch, w), dtype)}

@@ -1,0 +1,123 @@
+"""Shared model building blocks: norms, RoPE variants, init helpers, and the
+logical-axis annotation scheme used to derive PartitionSpecs.
+
+Params are plain nested dicts of jnp arrays. Every init function returns
+``(params, axes)`` where ``axes`` mirrors ``params`` with a tuple of logical
+axis names per array dim (or None). ``launch/mesh.py`` maps logical names to
+mesh axes (the sharding rules table).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+# Logical axis vocabulary (mapped to mesh axes in launch/mesh.py):
+#   "embed"   — d_model dim of weights (FSDP/ZeRO shard axis)
+#   "heads"   — attention-head dim (tensor-parallel)
+#   "kv"      — kv-head dim (tensor-parallel when divisible)
+#   "mlp"     — ffn hidden dim (tensor-parallel)
+#   "vocab"   — vocabulary dim (tensor-parallel)
+#   "experts" — MoE expert dim (expert-parallel)
+#   "layers"  — stacked-layer (scan) dim, never sharded
+#   None      — replicated
+
+
+def dense_init(key, in_dim: int, out_dims, in_axis: Optional[str],
+               out_axes, dtype=jnp.float32, scale: Optional[float] = None):
+    """He/Glorot-ish init for a [in_dim, *out_dims] weight."""
+    if isinstance(out_dims, int):
+        out_dims = (out_dims,)
+        out_axes = (out_axes,)
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, *out_dims), dtype) * scale
+    return w, (in_axis, *out_axes)
+
+
+def rms_norm(x: jnp.ndarray, weight: Optional[jnp.ndarray],
+             eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, weight: Optional[jnp.ndarray] = None,
+               bias: Optional[jnp.ndarray] = None,
+               eps: float = 1e-5) -> jnp.ndarray:
+    """Non-parametric when weight/bias are None (OLMo §3: non-parametric LN)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., T, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray,
+                sections: Tuple[int, int, int] = None,
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: positions [..., 3, T] (t/h/w); rope dims split into 3
+    sections, each rotated by its own coordinate."""
+    D = x.shape[-1]
+    if sections is None:
+        d6 = D // 2 // 3
+        sections = (D // 2 - 2 * d6, d6, d6)
+    freqs = rope_freqs(D, theta)                       # [D/2]
+    # per-frequency section id; gather that section's coordinate per frequency
+    sec = jnp.concatenate([jnp.full((s,), i) for i, s in enumerate(sections)])
+    # positions [..., 3, T] -> per-freq positions [..., T, D/2]
+    coords = jnp.moveaxis(positions.astype(jnp.float32), -2, 0)  # [3, ..., T]
+    per_freq = coords[sec.astype(jnp.int32)]           # [D/2, ..., T]
+    per_freq = jnp.moveaxis(per_freq, 0, -1)           # [..., T, D/2]
+    angles = per_freq * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       ignore_index: int = -100) -> jnp.ndarray:
+    """Mean CE over valid positions. logits [..., V] f32-upcast."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = labels != ignore_index
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,202 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: inputs are precomputed frame
+embeddings [B, S, d]. Positions are sinusoidal (added at embed time; the
+backbone config uses rope="none"). Decoder layers: causal self-attention +
+cross-attention over the encoder memory + FFN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding import constrain
+from . import blocks
+from .common import cross_entropy_loss
+from .lm import _stack_init
+
+Pytree = Any
+
+
+def sinusoidal(T: int, d: int, offset=0) -> jnp.ndarray:
+    pos = (jnp.arange(T) + offset)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, attn_impl: str = "xla"):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+
+    # ------------------------------------------------------------------ init
+    def _enc_layer_init(self, key):
+        k1, k2 = jax.random.split(key)
+        p, a = {}, {}
+        p["attn"], a["attn"] = blocks.attn_init(k1, self.cfg)
+        p["ffn"], a["ffn"] = blocks.ffn_init(k2, self.cfg)
+        return p, a
+
+    def _dec_layer_init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p, a = {}, {}
+        p["self"], a["self"] = blocks.attn_init(k1, self.cfg)
+        p["cross"], a["cross"] = blocks.attn_init(k2, self.cfg)
+        p["ffn"], a["ffn"] = blocks.ffn_init(k3, self.cfg)
+        return p, a
+
+    def init_with_axes(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        params, axes = {}, {}
+        emb = jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02
+        params["embed"], axes["embed"] = emb, ("vocab", None)
+        unemb = (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab))
+                 * (1.0 / math.sqrt(cfg.d_model)))
+        params["unembed"], axes["unembed"] = unemb, ("embed", "vocab")
+        params["enc"], axes["enc"] = _stack_init(
+            self._enc_layer_init, ks[2], cfg.n_encoder_layers)
+        params["dec"], axes["dec"] = _stack_init(
+            self._dec_layer_init, ks[3], cfg.n_layers)
+        params["enc_norm"], axes["enc_norm"] = blocks._norm_init(
+            cfg, cfg.d_model)
+        params["final_norm"], axes["final_norm"] = blocks._norm_init(
+            cfg, cfg.d_model)
+        return params, axes
+
+    def init(self, key):
+        return self.init_with_axes(key)[0]
+
+    def param_axes(self):
+        box = {}
+
+        def f():
+            p, a = self.init_with_axes(jax.random.PRNGKey(0))
+            box["axes"] = a
+            return p
+
+        jax.eval_shape(f)
+        return box["axes"]
+
+    def _compute_cast(self, params):
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        return jax.tree.map(
+            lambda w: w.astype(dt) if (w.dtype == jnp.float32 and w.ndim >= 2)
+            else w, params)
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params, src_embeds) -> jnp.ndarray:
+        cfg = self.cfg
+        B, S, d = src_embeds.shape
+        x = src_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        x = x + sinusoidal(S, d).astype(x.dtype)
+        x = constrain(x, ("batch", "seq", None))
+        positions = jnp.arange(S)
+
+        def body(h, lp):
+            h, _ = blocks.attn_apply(lp["attn"], h, cfg=cfg,
+                                     positions=positions, causal=False,
+                                     attn_impl=self.attn_impl)
+            h = blocks.ffn_apply(lp["ffn"], h, cfg=cfg)
+            return h, None
+
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return blocks.apply_norm(cfg, params.get("enc_norm"), x)
+
+    def _cross_kv(self, lp, memory):
+        """Per-layer cross-attention k/v from encoder memory, head-major."""
+        cfg = self.cfg
+        k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wv"])
+        return k.swapaxes(1, 2), v.swapaxes(1, 2)
+
+    # ------------------------------------------------------------- decoder
+    def _decoder(self, params, tokens, memory, cache=None, pos=0):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+        x = x + sinusoidal(T, cfg.d_model, offset=pos).astype(x.dtype)
+        x = constrain(x, ("batch", "seq", None))
+        positions = jnp.arange(T) + pos
+
+        if cache is None:
+            def body(h, lp):
+                h, _ = blocks.attn_apply(lp["self"], h, cfg=cfg,
+                                         positions=positions, causal=True,
+                                         attn_impl=self.attn_impl)
+                kv = self._cross_kv(lp, memory)
+                h, _ = blocks.attn_apply(lp["cross"], h, cfg=cfg,
+                                         positions=positions,
+                                         kv_memory=kv)
+                h = blocks.ffn_apply(lp["ffn"], h, cfg=cfg)
+                return h, None
+            if cfg.remat == "layer":
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["dec"])
+            new_cache = None
+        else:
+            def body(h, pc):
+                lp, lc = pc
+                h, sc = blocks.attn_apply(lp["self"], h, cfg=cfg,
+                                          positions=positions,
+                                          cache=lc["self"], pos=pos,
+                                          attn_impl=self.attn_impl)
+                h, _ = blocks.attn_apply(lp["cross"], h, cfg=cfg,
+                                         positions=positions,
+                                         kv_memory=(lc["cross_k"],
+                                                    lc["cross_v"]))
+                h = blocks.ffn_apply(lp["ffn"], h, cfg=cfg)
+                return h, {"self": sc, "cross_k": lc["cross_k"],
+                           "cross_v": lc["cross_v"]}
+            x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+
+        x = blocks.apply_norm(cfg, params.get("final_norm"), x)
+        logits = jnp.einsum("btd,dv->btv", x, params["unembed"])
+        return constrain(logits, ("batch", "seq", "vocab")), new_cache
+
+    # ------------------------------------------------------------- public
+    def forward(self, params, batch):
+        params = self._compute_cast(params)
+        memory = self.encode(params, batch["src_embeds"])
+        logits, _ = self._decoder(params, batch["tokens"], memory)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return cross_entropy_loss(logits, batch["labels"])
+
+    def decode_cache_init(self, batch: int, max_len: int,
+                          memory: Optional[jnp.ndarray] = None,
+                          params=None) -> Pytree:
+        """Self-attn cache (+ per-layer cross kv if memory given)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.kv_cache_dtype)
+        L = cfg.n_layers
+        hd = cfg.resolved_head_dim
+        self_c = {"k": jnp.zeros((L, batch, cfg.kv_heads, max_len, hd), dt),
+                  "v": jnp.zeros((L, batch, cfg.kv_heads, max_len, hd), dt)}
+        if memory is None:
+            S = 1
+            ck = jnp.zeros((L, batch, cfg.kv_heads, S, hd), dt)
+            cv = jnp.zeros((L, batch, cfg.kv_heads, S, hd), dt)
+        else:
+            params = self._compute_cast(params)
+
+            def kv_body(_, lp):
+                return None, self._cross_kv(lp, memory)
+            _, (ck, cv) = jax.lax.scan(kv_body, None, params["dec"])
+            ck, cv = ck.astype(dt), cv.astype(dt)
+        return {"self": self_c, "cross_k": ck, "cross_v": cv}
+
+    def decode_step(self, params, batch, cache, pos):
+        params = self._compute_cast(params)
+        logits, new_cache = self._decoder(params, batch["tokens"], None,
+                                          cache=cache, pos=pos)
+        return logits, new_cache

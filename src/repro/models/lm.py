@@ -1,0 +1,418 @@
+"""Decoder-only LM assembly (dense / MoE / MLA / SSM / hybrid / VLM).
+
+Layers are stacked (vmapped init) and applied with ``lax.scan`` so the lowered
+HLO stays compact — a 64-layer 314B model compiles as one scanned body, which
+is what lets the 40-cell × 2-mesh dry-run finish on a CPU host.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding import constrain
+from . import blocks
+from .common import cross_entropy_loss
+
+Pytree = Any
+
+AUX_COEF = 0.01
+
+
+def _stack_init(fn, key, n: int):
+    """vmap a per-layer init over n keys -> stacked params + layer axes."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    # derive axes without materializing a layer (strings via side channel)
+    box = {}
+
+    def params_only(k):
+        p, a = fn(k)
+        box["axes"] = a
+        return p
+
+    jax.eval_shape(params_only, key)
+    axes = jax.tree.map(lambda a: ("layers", *a) if isinstance(a, tuple)
+                        else a, box["axes"],
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+class LM:
+    """Config-driven language model. All state is explicit (pure functions)."""
+
+    def __init__(self, cfg: ArchConfig, attn_impl: str = "xla",
+                 scan_impl: str = "xla_chunked", mla_absorbed: bool = False):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.scan_impl = scan_impl
+        self.mla_absorbed = mla_absorbed
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key):
+        cfg = self.cfg
+        p, a = {}, {}
+        if cfg.family == "ssm":
+            p["rwkv"], a["rwkv"] = blocks.rwkv_init(key, cfg)
+            return p, a
+        k1, k2 = jax.random.split(key)
+        if cfg.kv_lora:
+            p["attn"], a["attn"] = blocks.mla_init(k1, cfg)
+        else:
+            p["attn"], a["attn"] = blocks.attn_init(k1, cfg)
+        if cfg.n_experts:
+            if cfg.moe_strategy == "expert_parallel_shardmap":
+                from .moe_shardmap import moe_shardmap_init
+                p["moe"], a["moe"] = moe_shardmap_init(k2, cfg)
+            else:
+                p["moe"], a["moe"] = blocks.moe_init(k2, cfg)
+        else:
+            p["ffn"], a["ffn"] = blocks.ffn_init(k2, cfg)
+        return p, a
+
+    def _superblock_init(self, key):
+        """Hybrid (recurrentgemma) superblock: pattern of temporal blocks,
+        each followed by an FFN."""
+        cfg = self.cfg
+        p, a = {}, {}
+        ks = jax.random.split(key, 2 * len(cfg.block_pattern))
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "rec":
+                p[f"t{i}"], a[f"t{i}"] = blocks.rglru_init(ks[2 * i], cfg)
+            else:
+                p[f"t{i}"], a[f"t{i}"] = blocks.attn_init(ks[2 * i], cfg)
+            p[f"mlp{i}"], a[f"mlp{i}"] = blocks.ffn_init(ks[2 * i + 1], cfg)
+        return p, a
+
+    def init_with_axes(self, key) -> Tuple[Pytree, Pytree]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {}
+        axes: Dict[str, Any] = {}
+        if not cfg.embed_inputs or cfg.vocab:
+            emb = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+            params["embed"], axes["embed"] = emb, ("vocab", None)
+        unemb = (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                 * (1.0 / math.sqrt(cfg.d_model)))
+        params["unembed"], axes["unembed"] = unemb, ("embed", "vocab")
+        params["final_norm"], axes["final_norm"] = blocks._norm_init(
+            cfg, cfg.d_model)
+
+        if cfg.family == "hybrid":
+            pat = len(cfg.block_pattern)
+            n_super, n_rem = divmod(cfg.n_layers, pat)
+            params["layers"], axes["layers"] = _stack_init(
+                self._superblock_init, keys[2], n_super)
+            rem_p, rem_a = [], []
+            for i in range(n_rem):
+                rp, ra = {}, {}
+                rp["t"], ra["t"] = blocks.rglru_init(
+                    jax.random.fold_in(keys[3], i), cfg)
+                rp["mlp"], ra["mlp"] = blocks.ffn_init(
+                    jax.random.fold_in(keys[4], i), cfg)
+                rem_p.append(rp)
+                rem_a.append(ra)
+            params["rem"], axes["rem"] = rem_p, rem_a
+        else:
+            params["layers"], axes["layers"] = _stack_init(
+                self._layer_init, keys[2], cfg.n_layers)
+        return params, axes
+
+    def init(self, key) -> Pytree:
+        return self.init_with_axes(key)[0]
+
+    def param_axes(self) -> Pytree:
+        box = {}
+
+        def f():
+            p, a = self.init_with_axes(jax.random.PRNGKey(0))
+            box["axes"] = a
+            return p
+
+        jax.eval_shape(f)
+        return box["axes"]
+
+    # ------------------------------------------------------------- forward
+    def _compute_cast(self, params):
+        dt = jnp.dtype(self.cfg.compute_dtype)
+
+        def cast(w):
+            if w.dtype == jnp.float32 and w.ndim >= 2:
+                return w.astype(dt)
+            return w
+        return jax.tree.map(cast, params)
+
+    def _layer_apply(self, p, x, positions, cache=None, pos=None):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        if cfg.family == "ssm":
+            x, st = blocks.rwkv_apply(p["rwkv"], x, cfg=cfg,
+                                      state=cache, scan_impl=self.scan_impl)
+            return x, (st if cache is not None else None), aux
+        if cfg.kv_lora:
+            x, c = blocks.mla_apply(p["attn"], x, cfg=cfg, positions=positions,
+                                    cache=cache, pos=pos,
+                                    attn_impl=self.attn_impl,
+                                    absorbed=self.mla_absorbed)
+        else:
+            x, c = blocks.attn_apply(p["attn"], x, cfg=cfg,
+                                     positions=positions, cache=cache,
+                                     pos=pos, attn_impl=self.attn_impl)
+        new_cache = c
+        if cfg.n_experts:
+            if cfg.moe_strategy == "expert_parallel_shardmap":
+                from .moe_shardmap import moe_shardmap_apply
+                x, aux = moe_shardmap_apply(p["moe"], x, cfg=cfg)
+            else:
+                x, aux = blocks.moe_apply(p["moe"], x, cfg=cfg)
+        else:
+            x = blocks.ffn_apply(p["ffn"], x, cfg=cfg)
+        return x, new_cache, aux
+
+    def _superblock_apply(self, p, x, positions, cache=None, pos=None):
+        cfg = self.cfg
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "rec":
+                x, st = blocks.rglru_apply(
+                    p[f"t{i}"], x, cfg=cfg,
+                    state=cache[f"t{i}"] if cache is not None else None,
+                    scan_impl="xla")
+                new_cache[f"t{i}"] = st
+            else:
+                x, c = blocks.attn_apply(
+                    p[f"t{i}"], x, cfg=cfg, positions=positions,
+                    cache=cache[f"t{i}"] if cache is not None else None,
+                    pos=pos, attn_impl=self.attn_impl)
+                new_cache[f"t{i}"] = c
+            x = blocks.ffn_apply(p[f"mlp{i}"], x, cfg=cfg, act="gelu")
+        return x, (new_cache if cache is not None else None)
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_inputs and "embeds" in batch:
+            x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        else:
+            x = params["embed"][batch["tokens"]].astype(
+                jnp.dtype(cfg.compute_dtype))
+        return constrain(x, ("batch", "seq", None))
+
+    def _positions(self, batch, T: int, offset: int = 0):
+        if self.cfg.rope == "mrope":
+            if "positions" in batch:
+                return batch["positions"]
+            pos = jnp.arange(T) + offset
+            B = batch.get("tokens", batch.get("embeds")).shape[0]
+            return jnp.broadcast_to(pos[None, None, :], (B, 3, T))
+        return jnp.arange(T) + offset
+
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence forward. Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        params = self._compute_cast(params)
+        x = self._embed(params, batch)
+        T = x.shape[1]
+        positions = self._positions(batch, T)
+
+        if cfg.family == "hybrid":
+            def body(carry, lp):
+                h = carry
+                h, _ = self._superblock_apply(lp, h, positions)
+                return h, None
+            if cfg.remat == "layer":
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+            for rp in params["rem"]:
+                x, _ = blocks.rglru_apply(rp["t"], x, cfg=cfg, scan_impl="xla")
+                x = blocks.ffn_apply(rp["mlp"], x, cfg=cfg, act="gelu")
+            aux_total = jnp.zeros((), jnp.float32)
+        else:
+            def body(carry, lp):
+                h, aux = carry
+                h, _, a = self._layer_apply(lp, h, positions)
+                return (h, aux + a), None
+            if cfg.remat == "layer":
+                body = jax.checkpoint(body)
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+
+        x = blocks.apply_norm(cfg, params.get("final_norm"), x)
+        logits = jnp.einsum("btd,dv->btv", x, params["unembed"])
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        return logits, aux_total
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, aux = self.forward(params, batch)
+        return cross_entropy_loss(logits, batch["labels"]) + AUX_COEF * aux
+
+    # ------------------------------------------------------------- serving
+    def decode_cache_init(self, batch: int, max_len: int) -> Pytree:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.kv_cache_dtype)
+        if cfg.family == "ssm":
+            st = blocks.rwkv_state_init(cfg, batch, dt)
+            return jax.tree.map(
+                lambda z: jnp.broadcast_to(z[None], (cfg.n_layers, *z.shape))
+                .copy(), st)
+        if cfg.family == "hybrid":
+            pat = len(cfg.block_pattern)
+            n_super, n_rem = divmod(cfg.n_layers, pat)
+            sb = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                if kind == "rec":
+                    sb[f"t{i}"] = blocks.rglru_state_init(cfg, batch, dt)
+                else:
+                    sb[f"t{i}"] = blocks.attn_cache_init(
+                        cfg, batch, min(max_len, cfg.window), dt)
+            stacked = jax.tree.map(
+                lambda z: jnp.broadcast_to(z[None], (n_super, *z.shape))
+                .copy(), sb)
+            rem = [blocks.rglru_state_init(cfg, batch, dt)
+                   for _ in range(n_rem)]
+            return {"super": stacked, "rem": rem}
+        if cfg.kv_lora:
+            c = blocks.mla_cache_init(cfg, batch, max_len, dt,
+                                      absorbed=self.mla_absorbed)
+        else:
+            c = blocks.attn_cache_init(cfg, batch, max_len, dt)
+        return jax.tree.map(
+            lambda z: jnp.broadcast_to(z[None], (cfg.n_layers, *z.shape))
+            .copy(), c)
+
+    def decode_step(self, params, batch, cache, pos):
+        """One-token decode. batch: {"tokens": [B,1]} (or embeds).
+        Returns (logits [B,1,V], new_cache)."""
+        cfg = self.cfg
+        params = self._compute_cast(params)
+        x = self._embed(params, batch)
+        positions = self._positions(batch, 1, offset=pos)
+        if cfg.rope != "mrope" and not isinstance(positions, int):
+            positions = jnp.arange(1) + pos
+
+        if cfg.family == "hybrid":
+            def body(h, pc):
+                lp, lc = pc
+                h, nc = self._superblock_apply(lp, h, positions,
+                                               cache=lc, pos=pos)
+                return h, nc
+            x, new_super = jax.lax.scan(body, x,
+                                        (params["layers"], cache["super"]))
+            new_rem = []
+            for rp, rc in zip(params["rem"], cache["rem"]):
+                x, st = blocks.rglru_apply(rp["t"], x, cfg=cfg, state=rc,
+                                           scan_impl="xla")
+                x = blocks.ffn_apply(rp["mlp"], x, cfg=cfg, act="gelu")
+                new_rem.append(st)
+            new_cache = {"super": new_super, "rem": new_rem}
+        else:
+            def body(h, pc):
+                lp, lc = pc
+                h, nc, _ = self._layer_apply(lp, h, positions,
+                                             cache=lc, pos=pos)
+                return h, nc
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+
+        x = blocks.apply_norm(cfg, params.get("final_norm"), x)
+        logits = jnp.einsum("btd,dv->btv", x, params["unembed"])
+        return constrain(logits, ("batch", None, "vocab")), new_cache
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Prompt processing; returns (logits, decode-ready cache).
+        ``max_len`` sizes the kv cache (default: prompt length)."""
+        cfg = self.cfg
+        params_c = self._compute_cast(params)
+        x = self._embed(params_c, batch)
+        B, T = x.shape[0], x.shape[1]
+        max_len = max_len or T
+        dt = jnp.dtype(cfg.kv_cache_dtype)
+        positions = self._positions(batch, T)
+
+        if cfg.family == "ssm":
+            st0 = jax.tree.map(
+                lambda z: jnp.broadcast_to(
+                    z[None], (cfg.n_layers, *z.shape)).copy(),
+                blocks.rwkv_state_init(cfg, B, dt))
+
+            def body(h, pc):
+                lp, lst = pc
+                hh, st = blocks.rwkv_apply(lp["rwkv"], h, cfg=cfg, state=lst,
+                                           scan_impl=self.scan_impl)
+                return hh, st
+
+            x, states = jax.lax.scan(body, x, (params_c["layers"], st0))
+            x = blocks.apply_norm(cfg, params_c.get("final_norm"), x)
+            logits = jnp.einsum("btd,dv->btv", x, params_c["unembed"])
+            return constrain(logits, ("batch", "seq", "vocab")), states
+
+        if cfg.family == "hybrid":
+            def body(h, lp):
+                hh, caches = self._superblock_prefill(lp, h, positions,
+                                                      max_len)
+                return hh, caches
+
+            x, super_caches = jax.lax.scan(body, x, params_c["layers"])
+            rem = []
+            for rp in params_c["rem"]:
+                st0 = blocks.rglru_state_init(cfg, B, dt)
+                x, st = blocks.rglru_apply(rp["t"], x, cfg=cfg, state=st0,
+                                           scan_impl="xla")
+                x = blocks.ffn_apply(rp["mlp"], x, cfg=cfg, act="gelu")
+                rem.append(st)
+            x = blocks.apply_norm(cfg, params_c.get("final_norm"), x)
+            logits = jnp.einsum("btd,dv->btv", x, params_c["unembed"])
+            return (constrain(logits, ("batch", "seq", "vocab")),
+                    {"super": super_caches, "rem": rem})
+
+        # attention families: scan layers, emitting per-layer packed kv
+        def body(h, lp):
+            if cfg.kv_lora:
+                hh, _ = blocks.mla_apply(lp["attn"], h, cfg=cfg,
+                                         positions=positions, cache=None,
+                                         attn_impl=self.attn_impl)
+                c = blocks.mla_prefill_cache(lp["attn"], h, cfg=cfg,
+                                             positions=positions,
+                                             max_len=max_len, dtype=dt,
+                                             absorbed=self.mla_absorbed)
+            else:
+                kv = blocks.attn_prefill_kv(lp["attn"], h, cfg=cfg,
+                                            positions=positions)
+                c = blocks.pack_prefill_cache(cfg, kv, max_len, dt)
+                hh, _ = blocks.attn_apply(lp["attn"], h, cfg=cfg,
+                                          positions=positions,
+                                          attn_impl=self.attn_impl)
+            if cfg.n_experts:
+                hh, _ = blocks.moe_apply(lp["moe"], hh, cfg=cfg)
+            else:
+                hh = blocks.ffn_apply(lp["ffn"], hh, cfg=cfg)
+            return hh, c
+
+        x_out, cache = jax.lax.scan(body, x, params_c["layers"])
+        x_out = blocks.apply_norm(cfg, params_c.get("final_norm"), x_out)
+        logits = jnp.einsum("btd,dv->btv", x_out, params_c["unembed"])
+        return constrain(logits, ("batch", "seq", "vocab")), cache
+
+    def _superblock_prefill(self, p, x, positions, max_len):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.kv_cache_dtype)
+        caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "rec":
+                st0 = blocks.rglru_state_init(cfg, x.shape[0], dt)
+                x, st = blocks.rglru_apply(p[f"t{i}"], x, cfg=cfg, state=st0,
+                                           scan_impl="xla")
+                caches[f"t{i}"] = st
+            else:
+                kv = blocks.attn_prefill_kv(p[f"t{i}"], x, cfg=cfg,
+                                            positions=positions)
+                caches[f"t{i}"] = blocks.pack_prefill_cache(cfg, kv, max_len,
+                                                            dt)
+                x, _ = blocks.attn_apply(p[f"t{i}"], x, cfg=cfg,
+                                         positions=positions,
+                                         attn_impl=self.attn_impl)
+            x = blocks.ffn_apply(p[f"mlp{i}"], x, cfg=cfg, act="gelu")
+        return x, caches

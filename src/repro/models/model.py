@@ -1,0 +1,119 @@
+"""Model registry + input specs for every (architecture × shape) cell.
+
+``input_specs`` returns ShapeDtypeStructs only (the dry-run contract: weak-
+type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .encdec import EncDecLM
+from .lm import LM
+
+Pytree = Any
+
+
+def build_model(cfg: ArchConfig, **kw):
+    if cfg.family == "encdec":
+        kw.pop("scan_impl", None)
+        kw.pop("mla_absorbed", None)
+        return EncDecLM(cfg, **kw)
+    return LM(cfg, **kw)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"src_embeds": _sds((B, T, cfg.d_model), cfg.compute_dtype),
+                "tokens": _sds((B, T), "int32"),
+                "labels": _sds((B, T), "int32")}
+    batch: Dict[str, Any] = {"labels": _sds((B, T), "int32")}
+    if cfg.embed_inputs:
+        batch["embeds"] = _sds((B, T, cfg.d_model), cfg.compute_dtype)
+    else:
+        batch["tokens"] = _sds((B, T), "int32")
+    if cfg.rope == "mrope":
+        batch["positions"] = _sds((B, 3, T), "int32")
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        # encoder consumes the 32k frames; decoder starts from a short prompt
+        return {"src_embeds": _sds((B, T, cfg.d_model), cfg.compute_dtype),
+                "tokens": _sds((B, 128), "int32")}
+    batch: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = _sds((B, T, cfg.d_model), cfg.compute_dtype)
+    else:
+        batch["tokens"] = _sds((B, T), "int32")
+    if cfg.rope == "mrope":
+        batch["positions"] = _sds((B, 3, T), "int32")
+    return batch
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    batch: Dict[str, Any] = {"tokens": _sds((B, 1), "int32")}
+    if cfg.rope == "mrope":
+        batch["positions"] = _sds((B, 3, 1), "int32")
+    return batch
+
+
+def decode_cache_specs(model, cfg: ArchConfig, shape: ShapeConfig) -> Pytree:
+    """Abstract cache for a decode step with a ``seq_len``-token context."""
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        fn = lambda: model.decode_cache_init(B, T, memory=None)
+        cache = jax.eval_shape(fn)
+        # cross kv sized to the encoder memory (= seq_len frames)
+        hd = cfg.resolved_head_dim
+        L = cfg.n_layers
+        cache = dict(cache)
+        cache["cross_k"] = _sds((L, B, cfg.kv_heads, T, hd),
+                                cfg.kv_cache_dtype)
+        cache["cross_v"] = _sds((L, B, cfg.kv_heads, T, hd),
+                                cfg.kv_cache_dtype)
+        return cache
+    return jax.eval_shape(lambda: model.decode_cache_init(B, T))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                model=None) -> Dict[str, Any]:
+    """All inputs for the step function this shape lowers."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        model = model or build_model(cfg)
+        return {"batch": decode_batch_specs(cfg, shape),
+                "cache": decode_cache_specs(model, cfg, shape),
+                "pos": _sds((), "int32")}
+    raise ValueError(shape.kind)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    import math
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: shared + top_k routed experts)."""
+    total = count_params(cfg)
+    if not cfg.n_experts:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.d_expert
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert * cfg.n_layers
+    return total - inactive

@@ -1,0 +1,7 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .compression import compress_int8, decompress_int8, compressed_allreduce
+from .train_state import TrainState, make_train_step
+
+__all__ = ["AdamWState", "TrainState", "adamw_init", "adamw_update",
+           "compress_int8", "compressed_allreduce", "decompress_int8",
+           "make_train_step"]

@@ -1,0 +1,5 @@
+from .watchdog import CollectiveWatchdog, HostMonitor, StepTimer
+from .elastic import plan_remesh, surviving_mesh_shape
+
+__all__ = ["CollectiveWatchdog", "HostMonitor", "StepTimer", "plan_remesh",
+           "surviving_mesh_shape"]

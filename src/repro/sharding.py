@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules.
+
+Models annotate weights and activations with *logical* axis names; a rules
+table maps logical names to mesh axes. Inside a ``use_rules(...)`` context
+(set up by the launcher), ``constrain(x, axes)`` applies
+``with_sharding_constraint``; outside, it is a no-op so models run untouched
+on a single CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# default logical -> mesh-axis rules (single-pod); launcher may override.
+# None = replicated. A tuple means the dim is sharded over several mesh axes.
+DEFAULT_RULES: Dict[str, Union[None, str, Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",        # FSDP/ZeRO shard axis for weights
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "expert_batch": None,
+    "state": None,
+    "conv": None,
+    "lora": None,
+    "pages": None,
+    "kv_seq": None,
+}
+
+
+def _mesh_axes(mesh: Mesh):
+    return set(mesh.axis_names)
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             rules: Optional[Dict] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """Logical axes tuple -> PartitionSpec under the active rules/mesh."""
+    rules = rules if rules is not None else get_rules()
+    mesh = mesh if mesh is not None else get_mesh()
+    names = _mesh_axes(mesh) if mesh is not None else set()
+    out = []
+    used = set()
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        if isinstance(m, str):
+            m = (m,)
+        # a mesh axis may appear at most once per spec; first dim wins
+        m = tuple(a for a in m if a in names and a not in used)
+        used.update(m)
+        out.append(m if len(m) > 1 else (m[0] if m else None))
+    # trim trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict, mesh: Optional[Mesh] = None):
+    prev = (getattr(_state, "rules", None), getattr(_state, "mesh", None))
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def get_rules() -> Optional[Dict]:
+    return getattr(_state, "rules", None)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """Apply a logical sharding constraint if rules+mesh are active."""
+    rules = get_rules()
+    mesh = get_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = spec_for(axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_seq(x):
+    """Sequence-parallel residual-stream constraint: only emitted when the
+    active rules actually shard "seq" (the fsdp_tp_sp preset) so the default
+    presets lower exactly as without it."""
+    rules = get_rules()
+    if rules is None or rules.get("seq") is None:
+        return x
+    return constrain(x, ("batch", "seq", None))

@@ -1,0 +1,56 @@
+"""HLO analyzer: trip-count scaling and collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_scale_with_scan_trip_count():
+    W1 = jax.ShapeDtypeStruct((1, 128, 128), jnp.float32)
+    W10 = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    X = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    s1 = analyze_hlo(_compile_text(f, W1, X))
+    s10 = analyze_hlo(_compile_text(f, W10, X))
+    expected_one = 2 * 32 * 128 * 128
+    assert abs(s1.dot_flops - expected_one) / expected_one < 0.01
+    assert abs(s10.dot_flops - 10 * expected_one) / (10 * expected_one) < 0.01
+
+
+def test_nested_scan_trip_counts_multiply():
+    W = jax.ShapeDtypeStruct((3, 4, 64, 64), jnp.float32)
+    X = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+
+    def f(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return jnp.tanh(ci @ wi), None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y.sum()
+
+    s = analyze_hlo(_compile_text(f, W, X))
+    expected = 12 * 2 * 16 * 64 * 64
+    assert abs(s.dot_flops - expected) / expected < 0.01
+
+
+def test_parse_computations_and_entry():
+    X = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    txt = _compile_text(lambda x: (x @ x).sum(), X)
+    comps, entry = parse_hlo(txt)
+    assert entry is not None and entry in comps
+    total_dots = sum(1 for c in comps.values()
+                     for i in c.instrs if i.opcode == "dot")
+    assert total_dots == 1

@@ -1,0 +1,80 @@
+"""Paged KV cache: Eq.-1-driven HBM residency (core/kvcache.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HBMExhaustedError, PagedKVCache
+
+
+def _cache(hbm_pages=8, page=4):
+    return PagedKVCache(num_layers=2, hbm_pages=hbm_pages, page_size=page,
+                        kv_heads=2, head_dim=4)
+
+
+def test_offload_and_restore_preserves_data():
+    kv = _cache(hbm_pages=4)
+    kv.start_sequence(0)
+    kv.ensure_capacity(0, 8)   # 2 pages
+    kv.advance(0, 8)
+    bt = kv.block_table(0, 4)
+    # write recognizable data into seq 0's pages
+    kv.kv = kv.kv.at[:, bt[0]].set(1.25)
+    kv.kv = kv.kv.at[:, bt[1]].set(2.5)
+    # second sequence forces offload of seq 0 (cold)
+    kv.start_sequence(1)
+    kv.ensure_capacity(1, 12)  # 3 pages > 2 free
+    kv.advance(1, 12)
+    assert kv.stats["offloads"] > 0
+    bt0 = kv.block_table(0, 4)   # restores offloaded pages
+    assert kv.stats["fetches"] > 0
+    slab0 = np.asarray(kv.kv[:, bt0[0]])
+    slab1 = np.asarray(kv.kv[:, bt0[1]])
+    assert np.allclose(slab0, 1.25) and np.allclose(slab1, 2.5)
+
+
+def test_finished_sequences_free_pages():
+    kv = _cache(hbm_pages=4)
+    for s in (0, 1):
+        kv.start_sequence(s)
+        kv.ensure_capacity(s, 8)
+        kv.advance(s, 8)
+    assert kv.resident_pages() == 4
+    kv.finish_sequence(0)
+    assert kv.resident_pages() == 2
+    kv.start_sequence(2)
+    kv.ensure_capacity(2, 8)   # reuses freed pages, no offload needed
+    assert kv.stats["offloads"] == 0
+
+
+def test_cold_sequence_evicted_before_hot():
+    kv = _cache(hbm_pages=4)
+    kv.start_sequence(0)
+    kv.ensure_capacity(0, 8)
+    kv.advance(0, 8)
+    kv.start_sequence(1)
+    kv.ensure_capacity(1, 8)
+    kv.advance(1, 8)
+    # touch seq 1 (hot); seq 0 goes cold
+    kv.block_table(1, 2)
+    kv.start_sequence(2)
+    kv.ensure_capacity(2, 4)   # needs 1 page -> evict from seq 0
+    seq0_resident = sum(kv._pages[p].offset is not None
+                        for p in kv._seqs[0].page_ids)
+    seq1_resident = sum(kv._pages[p].offset is not None
+                        for p in kv._seqs[1].page_ids)
+    assert seq1_resident == 2
+    assert seq0_resident < 2
+
+
+def test_exhaustion_raises():
+    kv = _cache(hbm_pages=2)
+    kv.start_sequence(0)
+    kv.ensure_capacity(0, 8)
+    kv.advance(0, 8)
+    kv.block_table(0, 2)
+    # all pages belong to the single active sequence; each new page triggers
+    # eviction of this sequence's own older pages (random pattern, LRU) —
+    # allowed; but pinning everything via an impossible block table is not.
+    kv.start_sequence(1)
+    kv.ensure_capacity(1, 4)
+    assert kv.stats["offloads"] > 0

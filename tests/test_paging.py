@@ -1,0 +1,157 @@
+"""Data-aware paging: Eq. 1 priority + Alg. 1 victim selection (paper §6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AttributeSet, BufferPool, CurrentOperation,
+                        DurabilityType, EvictionStrategy, Lifetime,
+                        PoolExhaustedError, ReadingPattern, WritingPattern,
+                        eviction_overhead, select_strategy, spilling_cost)
+from repro.core.locality_set import LocalitySet
+from repro.core.paging import PagingSystem
+
+
+def _set(name, writing=WritingPattern.SEQUENTIAL_WRITE,
+         reading=ReadingPattern.NONE,
+         durability=DurabilityType.WRITE_BACK):
+    return LocalitySet(name, 1024, AttributeSet(
+        durability=durability, writing=writing, reading=reading))
+
+
+def test_table3_spilling_costs():
+    assert spilling_cost(WritingPattern.SEQUENTIAL_WRITE,
+                         ReadingPattern.SEQUENTIAL_READ,
+                         DurabilityType.WRITE_THROUGH) == 1.0
+    assert spilling_cost(WritingPattern.SEQUENTIAL_WRITE,
+                         ReadingPattern.SEQUENTIAL_READ,
+                         DurabilityType.WRITE_BACK) == 2.5
+    assert spilling_cost(WritingPattern.CONCURRENT_WRITE,
+                         ReadingPattern.NONE,
+                         DurabilityType.WRITE_BACK) == 2.5
+    assert spilling_cost(WritingPattern.RANDOM_MUTABLE_WRITE,
+                         ReadingPattern.RANDOM_READ,
+                         DurabilityType.WRITE_BACK) == 5.0
+
+
+def test_strategy_selection_rule():
+    """MRU for sequential/concurrent patterns, LRU for random (paper §6)."""
+    assert select_strategy(WritingPattern.SEQUENTIAL_WRITE,
+                           ReadingPattern.NONE) == EvictionStrategy.MRU
+    assert select_strategy(WritingPattern.CONCURRENT_WRITE,
+                           ReadingPattern.NONE) == EvictionStrategy.MRU
+    assert select_strategy(WritingPattern.NONE,
+                           ReadingPattern.SEQUENTIAL_READ) == EvictionStrategy.MRU
+    assert select_strategy(WritingPattern.RANDOM_MUTABLE_WRITE,
+                           ReadingPattern.NONE) == EvictionStrategy.LRU
+    assert select_strategy(WritingPattern.NONE,
+                           ReadingPattern.RANDOM_READ) == EvictionStrategy.LRU
+
+
+def test_eq1_lifetime_ended_preferred():
+    """Lifetime-ended sets have negative overhead → always evicted first."""
+    ps = PagingSystem()
+    alive = _set("alive")
+    ended = _set("ended")
+    ps.register(alive, clock=10)
+    ps.register(ended, clock=10)
+    alive._touch(50)
+    ended.end_lifetime(40)
+    order = ps.priority_order(clock=100)
+    assert order[0][0] == "ended" and order[0][1] < 0
+
+
+def test_eq1_recency_orders_alive_sets():
+    """Same cost: the colder (older t_r) set is the better victim."""
+    ps = PagingSystem()
+    hot, cold = _set("hot"), _set("cold")
+    ps.register(hot, 1)
+    ps.register(cold, 1)
+    cold._touch(10)
+    hot._touch(90)
+    order = ps.priority_order(clock=100)
+    assert [n for n, _ in order] == ["cold", "hot"]
+
+
+def test_eq1_cost_orders_alive_sets():
+    """Same recency: cheaper-to-spill (write-through seq) evicted first."""
+    ps = PagingSystem()
+    cheap = _set("cheap", durability=DurabilityType.WRITE_THROUGH)
+    costly = _set("costly", writing=WritingPattern.RANDOM_MUTABLE_WRITE,
+                  reading=ReadingPattern.RANDOM_READ)
+    ps.register(cheap, 1)
+    ps.register(costly, 1)
+    cheap._touch(50)
+    costly._touch(50)
+    order = ps.priority_order(clock=100)
+    assert [n for n, _ in order] == ["cheap", "costly"]
+
+
+def test_eviction_ratio_limits_writing_sets():
+    pool = BufferPool(64 * 1024)
+    ls = pool.create_set("w", 1024)
+    ls.attrs.writing = WritingPattern.SEQUENTIAL_WRITE
+    ls.set_operation(CurrentOperation.WRITE, pool.clock)
+    pages = [pool.new_page(ls) for _ in range(20)]
+    for p in pages:
+        pool.unpin(p, dirty=True)
+    victims = ls.select_victims()
+    assert len(victims) == 2  # 10% of 20
+    ls.set_operation(CurrentOperation.READ, pool.clock)
+    assert len(ls.select_victims()) == 20  # no limit while reading
+
+
+def test_mru_vs_lru_victim_order():
+    pool = BufferPool(64 * 1024)
+    seq = pool.create_set("seq", 1024)
+    seq.infer_from_service("sequential-write", pool.clock)
+    pages = [pool.new_page(seq) for _ in range(4)]
+    for p in pages:
+        pool.unpin(p, dirty=True)
+    seq.set_operation(CurrentOperation.READ, pool.clock)
+    victims = seq.select_victims()
+    # MRU: most recently allocated first
+    assert victims[0].page_id == pages[-1].page_id
+
+    rnd = pool.create_set("rnd", 1024)
+    rnd.infer_from_service("hash", pool.clock)
+    rpages = [pool.new_page(rnd) for _ in range(4)]
+    for p in rpages:
+        pool.unpin(p)
+    rnd.set_operation(CurrentOperation.READ, pool.clock)
+    victims = rnd.select_victims()
+    assert victims[0].page_id == rpages[0].page_id  # LRU: oldest first
+
+
+def test_pinned_pages_never_evicted():
+    pool = BufferPool(8 * 1024)
+    ls = pool.create_set("a", 1024)
+    pinned = pool.new_page(ls)          # stays pinned
+    rest = [pool.new_page(ls) for _ in range(6)]
+    for p in rest:
+        pool.unpin(p, dirty=True)
+    # allocate more than remaining capacity: must evict unpinned only
+    ls2 = pool.create_set("b", 1024)
+    for _ in range(10):
+        pool.unpin(pool.new_page(ls2), dirty=True)
+    assert pinned.resident and pinned.pinned
+
+
+def test_pool_exhausted_when_all_pinned():
+    pool = BufferPool(4 * 1024)
+    ls = pool.create_set("a", 1024)
+    pages = [pool.new_page(ls) for _ in range(3)]  # pinned
+    with pytest.raises(PoolExhaustedError):
+        for _ in range(5):
+            pool.new_page(ls)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 64))
+def test_eq1_overhead_monotone_in_recency(t1, t2):
+    """For alive sets with equal cost, overhead is increasing in t_r —
+    more recently used ⇒ more expensive to evict (kept longer)."""
+    a, b = _set("a"), _set("b")
+    a.attrs.access_recency = min(t1, t2)
+    b.attrs.access_recency = max(t1, t2)
+    clock = 100
+    assert eviction_overhead(a, clock) <= eviction_overhead(b, clock)

@@ -1,0 +1,47 @@
+"""Data pipeline on the buffer pool + dataset replicas."""
+import numpy as np
+
+from repro.core import BufferPool, PartitionScheme, StatisticsDB
+from repro.data.pipeline import (BatchLoader, register_dataset_replicas,
+                                 synthetic_token_dataset)
+
+
+def test_loader_batches_and_labels():
+    pool = BufferPool(32 << 20)
+    ds = synthetic_token_dataset(pool, "d", vocab=500, num_sequences=48,
+                                 seq_len=16)
+    batches = list(BatchLoader(ds, batch_size=16))
+    assert len(batches) == 3
+    for b in batches:
+        assert b["tokens"].shape == (16, 16)
+        assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+        assert (b["labels"][:, -1] == -100).all()
+
+
+def test_loader_through_spill():
+    pool = BufferPool(1 << 20)
+    ds = synthetic_token_dataset(pool, "big", vocab=500, num_sequences=4096,
+                                 seq_len=64)
+    assert pool.stats["spill_bytes"] > 0
+    n = 0
+    seen = set()
+    for b in BatchLoader(ds, batch_size=128):
+        n += len(b["tokens"])
+        seen.add(int(b["tokens"][0, 0]))
+    assert n == 4096
+
+
+def test_dataset_replicas_registered_and_recoverable():
+    stats = StatisticsDB()
+    rec = np.zeros(5000, dtype=[("doc", np.int64), ("bucket", np.int64)])
+    rec["doc"] = np.arange(5000)
+    rec["bucket"] = np.arange(5000) % 7
+    schemes = [PartitionScheme("doc", lambda r: r["doc"], 64, 8),
+               PartitionScheme("bucket", lambda r: r["bucket"], 64, 8)]
+    source, regs = register_dataset_replicas(stats, "corpus", rec, 8, schemes)
+    assert len(stats.replicas_of("corpus")) == 3  # source + 2 replicas
+    best = stats.best_replica("corpus", "bucket")
+    assert best.set_name == "corpus_by_bucket"
+    # replica contents complete
+    for reg in regs:
+        assert reg.target.total_records() == 5000

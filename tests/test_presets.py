@@ -1,0 +1,69 @@
+"""Parallelism presets change WHERE tensors live, never WHAT is computed:
+the loss under every preset on a small sharded mesh must match the
+single-device value. Runs in a subprocess so the main process keeps 1 CPU
+device."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import smoke_config
+from repro.launch.mesh import (batch_shardings, make_mesh, param_shardings,
+                               sharding_rules)
+from repro.models.model import build_model
+from repro import sharding as shardlib
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+cfg0 = smoke_config("deepseek-v2-lite-16b").with_(
+    compute_dtype="float32", n_heads=4, kv_heads=4, d_model=64,
+    n_experts=8, top_k=2, capacity_factor=8.0)
+rng = np.random.default_rng(0)
+B, T = 8, 16
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg0.vocab, (B, T)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg0.vocab, (B, T)), jnp.int32)}
+model0 = build_model(cfg0)
+params = model0.init(jax.random.PRNGKey(0))
+ref = float(model0.loss(params, batch))
+
+mesh = make_mesh((2, 4), ("data", "model"))
+for preset in ("fsdp_tp", "dp", "fsdp_tp_sp", "serve_2d"):
+    cfg = cfg0.with_(parallelism=preset)
+    model = build_model(cfg)
+    rules = sharding_rules(cfg, mesh)
+    pspecs = param_shardings(model, cfg, mesh, rules)
+    bsh = batch_shardings(batch, mesh)
+    with shardlib.use_rules(rules, mesh):
+        loss = float(jax.jit(model.loss, in_shardings=(pspecs, bsh))(
+            jax.device_put(params, pspecs),
+            jax.tree.map(lambda x, s: jax.device_put(x, s), batch, bsh)))
+    assert abs(loss - ref) < 1e-4 * max(abs(ref), 1), (preset, loss, ref)
+    print(f"{preset}: {loss:.6f} == {ref:.6f}")
+
+# shard_map MoE strategy on the mesh must also match
+cfg = cfg0.with_(moe_strategy="expert_parallel_shardmap")
+model = build_model(cfg)
+params_s = model.init(jax.random.PRNGKey(0))
+ref_s = float(model.loss(params_s, batch))
+rules = sharding_rules(cfg, mesh)
+pspecs = param_shardings(model, cfg, mesh, rules)
+bsh = batch_shardings(batch, mesh)
+with shardlib.use_rules(rules, mesh):
+    loss = float(jax.jit(model.loss, in_shardings=(pspecs, bsh))(
+        jax.device_put(params_s, pspecs),
+        jax.tree.map(lambda x, s: jax.device_put(x, s), batch, bsh)))
+assert abs(loss - ref_s) < 1e-4 * max(abs(ref_s), 1), (loss, ref_s)
+print(f"shardmap-moe: {loss:.6f} == {ref_s:.6f}")
+print("PRESETS OK")
+"""
+
+
+def test_presets_preserve_loss():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "PRESETS OK" in out.stdout

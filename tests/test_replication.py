@@ -1,0 +1,127 @@
+"""Heterogeneous replication + recovery (paper §7), incl. the N/K law."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PartitionScheme, StatisticsDB, expected_conflicts,
+                        fail_node, partition_set, random_dispatch,
+                        recover_source_shard, recover_target_shard,
+                        register_replica)
+
+REC = np.dtype([("okey", np.int64), ("pkey", np.int64)])
+
+
+def _records(n, seed=0):
+    rng = np.random.default_rng(seed)
+    r = np.zeros(n, REC)
+    r["okey"] = rng.permutation(n)
+    r["pkey"] = rng.integers(0, max(n // 10, 1), n)
+    return r
+
+
+def test_partition_preserves_all_objects():
+    recs = _records(10_000)
+    src = random_dispatch("t", recs, 8)
+    scheme = PartitionScheme("okey", lambda r: r["okey"], 64, 8)
+    tgt = partition_set(src, "t_pt", scheme)
+    assert tgt.total_records() == 10_000
+    assert np.array_equal(np.sort(tgt.all_records()["okey"]),
+                          np.sort(recs["okey"]))
+    # placement actually follows the scheme
+    for node, shard in tgt.shards.items():
+        if len(shard):
+            assert (scheme.node_of_records(shard) == node).all()
+
+
+def test_recover_target_shard_exact():
+    recs = _records(20_000, seed=1)
+    src = random_dispatch("t", recs, 10, seed=2)
+    scheme = PartitionScheme("okey", lambda r: r["okey"], 100, 10)
+    tgt = partition_set(src, "t_pt", scheme)
+    reg = register_replica(src, tgt, scheme)
+    lost = np.sort(tgt.shards[4]["okey"]).copy()
+    fail_node(src, 4)
+    fail_node(tgt, 4)
+    rec = recover_target_shard(reg, 4)
+    assert np.array_equal(np.sort(rec["okey"]), lost)
+
+
+def test_recover_source_shard_exact():
+    recs = _records(20_000, seed=3)
+    rng = np.random.default_rng(4)
+    nodes = rng.integers(0, 10, len(recs))
+    src = random_dispatch("t", recs, 10, seed=4)
+    scheme = PartitionScheme("okey", lambda r: r["okey"], 100, 10)
+    tgt = partition_set(src, "t_pt", scheme)
+    reg = register_replica(src, tgt, scheme)
+    # record the dispatch map (okey -> source node) for recovery
+    okey_to_node = {}
+    for node, shard in src.shards.items():
+        for k in shard["okey"].tolist():
+            okey_to_node[k] = node
+    lost = np.sort(src.shards[7]["okey"]).copy()
+    fail_node(src, 7)
+    fail_node(tgt, 7)
+    placement = lambda r: np.array([okey_to_node[k]
+                                    for k in r["okey"].tolist()])
+    rec = recover_source_shard(reg, 7, placement)
+    assert np.array_equal(np.sort(rec["okey"]), lost)
+
+
+def test_conflicting_objects_follow_nk_law():
+    """E[#conflicts] = N/K (paper §7); check within 3 sigma for binomial."""
+    n, k = 100_000, 10
+    recs = _records(n, seed=5)
+    src = random_dispatch("t", recs, k, seed=6)
+    scheme = PartitionScheme("okey", lambda r: r["okey"], 1000, k)
+    tgt = partition_set(src, "t_pt", scheme)
+    reg = register_replica(src, tgt, scheme)
+    exp = expected_conflicts(n, k)
+    sigma = (n * (1 / k) * (1 - 1 / k)) ** 0.5
+    assert abs(reg.num_conflicting - exp) < 4 * sigma
+
+
+def test_conflicts_decline_with_more_nodes():
+    n = 30_000
+    recs = _records(n, seed=7)
+    counts = []
+    for k in (5, 10, 20):
+        src = random_dispatch("t", recs, k, seed=8)
+        scheme = PartitionScheme("okey", lambda r: r["okey"], 200, k)
+        tgt = partition_set(src, f"t_{k}", scheme)
+        counts.append(register_replica(src, tgt, scheme).num_conflicting)
+    assert counts[0] > counts[1] > counts[2]
+
+
+def test_statistics_best_replica_selection():
+    stats = StatisticsDB()
+    recs = _records(1000)
+    src = random_dispatch("lineitem", recs, 4)
+    stats.register_replica("lineitem", __import__(
+        "repro.core.statistics", fromlist=["ReplicaInfo"]).ReplicaInfo(
+        set_name="lineitem", partition_key=None, num_partitions=4,
+        num_nodes=4))
+    for key in ("okey", "pkey"):
+        scheme = PartitionScheme(key, lambda r, k=key: r[k], 16, 4)
+        tgt = partition_set(src, f"lineitem_{key}", scheme)
+        register_replica(src, tgt, scheme, stats, "lineitem")
+    best = stats.best_replica("lineitem", "pkey")
+    assert best.set_name == "lineitem_pkey"
+    fallback = stats.best_replica("lineitem", "no_such_key")
+    assert fallback.partition_key is None  # source set
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 12), st.integers(100, 3000))
+def test_property_recovery_any_node(k, n):
+    recs = _records(n, seed=n)
+    src = random_dispatch("t", recs, k, seed=k)
+    scheme = PartitionScheme("okey", lambda r: r["okey"], 4 * k, k)
+    tgt = partition_set(src, "t_pt", scheme)
+    reg = register_replica(src, tgt, scheme)
+    node = n % k
+    lost = np.sort(tgt.shards[node]["okey"]).copy()
+    fail_node(src, node)
+    fail_node(tgt, node)
+    rec = recover_target_shard(reg, node)
+    assert np.array_equal(np.sort(rec["okey"]), lost)

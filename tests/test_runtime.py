@@ -1,0 +1,69 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, watchdog, remesh."""
+import time
+
+import pytest
+
+from repro.runtime import (CollectiveWatchdog, HostMonitor, StepTimer,
+                           plan_remesh, surviving_mesh_shape)
+
+
+def test_host_monitor_detects_silence():
+    t = [0.0]
+    mon = HostMonitor([0, 1, 2], timeout=5.0, clock=lambda: t[0])
+    failures = []
+    mon.on_failure(failures.append)
+    for _ in range(3):
+        t[0] += 2.0
+        mon.heartbeat(0)
+        mon.heartbeat(1)
+        # host 2 silent
+    assert mon.check() == {2}
+    assert failures == [{2}]
+    assert mon.alive == [0, 1]
+    # dead hosts stay dead even if a late heartbeat arrives
+    mon.heartbeat(2)
+    t[0] += 1.0
+    assert mon.check() == set()
+    assert 2 in mon.dead
+
+
+def test_step_timer_flags_straggler():
+    st = StepTimer(list(range(8)), min_samples=5)
+    for _ in range(10):
+        for h in range(8):
+            st.record(h, 1.0 if h != 3 else 3.0)
+    assert st.stragglers() == [3]
+
+
+def test_step_timer_no_false_positives():
+    st = StepTimer(list(range(8)), min_samples=5)
+    for i in range(10):
+        for h in range(8):
+            st.record(h, 1.0 + 0.01 * ((h + i) % 3))
+    assert st.stragglers() == []
+
+
+def test_collective_watchdog_fires_and_cancels():
+    fired = []
+    with CollectiveWatchdog(0.05, lambda: fired.append(1)):
+        time.sleep(0.15)
+    assert fired == [1]
+    fired2 = []
+    with CollectiveWatchdog(5.0, lambda: fired2.append(1)):
+        pass
+    time.sleep(0.05)
+    assert fired2 == []
+
+
+def test_surviving_mesh_shapes():
+    assert surviving_mesh_shape(256) == (16, 16)
+    assert surviving_mesh_shape(240) == (15, 16)
+    assert surviving_mesh_shape(15) == (1, 8)
+    assert surviving_mesh_shape(1) == (1, 1)
+
+
+def test_plan_remesh():
+    plan = plan_remesh(64, [5], chips_per_host=4)
+    assert plan["alive_hosts"] == 63
+    assert plan["mesh_shape"][0] * plan["mesh_shape"][1] <= 63 * 4
+    assert plan["redispatch_shards"] == [5]

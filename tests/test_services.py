@@ -1,0 +1,158 @@
+"""Services (paper §8): sequential r/w, shuffle, hash aggregation, join."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BufferPool, DurabilityType, HashService,
+                        SequentialWriter, ShuffleService, get_page_iterators,
+                        join_service, read_all)
+from repro.core.attributes import AttributeSet, ReadingPattern, WritingPattern
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def test_sequential_roundtrip_structured():
+    pool = BufferPool(1 << 20)
+    ls = pool.create_set("d", 1 << 14)
+    w = SequentialWriter(pool, ls, PAIR)
+    recs = np.zeros(3000, PAIR)
+    recs["key"] = np.arange(3000)
+    w.append_batch(recs)
+    w.close()
+    back = read_all(pool, ls, PAIR)
+    assert np.array_equal(back["key"], recs["key"])
+
+
+def test_sequential_roundtrip_subarray_dtype():
+    pool = BufferPool(1 << 20)
+    ls = pool.create_set("tok", 1 << 14)
+    dt = np.dtype((np.int32, (32,)))
+    w = SequentialWriter(pool, ls, dt)
+    rows = np.arange(64 * 32, dtype=np.int32).reshape(64, 32)
+    w.append_batch(rows)
+    w.close()
+    back = read_all(pool, ls, dt)
+    assert np.array_equal(back, rows)
+
+
+def test_sequential_spill_and_reload():
+    """Dataset 4x the pool: MRU paging spills, reads restore transparently."""
+    pool = BufferPool(256 * 1024)
+    ls = pool.create_set("big", 16 * 1024)
+    w = SequentialWriter(pool, ls, PAIR)
+    recs = np.zeros(60_000, PAIR)
+    recs["key"] = np.arange(60_000)
+    w.append_batch(recs)
+    w.close()
+    assert pool.stats["evictions"] > 0
+    back = read_all(pool, ls, PAIR)
+    assert np.array_equal(np.sort(back["key"]), np.arange(60_000))
+
+
+def test_multi_worker_iterators_cover_all_pages():
+    pool = BufferPool(1 << 20)
+    ls = pool.create_set("d", 4096)
+    w = SequentialWriter(pool, ls, PAIR)
+    recs = np.zeros(2000, PAIR)
+    recs["key"] = np.arange(2000)
+    w.append_batch(recs)
+    w.close()
+    its = get_page_iterators(pool, ls, PAIR, 3)
+    seen = np.concatenate([r["key"].copy() for it in its for r in it])
+    assert np.array_equal(np.sort(seen), np.arange(2000))
+
+
+def test_shuffle_partitions_disjoint_and_complete():
+    pool = BufferPool(8 << 20)
+    sh = ShuffleService(pool, "s", 8, PAIR, page_size=1 << 18)
+    rng = np.random.default_rng(0)
+    data = np.zeros(30_000, PAIR)
+    data["key"] = rng.integers(0, 1 << 40, 30_000)
+    for wid in range(4):
+        sh.shuffle_batch(wid, data[wid::4], key_fn=lambda r: r["key"])
+    sh.finish_writes()
+    parts = [sh.read_partition(p) for p in range(8)]
+    allk = np.concatenate([p["key"] for p in parts])
+    assert len(allk) == 30_000
+    assert np.array_equal(np.sort(allk), np.sort(data["key"]))
+    for p in range(8):
+        assert (parts[p]["key"] % 8 == p).all()
+
+
+def test_shuffle_spills_under_pressure():
+    pool = BufferPool(1 << 20)  # small pool forces spill
+    sh = ShuffleService(pool, "s", 4, PAIR, page_size=1 << 17)
+    data = np.zeros(80_000, PAIR)
+    data["key"] = np.arange(80_000)
+    sh.shuffle_batch(0, data, key_fn=lambda r: r["key"])
+    sh.finish_writes()
+    total = sum(len(sh.read_partition(p)) for p in range(4))
+    assert total == 80_000
+    assert pool.stats["spill_bytes"] > 0
+
+
+def test_hash_aggregation_matches_oracle():
+    pool = BufferPool(4 << 20)
+    hs = HashService(pool, "agg", num_root_partitions=8, page_size=1 << 16)
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 3000, 50_000)
+    vals = rng.random(50_000)
+    hs.insert(keys, vals)
+    k, v = hs.finalize()
+    uk = np.unique(keys)
+    oracle = {kk: 0.0 for kk in uk.tolist()}
+    for kk, vv in zip(keys.tolist(), vals.tolist()):
+        oracle[kk] += vv
+    assert np.array_equal(k, uk)
+    np.testing.assert_allclose(v, [oracle[kk] for kk in k.tolist()],
+                               rtol=1e-9)
+
+
+def test_hash_aggregation_spill_reaggregate():
+    """Pool too small for the table: sealed partials spill, finalize
+    re-aggregates (paper §8 hash service)."""
+    pool = BufferPool(512 * 1024)
+    hs = HashService(pool, "agg", num_root_partitions=4, page_size=1 << 15)
+    keys = np.arange(200_000) % 50_000
+    vals = np.ones(200_000)
+    hs.insert(keys, vals)
+    k, v = hs.finalize()
+    assert len(k) == 50_000
+    np.testing.assert_allclose(v, 4.0)
+    assert pool.stats["spill_bytes"] > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 50), st.floats(-10, 10)),
+                min_size=1, max_size=500))
+def test_hash_property_vs_dict(pairs):
+    pool = BufferPool(1 << 20)
+    hs = HashService(pool, "agg", num_root_partitions=2, page_size=1 << 14)
+    keys = np.array([p[0] for p in pairs], np.int64)
+    vals = np.array([p[1] for p in pairs], np.float64)
+    hs.insert(keys, vals)
+    k, v = hs.finalize()
+    oracle = {}
+    for kk, vv in pairs:
+        oracle[kk] = oracle.get(kk, 0.0) + vv
+    assert set(k.tolist()) == set(oracle)
+    for kk, vv in zip(k.tolist(), v.tolist()):
+        assert abs(vv - oracle[kk]) < 1e-6 * max(1.0, abs(oracle[kk])) + 1e-9
+
+
+def test_join_service_counts():
+    pool = BufferPool(1 << 20)
+    build = pool.create_set("build", 8192)
+    probe = pool.create_set("probe", 8192)
+    wb = SequentialWriter(pool, build, PAIR)
+    recs = np.zeros(100, PAIR)
+    recs["key"] = np.arange(100)
+    wb.append_batch(recs)
+    wb.close()
+    wp = SequentialWriter(pool, probe, PAIR)
+    precs = np.zeros(300, PAIR)
+    precs["key"] = np.arange(300) % 150  # half match
+    wp.append_batch(precs)
+    wp.close()
+    matches = join_service(pool, build, probe, PAIR, PAIR, "key", "key")
+    assert matches[0] == 200  # keys 0..99 appear twice each in probe

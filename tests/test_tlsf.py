@@ -1,0 +1,73 @@
+"""TLSF allocator: unit + property tests (paper §5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tlsf import MIN_BLOCK, TLSF
+
+
+def test_alloc_free_roundtrip():
+    t = TLSF(1 << 16)
+    offs = [t.alloc(100) for _ in range(10)]
+    assert all(o is not None for o in offs)
+    assert len(set(offs)) == 10
+    for o in offs:
+        t.free(o)
+    t.check_invariants()
+    assert t.free_bytes == 1 << 16
+
+
+def test_exhaustion_returns_none():
+    t = TLSF(1 << 12)
+    offs = []
+    while (o := t.alloc(256)) is not None:
+        offs.append(o)
+    assert t.alloc(256) is None
+    t.free(offs[0])
+    assert t.alloc(256) is not None
+
+
+def test_coalescing():
+    t = TLSF(1 << 14)
+    a = t.alloc(1 << 12)
+    b = t.alloc(1 << 12)
+    c = t.alloc(1 << 12)
+    t.free(a)
+    t.free(c)
+    t.free(b)  # should coalesce into one block covering everything
+    t.check_invariants()
+    assert t.alloc(int(0.9 * (1 << 14))) is not None
+
+
+def test_double_free_raises():
+    t = TLSF(1 << 12)
+    o = t.alloc(128)
+    t.free(o)
+    with pytest.raises(ValueError):
+        t.free(o)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(64, 4096)),
+                min_size=1, max_size=200))
+def test_property_no_overlap_and_invariants(ops):
+    """Random alloc/free interleavings: live blocks never overlap; the arena
+    stays fully tiled and adjacent free blocks always coalesce."""
+    t = TLSF(1 << 16)
+    live = {}  # offset -> size
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            off = t.alloc(size)
+            if off is not None:
+                assert off not in live
+                live[off] = t.block_size(off)
+        else:
+            off = sorted(live)[len(live) // 2]
+            t.free(off)
+            del live[off]
+        # no overlap
+        spans = sorted((o, o + s) for o, s in live.items())
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0
+        t.check_invariants()
+    assert t.allocated_bytes == sum(live.values())
