@@ -74,6 +74,34 @@ def run() -> None:
     ts = timeit(shuffled)
     record("replicas/join_copartitioned", tc * 1e6, "")
     record("replicas/join_shuffle", ts * 1e6, f"speedup={ts/tc:.2f}x")
+    run_cluster()
+
+
+def run_cluster(n: int = 200_000) -> None:
+    """Replication cost through real pools: write amplification and network
+    bytes of chain-replicating every shard at factor 0/1/2 on a 4-node
+    cluster (factor >= 1 is what buys kill-one-node recovery)."""
+    from repro.runtime.cluster import Cluster
+
+    rng = np.random.default_rng(2)
+    recs = np.zeros(n, LINEITEM)
+    recs["okey"] = rng.integers(0, n, n)
+    recs["pkey"] = rng.integers(0, 20_000, n)
+    recs["qty"] = rng.random(n)
+    for factor in (0, 1, 2):
+        last = []
+
+        def write():
+            cluster = Cluster(4, node_capacity=64 << 20, page_size=1 << 18,
+                              replication_factor=factor)
+            cluster.create_sharded_set("li", recs,
+                                       key_fn=lambda r: r["okey"])
+            last.append(cluster)
+
+        t = timeit(write)
+        record(f"replicas/cluster_write_rf{factor}", t * 1e6,
+               f"mb_per_s={recs.nbytes/t/1e6:.0f};"
+               f"net_mb={last[-1].net_bytes/1e6:.2f}")
 
 
 if __name__ == "__main__":

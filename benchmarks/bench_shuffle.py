@@ -1,17 +1,21 @@
 """Paper Table 4: shuffle write/read — Pangea shuffle service (one locality
 set per partition, virtual shuffle buffers) vs the Spark-like baseline
-(numWorkers × numPartitions separate spill buffers, concatenated at read)."""
+(numWorkers × numPartitions separate spill buffers, concatenated at read),
+plus the distributed shuffle through a real N-node cluster of buffer pools
+(map-side job-data pages, reducer pull over the node-to-node path)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import BufferPool
 from repro.core.services import ShuffleService
+from repro.runtime.cluster import Cluster, ClusterShuffle
 
 from .common import record, timeit
 
 REC = np.dtype([("key", np.int64), ("payload", np.uint8, (10,))])
 WORKERS, PARTS = 4, 4
+NODES = 4
 
 
 def _pangea(n: int) -> None:
@@ -57,6 +61,25 @@ def _sparklike(n: int) -> None:
             part["payload"].sum()
 
 
+def _cluster_shuffle(n: int) -> Cluster:
+    """End-to-end distributed shuffle on a real 4-node cluster: shard the
+    records, map-side partition into each node's local pool, reducers pull
+    every partition across the transfer path."""
+    cluster = Cluster(NODES, node_capacity=64 << 20, page_size=1 << 18)
+    rng = np.random.default_rng(0)
+    recs = np.zeros(n, REC)
+    recs["key"] = rng.integers(0, 1 << 40, n)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=NODES, dtype=REC)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    for r in range(NODES):
+        part = sh.pull(r)
+        part["payload"].sum()
+        sh.release_reducer(r)
+    return cluster
+
+
 def run() -> None:
     for n in (100_000, 400_000):
         tp = timeit(lambda: _pangea(n))
@@ -65,6 +88,10 @@ def run() -> None:
                f"recs_per_s={n/tp:.0f}")
         record(f"shuffle/sparklike/n{n}", tb * 1e6,
                f"recs_per_s={n/tb:.0f};speedup={tb/tp:.2f}x")
+        last = []
+        tc = timeit(lambda: last.append(_cluster_shuffle(n)))
+        record(f"shuffle/cluster{NODES}node/n{n}", tc * 1e6,
+               f"recs_per_s={n/tc:.0f};net_mb={last[-1].net_bytes/1e6:.2f}")
 
 
 if __name__ == "__main__":

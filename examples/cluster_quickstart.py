@@ -1,0 +1,57 @@
+"""Cluster quickstart: the paper's system in ~60 lines.
+
+Builds a 4-node cluster (one unified buffer pool per node), stages a dataset
+as a sharded locality set with chain replicas, runs a distributed
+hash-aggregation (shuffle by key hash -> per-node hash service), then kills a
+node and recovers its shards from replicas with checksum verification.
+
+Run: PYTHONPATH=src python examples/cluster_quickstart.py
+"""
+import numpy as np
+
+from repro.data.pipeline import cluster_aggregate
+from repro.runtime.cluster import Cluster
+
+REC = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def main() -> None:
+    cluster = Cluster(num_nodes=4, node_capacity=32 << 20,
+                      page_size=1 << 17, replication_factor=1)
+
+    rng = np.random.default_rng(0)
+    records = np.zeros(200_000, REC)
+    records["key"] = rng.integers(0, 5_000, len(records))
+    records["val"] = rng.random(len(records))
+
+    # --- distributed dataset + aggregation ---------------------------------
+    sset = cluster.create_sharded_set("sales", records,
+                                      key_fn=lambda r: r["key"])
+    per_node = {n: info.num_records for n, info in sorted(sset.shards.items())}
+    print(f"sharded {len(records)} records across 4 pools: {per_node}")
+
+    keys, sums = cluster_aggregate(cluster, "sales_agg", records,
+                                   "key", "val")
+    print(f"group-by produced {len(keys)} groups; "
+          f"shuffle moved {cluster.net_bytes / 1e6:.2f} MB across nodes")
+
+    # --- kill a node, recover from replicas --------------------------------
+    cluster.kill_node(2)
+    try:
+        cluster.read_sharded(sset)
+    except Exception as e:
+        print(f"read with node 2 down fails as expected: {e}")
+    report = cluster.recover_node(2)
+    assert report.ok, report.checksum_failures
+    print(f"recovered node 2: {report.shards_recovered} shards, "
+          f"{report.replicas_rebuilt} replicas re-replicated, "
+          f"{report.bytes_transferred / 1e6:.2f} MB in "
+          f"{report.seconds * 1e3:.1f} ms, checksums OK")
+
+    restored = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(restored["key"]), np.sort(records["key"]))
+    print("restored dataset byte-identical to the original")
+
+
+if __name__ == "__main__":
+    main()

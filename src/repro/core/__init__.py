@@ -12,10 +12,12 @@ from .paging import PagingSystem, eviction_overhead
 from .replication import (DistributedSet, PartitionScheme, ReplicaRegistration,
                           expected_conflicts, fail_node, partition_set,
                           random_dispatch, recover_source_shard,
-                          recover_target_shard, register_replica)
+                          recover_target_shard, register_replica,
+                          replica_nodes, shard_checksum)
 from .services import (HashService, PageIterator, SequentialWriter,
-                       ShuffleService, VirtualShuffleBuffer,
-                       get_page_iterators, join_service, read_all)
+                       ShuffleService, VirtualShuffleBuffer, as_record_bytes,
+                       from_record_bytes, get_page_iterators, job_data_attrs,
+                       join_service, read_all)
 from .statistics import ReplicaInfo, StatisticsDB
 from .tlsf import TLSF
 
@@ -28,7 +30,9 @@ __all__ = [
     "ShuffleService", "SpillStore", "StatisticsDB", "TLSF",
     "VirtualShuffleBuffer", "WritingPattern", "eviction_overhead",
     "eviction_ratio", "expected_conflicts", "fail_node", "get_page_iterators",
+    "as_record_bytes", "from_record_bytes", "job_data_attrs",
     "join_service", "partition_set", "random_dispatch", "read_all",
+    "replica_nodes", "shard_checksum",
     "recover_source_shard", "recover_target_shard", "register_replica",
     "select_strategy", "spilling_cost",
 ]

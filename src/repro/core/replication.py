@@ -21,6 +21,7 @@ the paper-fidelity benchmarks.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -34,6 +35,24 @@ KeyFn = Callable[[np.ndarray], np.ndarray]  # records -> int64 keys
 def _node_of(partition_ids: np.ndarray, num_partitions: int,
              num_nodes: int) -> np.ndarray:
     return partition_ids % num_nodes
+
+
+def shard_checksum(records: np.ndarray) -> int:
+    """CRC32 over a shard's raw record bytes. Recovery re-materializes shards
+    page by page in primary order, so a byte-exact checksum match certifies
+    the rebuilt shard (cluster runtime uses this after node recovery)."""
+    return zlib.crc32(np.ascontiguousarray(records).tobytes()) & 0xFFFFFFFF
+
+
+def replica_nodes(node: int, num_nodes: int, factor: int) -> List[int]:
+    """Chain placement: the ``factor`` replica holders for ``node``'s shard are
+    the next distinct nodes in ring order — never the primary itself, so any
+    single-node loss leaves at least one copy (paper §7's separate-node rule
+    for conflicting objects, generalized to page-level shard replicas)."""
+    if factor >= num_nodes:
+        raise ValueError(f"replication factor {factor} needs more than "
+                         f"{num_nodes} nodes")
+    return [(node + 1 + r) % num_nodes for r in range(factor)]
 
 
 @dataclass
@@ -126,7 +145,7 @@ def register_replica(source: DistributedSet, target: DistributedSet,
         conflicts = recs[conflict_mask]
         total_conflicts += len(conflicts)
         if len(conflicts):
-            guard_node = (node + 1) % num_nodes  # a different node
+            guard_node = replica_nodes(node, num_nodes, 1)[0]  # a different node
             guards.setdefault(guard_node, []).append(conflicts)
     reg.conflict_guards = {n: np.concatenate(v) for n, v in guards.items()}
     reg.num_conflicting = total_conflicts

@@ -24,14 +24,23 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .attributes import AttributeSet, CurrentOperation, DurabilityType
+from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
+                         WritingPattern)
 from .buffer_pool import BufferPool, PoolExhaustedError
 from .locality_set import LocalitySet, Page
 
 _HEADER = 8  # int64 record count at page start
 
 
-def _as_record_bytes(records: np.ndarray, dtype: np.dtype) -> np.ndarray:
+def job_data_attrs() -> AttributeSet:
+    """Attribute preset for shuffle/execution job data (paper §3.1): write-back
+    (spill only under pressure), concurrent-write pattern; lifetime is ended
+    explicitly once the consuming stage has pulled the data."""
+    return AttributeSet(durability=DurabilityType.WRITE_BACK,
+                        writing=WritingPattern.CONCURRENT_WRITE)
+
+
+def as_record_bytes(records: np.ndarray, dtype: np.dtype) -> np.ndarray:
     """[N, ...] records -> [N, itemsize] uint8 rows (handles structured AND
     subarray dtypes, e.g. one token sequence per record)."""
     records = np.ascontiguousarray(records)
@@ -43,8 +52,8 @@ def _as_record_bytes(records: np.ndarray, dtype: np.dtype) -> np.ndarray:
     return raw
 
 
-def _from_record_bytes(buf: np.ndarray, dtype: np.dtype, n: int) -> np.ndarray:
-    """Inverse of _as_record_bytes: uint8 buffer -> n records of ``dtype``."""
+def from_record_bytes(buf: np.ndarray, dtype: np.dtype, n: int) -> np.ndarray:
+    """Inverse of as_record_bytes: uint8 buffer -> n records of ``dtype``."""
     raw = buf[:n * dtype.itemsize]
     if dtype.subdtype is not None:
         base, shape = dtype.subdtype
@@ -82,7 +91,7 @@ class SequentialWriter:
         self._page = None
 
     def append_batch(self, records: np.ndarray) -> None:
-        raw = _as_record_bytes(records, self.dtype)
+        raw = as_record_bytes(records, self.dtype)
         i = 0
         while i < len(raw):
             if self._page is None:
@@ -122,7 +131,7 @@ class PageIterator:
             view = self.pool.pin(page)
             try:
                 n = int(view[:_HEADER].view(np.int64)[0])
-                yield _from_record_bytes(view[_HEADER:], self.dtype, n)
+                yield from_record_bytes(view[_HEADER:], self.dtype, n)
             finally:
                 self.pool.unpin(page)
 
@@ -206,7 +215,7 @@ class VirtualShuffleBuffer:
         view[self._base:self._base + _HEADER].view(np.int64)[0] = 0
 
     def add_batch(self, records: np.ndarray) -> None:
-        raw = _as_record_bytes(records, self.dtype)
+        raw = as_record_bytes(records, self.dtype)
         i = 0
         pool = self.allocator.pool
         while i < len(raw):
@@ -282,13 +291,21 @@ class ShuffleService:
                     n = int(view[base:base + _HEADER].view(np.int64)[0])
                     if n == 0:
                         continue
-                    out.append(_from_record_bytes(
+                    out.append(from_record_bytes(
                         view[base + _HEADER:], self.dtype, n).copy())
             finally:
                 self.pool.unpin(page)
         if not out:
             return np.empty(0, dtype=self.dtype)
         return np.concatenate(out)
+
+    def release_partition(self, partition_id: int) -> None:
+        """Consumer is done with this partition: end the lifetime of its
+        job-data pages (making them the cheapest eviction victims, paper §6)
+        and drop the set, returning arena space to the pool."""
+        ls = self.partition_sets[partition_id]
+        ls.end_lifetime(self.pool.clock)
+        self.pool.drop_set(ls)
 
 
 # ---------------------------------------------------------------------------

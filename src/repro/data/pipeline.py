@@ -155,3 +155,88 @@ def register_dataset_replicas(
         target = partition_set(source, f"{name}_by_{scheme.name}", scheme)
         regs.append(register_replica(source, target, scheme, stats, name))
     return source, regs
+
+
+# ---------------------------------------------------------------------------
+# Cluster-backed pipelines (runtime/cluster.py): the same staging path, but
+# records live in N per-node buffer pools instead of one.
+# ---------------------------------------------------------------------------
+def token_record_dtype(seq_len: int) -> np.dtype:
+    """Sequence records routed across the cluster by their id (stable hash
+    placement regardless of content)."""
+    return np.dtype([("seq_id", np.int64), ("tokens", np.int32, (seq_len,))])
+
+
+def write_sharded_token_dataset(cluster, name: str, tokens: np.ndarray,
+                                page_size: int = 1 << 18,
+                                replication_factor: Optional[int] = None):
+    """tokens: [N, seq_len] int32 -> a ShardedSet spread over every node's
+    pool (with chain replicas when the cluster is configured for them)."""
+    n, seq_len = tokens.shape
+    recs = np.zeros(n, token_record_dtype(seq_len))
+    recs["seq_id"] = np.arange(n)
+    recs["tokens"] = tokens.astype(np.int32)
+    return cluster.create_sharded_set(
+        name, recs, key_fn=lambda r: r["seq_id"], page_size=page_size,
+        replication_factor=replication_factor)
+
+
+class DistributedBatchLoader:
+    """Batch iterator over a sharded token dataset: streams each shard
+    through its owner node's pool (sequential read service) and yields the
+    same {"tokens", "labels"} batches as the single-pool BatchLoader."""
+
+    def __init__(self, cluster, sset, batch_size: int, drop_last: bool = True):
+        self.cluster = cluster
+        self.sset = sset
+        self.batch_size = batch_size
+        self.drop_last = drop_last
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        buf: List[np.ndarray] = []
+        have = 0
+        for node_id in sorted(self.sset.shards):
+            shard = self.cluster.read_shard(self.sset, node_id)
+            if len(shard) == 0:
+                continue
+            buf.append(shard["tokens"])
+            have += len(shard)
+            while have >= self.batch_size:
+                allr = np.concatenate(buf) if len(buf) > 1 else buf[0]
+                batch, rest = (allr[:self.batch_size],
+                               allr[self.batch_size:])
+                buf = [rest] if len(rest) else []
+                have = len(rest)
+                yield self._batch(batch)
+        if have and not self.drop_last:
+            allr = np.concatenate(buf) if len(buf) > 1 else buf[0]
+            yield self._batch(allr)
+
+    @staticmethod
+    def _batch(toks: np.ndarray) -> Dict[str, np.ndarray]:
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((len(toks), 1), -100, np.int32)], axis=1)
+        return {"tokens": toks, "labels": labels}
+
+
+def cluster_aggregate(cluster, name: str, records: np.ndarray,
+                      key_field: str, val_field: str,
+                      num_reducers: Optional[int] = None,
+                      page_size: int = 1 << 18,
+                      replication_factor: Optional[int] = None,
+                      keep_dataset: bool = False):
+    """The end-to-end hash-aggregation workload (paper §9's Spark
+    comparison), driven through the cluster: stage ``records`` as a sharded
+    locality set (sequential-write service on each node), shuffle by key hash
+    to the reducers, aggregate per reducer through each local pool's hash
+    service, and merge. Returns ``(keys, summed_vals)`` sorted by key."""
+    from ..runtime.cluster import cluster_hash_aggregate
+    sset = cluster.create_sharded_set(
+        name, records, key_fn=lambda r: r[key_field], page_size=page_size,
+        replication_factor=replication_factor)
+    try:
+        return cluster_hash_aggregate(cluster, sset, key_field, val_field,
+                                      num_reducers=num_reducers)
+    finally:
+        if not keep_dataset:
+            cluster.drop_sharded_set(sset)

@@ -5,9 +5,24 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import combine_kernel, dispatch_kernel
 from .ref import combine_ref, dispatch_ref
+
+
+def host_dispatch_plan(partition_ids: np.ndarray, num_partitions: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side slot assignment for node-to-node shuffle transfers — the CPU
+    analogue of :func:`compute_slots`: one stable pass groups a batch by
+    destination partition. Returns ``(order, counts, offsets)`` such that
+    ``batch[order][offsets[p]:offsets[p+1]]`` is partition ``p``'s contiguous
+    slice (the runtime ``Cluster`` shuffle routes map output with this)."""
+    partition_ids = np.asarray(partition_ids)
+    order = np.argsort(partition_ids, kind="stable")
+    counts = np.bincount(partition_ids, minlength=num_partitions)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    return order, counts, offsets
 
 
 def compute_slots(expert_id: jnp.ndarray, num_experts: int,

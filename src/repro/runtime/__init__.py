@@ -1,5 +1,10 @@
 from .watchdog import CollectiveWatchdog, HostMonitor, StepTimer
 from .elastic import plan_remesh, surviving_mesh_shape
+from .cluster import (Cluster, ClusterShuffle, DeadNodeError, RecoveryReport,
+                      ShardInfo, ShardedSet, StorageNode,
+                      cluster_hash_aggregate, dispatch_plan)
 
 __all__ = ["CollectiveWatchdog", "HostMonitor", "StepTimer", "plan_remesh",
-           "surviving_mesh_shape"]
+           "surviving_mesh_shape", "Cluster", "ClusterShuffle",
+           "DeadNodeError", "RecoveryReport", "ShardInfo", "ShardedSet",
+           "StorageNode", "cluster_hash_aggregate", "dispatch_plan"]

@@ -1,0 +1,517 @@
+"""Multi-node cluster runtime over unified buffer pools — paper §2, §7–§9.
+
+This is the layer that turns the single-node mechanisms (TLSF arena, unified
+buffer pool, data-aware paging, services) into the system the paper evaluates:
+
+* ``StorageNode`` — one storage service instance: its own ``BufferPool`` +
+  spill store, holding the node's locality sets.
+* ``Cluster`` — N nodes plus the manager-side catalog (``StatisticsDB``).
+  Sharded locality sets are routed across nodes by hash partition
+  (``PartitionScheme``); each shard is also chain-replicated to
+  ``replication_factor`` other nodes through the node-to-node transfer path,
+  with CRC32 checksums recorded in the catalog.
+* ``ClusterShuffle`` — the distributed shuffle service: map-side output is
+  written as job-data pages into each mapper's *local* pool (one virtual
+  shuffle buffer per reducer, paper §8); reducers pull their partition from
+  every map node over the transfer path, then the map output's lifetime is
+  ended so its pages become free eviction victims (paper §6).
+* ``cluster_hash_aggregate`` — the paper §9 Spark-comparison workload:
+  shuffle-by-key-hash to R reducers, per-reducer ``HashService`` aggregation
+  in the local pool, disjoint merge at the driver.
+* Replica-based recovery — ``kill_node`` loses a pool wholesale;
+  ``recover_node`` re-materializes the node's primary shards from surviving
+  replicas and re-replicates what the node hosted for others, verifying every
+  rebuilt shard against its cataloged checksum.
+
+Everything moves through buffer pools: a "network transfer" is a paged read
+from the source pool streamed into a sequential write on the destination pool,
+with byte accounting standing in for the wire.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.attributes import AttributeSet
+from ..core.buffer_pool import BufferPool, SpillStore
+from ..core.locality_set import LocalitySet
+from ..core.replication import (PartitionScheme, replica_nodes,
+                                shard_checksum)
+from ..core.services import (HashService, PageIterator, SequentialWriter,
+                             ShuffleService, job_data_attrs, read_all)
+from ..core.statistics import ReplicaInfo, StatisticsDB
+
+
+def _host_dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
+    """Host-side analogue of ``kernels/shuffle_dispatch``'s slot assignment;
+    the device kernel version is preferred when importable."""
+    order = np.argsort(partition_ids, kind="stable")
+    counts = np.bincount(partition_ids, minlength=num_partitions)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    return order, counts, offsets
+
+
+_dispatch_plan_impl = None
+
+
+def dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
+    """Group a batch by destination partition in one stable pass. Mirrors the
+    MoE shuffle-dispatch slot assignment (``kernels/shuffle_dispatch``), whose
+    host-side helper is used when available; records land contiguously per
+    partition: ``order[offsets[p]:offsets[p+1]]`` are partition ``p``'s rows."""
+    global _dispatch_plan_impl
+    if _dispatch_plan_impl is None:
+        # resolve once: a failed import is not cached by Python, so retrying
+        # per batch would re-run the whole failing jax import each call
+        try:
+            from ..kernels.shuffle_dispatch.ops import host_dispatch_plan
+            _dispatch_plan_impl = host_dispatch_plan
+        except ImportError:  # kernels need jax; the cluster runtime must not
+            _dispatch_plan_impl = _host_dispatch_plan
+    return _dispatch_plan_impl(partition_ids, num_partitions)
+
+
+class DeadNodeError(RuntimeError):
+    """Raised when touching a node that has been killed and not recovered."""
+
+
+class StorageNode:
+    """One Pangea storage service: a unified buffer pool plus its spill store
+    (paper §2 — every node runs one storage process owning all its data)."""
+
+    def __init__(self, node_id: int, capacity: int,
+                 spill_dir: Optional[str] = None):
+        self.node_id = node_id
+        self.capacity = capacity
+        self.pool = BufferPool(capacity, SpillStore(spill_dir))
+        self.alive = True
+
+    def write_records(self, set_name: str, records: np.ndarray,
+                      dtype: np.dtype, page_size: int,
+                      attrs: Optional[AttributeSet] = None) -> LocalitySet:
+        ls = self.pool.create_set(set_name, page_size, attrs)
+        w = SequentialWriter(self.pool, ls, dtype)
+        if len(records):
+            w.append_batch(records)
+        w.close()
+        return ls
+
+    def read_records(self, set_name: str, dtype: np.dtype) -> np.ndarray:
+        return read_all(self.pool, self.pool.get_set(set_name), dtype)
+
+
+@dataclass
+class ShardInfo:
+    """Catalog entry for one primary shard of a sharded locality set."""
+
+    node_id: int
+    set_name: str
+    num_records: int
+    checksum: int
+    replicas: List[Tuple[int, str]] = field(default_factory=list)
+
+
+class ShardedSet:
+    """A logical dataset hash-partitioned across the cluster's pools.
+
+    ``shards[n]`` describes node ``n``'s primary shard; replicas live on the
+    chain successors. All placement follows ``scheme`` (fib-hash of the key,
+    partitions folded onto nodes), so any node can compute routing locally.
+    """
+
+    def __init__(self, name: str, dtype: np.dtype, scheme: PartitionScheme,
+                 page_size: int, replication_factor: int):
+        self.name = name
+        self.dtype = np.dtype(dtype)
+        self.scheme = scheme
+        self.page_size = page_size
+        self.replication_factor = replication_factor
+        self.shards: Dict[int, ShardInfo] = {}
+
+    def primary_set_name(self, node_id: int) -> str:
+        return f"{self.name}/shard{node_id}"
+
+    def replica_set_name(self, owner: int, holder: int) -> str:
+        return f"{self.name}/shard{owner}/replica@{holder}"
+
+
+@dataclass
+class RecoveryReport:
+    node_id: int
+    shards_recovered: int = 0
+    replicas_rebuilt: int = 0
+    bytes_transferred: int = 0
+    checksum_failures: List[str] = field(default_factory=list)
+    seconds: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.checksum_failures
+
+
+class Cluster:
+    """N storage nodes + the manager node's catalog (paper §2 architecture).
+
+    The manager here is in-process: ``catalog`` maps sharded-set names to
+    their shard/replica/checksum metadata, and ``stats`` is the paper's
+    statistics database used by query planning (``best_replica``).
+    """
+
+    def __init__(self, num_nodes: int, node_capacity: int = 32 << 20,
+                 page_size: int = 1 << 18, replication_factor: int = 1,
+                 spill_dir: Optional[str] = None):
+        if num_nodes < 2:
+            raise ValueError("a cluster needs at least 2 nodes")
+        self.num_nodes = num_nodes
+        self.node_capacity = node_capacity
+        self.page_size = page_size
+        self.replication_factor = replication_factor
+        self._spill_dir = spill_dir
+        self.nodes: Dict[int, StorageNode] = {
+            n: StorageNode(n, node_capacity, self._node_spill_dir(n))
+            for n in range(num_nodes)
+        }
+        self.stats = StatisticsDB()
+        self.catalog: Dict[str, ShardedSet] = {}
+        self.net_bytes = 0          # bytes that crossed node boundaries
+        self.local_bytes = 0        # bytes moved pool->pool on one node
+
+    def _node_spill_dir(self, node_id: int) -> Optional[str]:
+        if self._spill_dir is None:
+            return None
+        return f"{self._spill_dir}/node{node_id}"
+
+    # -- membership -----------------------------------------------------------
+    def node(self, node_id: int) -> StorageNode:
+        node = self.nodes[node_id]
+        if not node.alive:
+            raise DeadNodeError(f"node {node_id} is down")
+        return node
+
+    def alive_node_ids(self) -> List[int]:
+        return [n for n, node in self.nodes.items() if node.alive]
+
+    def kill_node(self, node_id: int) -> None:
+        """Simulate a machine loss: the node's pool, spill store, and every
+        locality set on it are gone."""
+        node = self.nodes[node_id]
+        node.alive = False
+        node.pool = None  # drop the arena; nothing on this node survives
+
+    # -- node-to-node transfer path -------------------------------------------
+    def transfer_records(self, src_id: int, src_set: str, dst_id: int,
+                         dst_set: str, dtype: np.dtype,
+                         page_size: Optional[int] = None,
+                         attrs: Optional[AttributeSet] = None) -> int:
+        """Stream one locality set between pools page by page (the cluster's
+        "network": paged reads on the source, sequential writes on the
+        destination). Returns bytes moved; cross-node bytes are tallied as
+        network traffic, same-node as pool-local copies."""
+        src = self.node(src_id)
+        dst = self.node(dst_id)
+        dtype = np.dtype(dtype)
+        ls_src = src.pool.get_set(src_set)
+        ls_dst = dst.pool.create_set(dst_set, page_size or self.page_size,
+                                     attrs)
+        writer = SequentialWriter(dst.pool, ls_dst, dtype)
+        moved = 0
+        for recs in PageIterator(src.pool, ls_src, dtype, sorted(ls_src.pages)):
+            writer.append_batch(recs)
+            moved += recs.nbytes
+        writer.close()
+        if src_id == dst_id:
+            self.local_bytes += moved
+        else:
+            self.net_bytes += moved
+        return moved
+
+    # -- sharded locality sets ------------------------------------------------
+    def create_sharded_set(self, name: str, records: np.ndarray,
+                           key_fn: Callable[[np.ndarray], np.ndarray],
+                           partitions_per_node: int = 4,
+                           page_size: Optional[int] = None,
+                           replication_factor: Optional[int] = None,
+                           attrs_factory: Optional[Callable[[], AttributeSet]] = None,
+                           ) -> ShardedSet:
+        """Hash-partition ``records`` across every node's pool and
+        chain-replicate each shard (paper §7 applied at page level: the
+        replica IS another locality set, just on a different node). Requires
+        all nodes alive — the scheme routes over the full membership;
+        recover dead nodes first (shrinking placement to survivors is the
+        elastic-remesh follow-up in ROADMAP.md)."""
+        if name in self.catalog:
+            raise ValueError(f"sharded set {name!r} already exists")
+        factor = (self.replication_factor if replication_factor is None
+                  else replication_factor)
+        page_size = page_size or self.page_size
+        scheme = PartitionScheme(name, key_fn,
+                                 partitions_per_node * self.num_nodes,
+                                 self.num_nodes)
+        sset = ShardedSet(name, records.dtype, scheme, page_size, factor)
+        placement = scheme.node_of_records(records)
+        order, counts, offsets = dispatch_plan(placement, self.num_nodes)
+        routed = records[order]
+        for n in range(self.num_nodes):
+            shard = routed[offsets[n]:offsets[n + 1]]
+            attrs = attrs_factory() if attrs_factory else None
+            self.node(n).write_records(sset.primary_set_name(n), shard,
+                                       sset.dtype, page_size, attrs)
+            info = ShardInfo(node_id=n, set_name=sset.primary_set_name(n),
+                             num_records=len(shard),
+                             checksum=shard_checksum(shard))
+            for holder in replica_nodes(n, self.num_nodes, factor):
+                rep_name = sset.replica_set_name(n, holder)
+                self.transfer_records(n, info.set_name, holder, rep_name,
+                                      sset.dtype, page_size)
+                info.replicas.append((holder, rep_name))
+            sset.shards[n] = info
+        self.catalog[name] = sset
+        self.stats.register_replica(name, ReplicaInfo(
+            set_name=name, partition_key=scheme.name,
+            num_partitions=scheme.num_partitions, num_nodes=self.num_nodes,
+            page_size=page_size, extra={"replication_factor": factor}))
+        return sset
+
+    def read_shard(self, sset: ShardedSet, node_id: int) -> np.ndarray:
+        return self.node(node_id).read_records(
+            sset.primary_set_name(node_id), sset.dtype)
+
+    def read_sharded(self, sset: ShardedSet) -> np.ndarray:
+        """Gather every primary shard (raises DeadNodeError if an owner is
+        down and unrecovered — exactly what recovery exists to prevent)."""
+        parts = [self.read_shard(sset, n) for n in sorted(sset.shards)]
+        return np.concatenate(parts) if parts else np.empty(0, sset.dtype)
+
+    def drop_sharded_set(self, sset: ShardedSet) -> None:
+        for n, info in sset.shards.items():
+            node = self.nodes[n]
+            if node.alive and info.set_name in node.pool.paging.sets:
+                node.pool.drop_set(node.pool.get_set(info.set_name))
+            for holder, rep_name in info.replicas:
+                hnode = self.nodes[holder]
+                if hnode.alive and rep_name in hnode.pool.paging.sets:
+                    hnode.pool.drop_set(hnode.pool.get_set(rep_name))
+        self.catalog.pop(sset.name, None)
+
+    # -- replica-based recovery (paper §7) ------------------------------------
+    def recover_node(self, node_id: int) -> RecoveryReport:
+        """Bring a fresh node up under the failed node's identity and rebuild
+        its state through the buffer pools:
+
+        1. every primary shard it owned is re-materialized from a surviving
+           chain replica and verified against the cataloged CRC32;
+        2. every replica it held for other owners is re-replicated from the
+           (alive) primary, restoring the replication factor.
+        """
+        t0 = time.perf_counter()
+        report = RecoveryReport(node_id=node_id)
+        node = self.nodes[node_id]
+        if node.alive:
+            raise ValueError(f"node {node_id} is alive; nothing to recover")
+        node.pool = BufferPool(node.capacity,
+                               SpillStore(self._node_spill_dir(node_id)))
+        node.alive = True
+        for sset in self.catalog.values():
+            info = sset.shards.get(node_id)
+            if info is not None:
+                source = next(
+                    ((holder, rep) for holder, rep in info.replicas
+                     if self.nodes[holder].alive), None)
+                if source is None:
+                    report.checksum_failures.append(
+                        f"{sset.name}: no surviving replica of shard "
+                        f"{node_id}")
+                else:
+                    holder, rep_name = source
+                    report.bytes_transferred += self.transfer_records(
+                        holder, rep_name, node_id, info.set_name, sset.dtype,
+                        sset.page_size)
+                    rebuilt = self.read_shard(sset, node_id)
+                    if shard_checksum(rebuilt) != info.checksum:
+                        report.checksum_failures.append(
+                            f"{sset.name}: checksum mismatch on shard "
+                            f"{node_id}")
+                    report.shards_recovered += 1
+            # replicas this node held for other owners
+            for owner, oinfo in sset.shards.items():
+                if owner == node_id:
+                    continue
+                for holder, rep_name in oinfo.replicas:
+                    if holder != node_id:
+                        continue
+                    report.bytes_transferred += self.transfer_records(
+                        owner, oinfo.set_name, node_id, rep_name, sset.dtype,
+                        sset.page_size)
+                    rebuilt = self.nodes[node_id].read_records(rep_name,
+                                                               sset.dtype)
+                    if shard_checksum(rebuilt) != oinfo.checksum:
+                        report.checksum_failures.append(
+                            f"{sset.name}: checksum mismatch on replica of "
+                            f"shard {owner} at {node_id}")
+                    report.replicas_rebuilt += 1
+        report.seconds = time.perf_counter() - t0
+        return report
+
+    # -- accounting -----------------------------------------------------------
+    def memory_report(self) -> Dict[int, Dict[str, Dict[str, int]]]:
+        return {n: node.pool.memory_report()
+                for n, node in self.nodes.items() if node.alive}
+
+
+# ---------------------------------------------------------------------------
+# Distributed shuffle (paper §8 across nodes)
+# ---------------------------------------------------------------------------
+class ClusterShuffle:
+    """Map-side: each node's ``ShuffleService`` writes one virtual shuffle
+    buffer per *global* reducer into the node-local pool (concurrent-write
+    job data). Reduce-side: reducer ``r`` (hosted on node ``r % N``) pulls
+    partition ``r`` from every map node through the transfer path, after
+    which the map output's lifetime is ended and its pages dropped."""
+
+    def __init__(self, cluster: Cluster, name: str, num_reducers: int,
+                 dtype: np.dtype, page_size: Optional[int] = None):
+        self.cluster = cluster
+        self.name = name
+        self.num_reducers = num_reducers
+        self.dtype = np.dtype(dtype)
+        self.page_size = page_size or cluster.page_size
+        self._services: Dict[int, ShuffleService] = {}
+        self._pulled: Dict[int, str] = {}  # reducer -> reduce-set name
+
+    def reducer_node(self, reducer: int) -> int:
+        return reducer % self.cluster.num_nodes
+
+    def _service(self, node_id: int) -> ShuffleService:
+        if node_id not in self._services:
+            self._services[node_id] = ShuffleService(
+                self.cluster.node(node_id).pool,
+                f"{self.name}/map{node_id}", self.num_reducers, self.dtype,
+                page_size=self.page_size,
+                attrs_factory=job_data_attrs)
+        return self._services[node_id]
+
+    def partition_of_keys(self, keys: np.ndarray) -> np.ndarray:
+        # deliberately NOT the storage-placement hash (PartitionScheme's
+        # golden-ratio multiplier): reusing it
+        # would silently co-locate every record with its reducer and the
+        # shuffle would never exercise the transfer path. Locality-aware
+        # reducer placement is an explicit optimization (see ROADMAP), not a
+        # hash collision.
+        h = keys.astype(np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)
+        h ^= h >> np.uint64(29)
+        return (h % np.uint64(self.num_reducers)).astype(np.int64)
+
+    def map_batch(self, node_id: int, records: np.ndarray,
+                  key_fn: Callable[[np.ndarray], np.ndarray]) -> None:
+        """Partition ``records`` on node ``node_id`` into its local virtual
+        shuffle buffers, one contiguous slice per reducer (dispatch plan)."""
+        if len(records) == 0:
+            return
+        parts = self.partition_of_keys(key_fn(records))
+        order, counts, offsets = dispatch_plan(parts, self.num_reducers)
+        routed = records[order]
+        svc = self._service(node_id)
+        for r in range(self.num_reducers):
+            chunk = routed[offsets[r]:offsets[r + 1]]
+            if len(chunk):
+                svc.get_buffer(node_id, r).add_batch(chunk)
+
+    def map_sharded(self, sset: ShardedSet,
+                    key_fn: Callable[[np.ndarray], np.ndarray],
+                    batch: int = 65536) -> None:
+        """Run the map side over every shard of a sharded set, reading
+        through each owner's pool (sequential read service)."""
+        for n in sorted(sset.shards):
+            shard = self.cluster.read_shard(sset, n)
+            for i in range(0, len(shard), batch):
+                self.map_batch(n, shard[i:i + batch], key_fn)
+
+    def finish_maps(self) -> None:
+        for svc in self._services.values():
+            svc.finish_writes()
+
+    def pull(self, reducer: int) -> np.ndarray:
+        """Reduce-side fetch: gather partition ``reducer`` from every map
+        node into the reducer node's pool, then release the map-side pages
+        (lifetime ended — paper §6's cheapest victims)."""
+        dst = self.reducer_node(reducer)
+        reduce_set = f"{self.name}/reduce{reducer}"
+        dst_pool = self.cluster.node(dst).pool
+        ls = dst_pool.create_set(reduce_set, self.page_size, job_data_attrs())
+        writer = SequentialWriter(dst_pool, ls, self.dtype)
+        for node_id, svc in sorted(self._services.items()):
+            part = svc.read_partition(reducer)
+            if len(part):
+                writer.append_batch(part)
+                if node_id == dst:
+                    self.cluster.local_bytes += part.nbytes
+                else:
+                    self.cluster.net_bytes += part.nbytes
+            svc.release_partition(reducer)
+        writer.close()
+        self._pulled[reducer] = reduce_set
+        return self.cluster.node(dst).read_records(reduce_set, self.dtype)
+
+    def release_reducer(self, reducer: int) -> None:
+        """Drop a pulled reduce partition once the reducer has consumed it."""
+        name = self._pulled.pop(reducer, None)
+        if name is None:
+            return
+        pool = self.cluster.node(self.reducer_node(reducer)).pool
+        if name in pool.paging.sets:
+            ls = pool.get_set(name)
+            ls.end_lifetime(pool.clock)
+            pool.drop_set(ls)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end hash aggregation (paper §9's Spark comparison)
+# ---------------------------------------------------------------------------
+def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
+                           key_field: str, val_field: str,
+                           num_reducers: Optional[int] = None,
+                           num_root_partitions: int = 4,
+                           hash_page_size: int = 1 << 16,
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """SELECT key, SUM(val) GROUP BY key over a sharded set: map-side shuffle
+    by key hash, per-reducer HashService aggregation in the local pool,
+    disjoint merge. Reducer outputs are disjoint by construction (keys are
+    routed by hash), so the merge is a concatenate + sort."""
+    num_reducers = num_reducers or cluster.num_nodes
+    pair = HashService.PAIR_DTYPE
+    sh = ClusterShuffle(cluster, f"{sset.name}.agg", num_reducers, pair)
+
+    def to_pairs(records: np.ndarray) -> np.ndarray:
+        out = np.empty(len(records), pair)
+        out["key"] = records[key_field]
+        out["val"] = records[val_field]
+        return out
+
+    for n in sorted(sset.shards):
+        shard = cluster.read_shard(sset, n)
+        sh.map_batch(n, to_pairs(shard), key_fn=lambda p: p["key"])
+    sh.finish_maps()
+
+    keys_out: List[np.ndarray] = []
+    vals_out: List[np.ndarray] = []
+    for r in range(num_reducers):
+        node = cluster.node(sh.reducer_node(r))
+        pulled = sh.pull(r)
+        hs = HashService(node.pool, f"{sset.name}.agg/hash{r}",
+                         num_root_partitions=num_root_partitions,
+                         page_size=hash_page_size)
+        if len(pulled):
+            hs.insert(pulled["key"], pulled["val"])
+        k, v = hs.finalize()
+        hs.close()
+        node.pool.drop_set(hs.ls)
+        sh.release_reducer(r)
+        keys_out.append(k)
+        vals_out.append(v)
+    keys = np.concatenate(keys_out)
+    vals = np.concatenate(vals_out)
+    order = np.argsort(keys)
+    return keys[order], vals[order]

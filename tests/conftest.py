@@ -1,0 +1,13 @@
+"""Suite-wide setup: make `hypothesis` importable even when not installed.
+
+Must run before test modules are collected, which conftest import order
+guarantees. With the real package present this is a no-op.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import install
+
+HYPOTHESIS_SHIMMED = install()

@@ -1,0 +1,242 @@
+"""Cluster runtime: sharded sets, distributed shuffle, replica recovery.
+
+The ISSUE-1 acceptance scenario: a 4-node cluster where every byte moves
+through per-node unified buffer pools — shuffle, hash aggregation, and
+kill-one-node recovery with checksum verification.
+"""
+import numpy as np
+import pytest
+
+from repro.core import shard_checksum
+from repro.data.pipeline import (DistributedBatchLoader, cluster_aggregate,
+                                 write_sharded_token_dataset)
+from repro.runtime.cluster import (Cluster, ClusterShuffle, DeadNodeError,
+                                   cluster_hash_aggregate, dispatch_plan)
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def _pairs(n, key_range, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, key_range, n)
+    recs["val"] = rng.random(n)
+    return recs
+
+
+def _cluster(replication_factor=1, **kw):
+    kw.setdefault("node_capacity", 16 << 20)
+    kw.setdefault("page_size", 1 << 16)
+    return Cluster(4, replication_factor=replication_factor, **kw)
+
+
+# -- sharded locality sets ---------------------------------------------------
+def test_sharded_set_partitions_by_key_hash():
+    cluster = _cluster()
+    recs = _pairs(20_000, 1000)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    total = 0
+    for n, info in sset.shards.items():
+        shard = cluster.read_shard(sset, n)
+        assert len(shard) == info.num_records
+        total += len(shard)
+        # placement follows the scheme: every record hashes to its node
+        if len(shard):
+            assert (sset.scheme.node_of_records(shard) == n).all()
+        # same key -> same node, so key sets are disjoint across shards
+    assert total == 20_000
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+
+
+def test_sharded_set_replicas_live_on_other_nodes():
+    cluster = _cluster(replication_factor=2)
+    recs = _pairs(5_000, 100)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    for n, info in sset.shards.items():
+        holders = [h for h, _ in info.replicas]
+        assert len(holders) == 2
+        assert n not in holders           # never on the primary
+        assert len(set(holders)) == 2     # distinct nodes
+        for holder, rep_name in info.replicas:
+            rep = cluster.nodes[holder].read_records(rep_name, sset.dtype)
+            assert shard_checksum(rep) == info.checksum
+    assert cluster.net_bytes >= recs.nbytes * 2  # replication crossed the wire
+
+
+def test_checksums_recorded_per_shard():
+    cluster = _cluster()
+    recs = _pairs(8_000, 64)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    for n in sset.shards:
+        assert shard_checksum(cluster.read_shard(sset, n)) == \
+            sset.shards[n].checksum
+
+
+# -- distributed shuffle -----------------------------------------------------
+def test_dispatch_plan_groups_contiguously():
+    parts = np.array([2, 0, 1, 2, 0, 0, 3])
+    order, counts, offsets = dispatch_plan(parts, 4)
+    assert counts.tolist() == [3, 1, 2, 1]
+    routed = parts[order]
+    for p in range(4):
+        assert (routed[offsets[p]:offsets[p + 1]] == p).all()
+
+
+def test_cluster_shuffle_partitions_disjoint_and_complete():
+    cluster = _cluster()
+    recs = _pairs(30_000, 1 << 40, seed=3)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=8, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    pulled = [sh.pull(r) for r in range(8)]
+    allk = np.concatenate([p["key"] for p in pulled])
+    assert len(allk) == 30_000
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+    for r, part in enumerate(pulled):
+        assert (sh.partition_of_keys(part["key"]) == r).all()
+
+
+def test_cluster_shuffle_counts_network_bytes():
+    cluster = _cluster()
+    recs = _pairs(10_000, 1 << 30, seed=4)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    base_net = cluster.net_bytes
+    sh = ClusterShuffle(cluster, "sh", num_reducers=4, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    for r in range(4):
+        sh.pull(r)
+    # with 4 nodes and hash routing, ~3/4 of shuffle bytes cross nodes
+    assert cluster.net_bytes - base_net > recs.nbytes / 2
+
+
+def test_shuffle_map_output_released_after_pull():
+    cluster = _cluster()
+    recs = _pairs(5_000, 1000, seed=5)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=4, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    for r in range(4):
+        sh.pull(r)
+        sh.release_reducer(r)
+    for node in cluster.nodes.values():
+        for name in node.pool.paging.sets:
+            assert "sh/map" not in name and "sh/reduce" not in name
+
+
+# -- end-to-end hash aggregation --------------------------------------------
+def test_cluster_hash_aggregation_matches_oracle():
+    cluster = _cluster()
+    recs = _pairs(50_000, 3_000, seed=6)
+    sset = cluster.create_sharded_set("agg_src", recs,
+                                      key_fn=lambda r: r["key"])
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val",
+                                        num_reducers=8)
+    uk, inv = np.unique(recs["key"], return_inverse=True)
+    oracle = np.zeros(len(uk))
+    np.add.at(oracle, inv, recs["val"])
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+
+
+def test_pipeline_cluster_aggregate_cleans_up():
+    cluster = _cluster()
+    recs = _pairs(20_000, 500, seed=7)
+    keys, vals = cluster_aggregate(cluster, "sales", recs, "key", "val")
+    assert len(keys) == len(np.unique(recs["key"]))
+    assert "sales" not in cluster.catalog
+    for node in cluster.nodes.values():  # staged data dropped after the job
+        assert not any(n.startswith("sales/") for n in node.pool.paging.sets)
+
+
+# -- replica-based recovery --------------------------------------------------
+def test_dead_node_access_raises():
+    cluster = _cluster()
+    recs = _pairs(4_000, 100, seed=8)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(1)
+    with pytest.raises(DeadNodeError):
+        cluster.read_shard(sset, 1)
+    with pytest.raises(DeadNodeError):
+        cluster.read_sharded(sset)
+
+
+@pytest.mark.parametrize("victim", [0, 1, 2, 3])
+def test_kill_one_node_recovery_any_victim(victim):
+    cluster = _cluster()
+    recs = _pairs(25_000, 2_000, seed=victim)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    lost = np.sort(cluster.read_shard(sset, victim)["key"]).copy()
+    cluster.kill_node(victim)
+    report = cluster.recover_node(victim)
+    assert report.ok
+    assert report.shards_recovered == 1
+    assert report.bytes_transferred > 0
+    rebuilt = cluster.read_shard(sset, victim)
+    assert np.array_equal(np.sort(rebuilt["key"]), lost)
+    assert shard_checksum(rebuilt) == sset.shards[victim].checksum
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+
+
+def test_recovery_restores_replication_factor():
+    cluster = _cluster(replication_factor=2)
+    recs = _pairs(10_000, 300, seed=11)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(3)
+    report = cluster.recover_node(3)
+    assert report.ok
+    # node 3 held replicas for its two predecessors; both must be back
+    assert report.replicas_rebuilt == 2
+    for owner, info in sset.shards.items():
+        for holder, rep_name in info.replicas:
+            rep = cluster.nodes[holder].read_records(rep_name, sset.dtype)
+            assert shard_checksum(rep) == info.checksum
+
+
+def test_recovery_spans_multiple_sharded_sets():
+    cluster = _cluster()
+    a = cluster.create_sharded_set("a", _pairs(6_000, 64, seed=12),
+                                   key_fn=lambda r: r["key"])
+    b = cluster.create_sharded_set("b", _pairs(9_000, 128, seed=13),
+                                   key_fn=lambda r: r["key"])
+    cluster.kill_node(0)
+    report = cluster.recover_node(0)
+    assert report.ok and report.shards_recovered == 2
+    for sset in (a, b):
+        assert shard_checksum(cluster.read_shard(sset, 0)) == \
+            sset.shards[0].checksum
+
+
+def test_aggregation_still_correct_after_recovery():
+    cluster = _cluster()
+    recs = _pairs(30_000, 1_500, seed=14)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(2)
+    assert cluster.recover_node(2).ok
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val")
+    uk, inv = np.unique(recs["key"], return_inverse=True)
+    oracle = np.zeros(len(uk))
+    np.add.at(oracle, inv, recs["val"])
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+
+
+# -- distributed token dataset ----------------------------------------------
+def test_sharded_token_dataset_roundtrip():
+    cluster = _cluster()
+    rng = np.random.default_rng(15)
+    toks = rng.integers(0, 1000, (512, 32), dtype=np.int32)
+    sset = write_sharded_token_dataset(cluster, "tok", toks)
+    loader = DistributedBatchLoader(cluster, sset, batch_size=64)
+    batches = list(loader)
+    assert len(batches) == 8
+    seen = np.concatenate([b["tokens"] for b in batches])
+    assert np.array_equal(np.sort(seen[:, 0]), np.sort(toks[:, 0]))
+    for b in batches:
+        assert b["labels"].shape == b["tokens"].shape
+        assert (b["labels"][:, -1] == -100).all()
+        assert np.array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])

@@ -145,6 +145,89 @@ def test_pool_exhausted_when_all_pinned():
             pool.new_page(ls)
 
 
+def test_eq1_ended_always_below_alive_any_recency():
+    """Eq. 1 edge case: a lifetime-ended set sorts below EVERY alive set, no
+    matter how stale the alive set or how fresh the ended one — ended data is
+    worthless by definition, alive data never is."""
+    ps = PagingSystem()
+    stale_alive = _set("stale_alive")
+    fresh_ended = _set("fresh_ended")
+    ps.register(stale_alive, 1)
+    ps.register(fresh_ended, 1)
+    stale_alive._touch(2)            # touched ages ago
+    fresh_ended._touch(99)
+    fresh_ended.end_lifetime(99)     # ended just now
+    order = ps.priority_order(clock=100)
+    assert [n for n, _ in order] == ["fresh_ended", "stale_alive"]
+    assert order[0][1] < 0 < order[1][1]
+
+
+def test_eq1_older_ended_set_evicted_first():
+    """Among ended sets, O = -t_now/t_r: the LONGER a set has been dead, the
+    more negative its overhead, so the stalest corpse goes first."""
+    ps = PagingSystem()
+    old, recent = _set("old"), _set("recent")
+    ps.register(old, 1)
+    ps.register(recent, 1)
+    old.end_lifetime(10)
+    recent.end_lifetime(90)
+    order = ps.priority_order(clock=100)
+    assert [n for n, _ in order] == ["old", "recent"]
+
+
+def test_eq1_recency_tie_same_overhead():
+    """Equal recency AND equal cost => identical overhead; neither set is
+    preferred by Eq. 1 itself (the heap's insertion order breaks the tie)."""
+    ps = PagingSystem()
+    a, b = _set("a"), _set("b")
+    ps.register(a, 1)
+    ps.register(b, 1)
+    a._touch(40)
+    b._touch(40)
+    order = ps.priority_order(clock=100)
+    assert order[0][1] == order[1][1]
+    ended_a, ended_b = _set("ea"), _set("eb")
+    ended_a.end_lifetime(40)
+    ended_b.end_lifetime(40)
+    assert eviction_overhead(ended_a, 100) == eviction_overhead(ended_b, 100)
+
+
+def test_write_eviction_cap_rounds_up_to_one():
+    """The 10% cap under CurrentOperation=WRITE always yields >= 1 victim —
+    a writing set with few pages must still be evictable (no livelock)."""
+    pool = BufferPool(64 * 1024)
+    ls = pool.create_set("w", 1024)
+    ls.infer_from_service("sequential-write", pool.clock)
+    pages = [pool.new_page(ls) for _ in range(5)]
+    for p in pages:
+        pool.unpin(p, dirty=True)
+    ls.set_operation(CurrentOperation.WRITE, pool.clock)
+    assert len(ls.select_victims()) == 1  # int(5 * 0.1) == 0, but capped up
+
+
+def test_write_eviction_cap_under_allocation_pressure():
+    """End to end through Alg. 1: while a CurrentOperation-writing set is the
+    victim, each eviction decision only reclaims pages incrementally (10% of
+    candidates per pick), and the writer still completes once eviction frees
+    room — the cap throttles, it must not deadlock."""
+    pool = BufferPool(32 * 1024)
+    ls = pool.create_set("w", 1024)
+    ls.infer_from_service("sequential-write", pool.clock)
+    held = []
+    for _ in range(64):  # 2x the pool; forces repeated eviction while WRITE
+        page = pool.new_page(ls)
+        pool.unpin(page, dirty=True)
+        held.append(page)
+    assert ls.attrs.operation == CurrentOperation.WRITE
+    assert pool.stats["evictions"] > 0
+    resident = sum(1 for p in held if p.resident)
+    assert resident <= 32  # never exceeds capacity
+    # every eviction decision respected the cap at decision time
+    victims = ls.select_victims()
+    unpinned = len(ls.unpinned_resident_pages())
+    assert len(victims) == max(1, int(unpinned * 0.10))
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(2, 64), st.integers(2, 64))
 def test_eq1_overhead_monotone_in_recency(t1, t2):

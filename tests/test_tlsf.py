@@ -47,6 +47,53 @@ def test_double_free_raises():
         t.free(o)
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(64, 8192), min_size=1, max_size=64),
+       st.integers(0, 2 ** 32 - 1))
+def test_property_free_coalesces_to_single_maximal_block(sizes, seed):
+    """Allocate a random mix, then free everything in a random order: the
+    arena must collapse back to ONE free block spanning the whole capacity
+    (every adjacent pair coalesced), and a full-capacity alloc must succeed."""
+    cap = 1 << 17
+    t = TLSF(cap)
+    offs = [o for s in sizes if (o := t.alloc(s)) is not None]
+    rng = np.random.default_rng(seed)
+    for o in rng.permutation(np.array(offs, dtype=np.int64)).tolist():
+        t.free(o)
+    t.check_invariants()
+    assert t.allocated_bytes == 0
+    assert t.free_bytes == cap
+    assert t.block_size(0) == cap          # one maximal block at offset 0
+    assert t.alloc(cap) == 0               # and it is actually allocatable
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(64, 4096)),
+                min_size=1, max_size=120))
+def test_property_accounting_roundtrip(ops):
+    """allocated_bytes + free_bytes == capacity at every step, and matches
+    the sum of live block sizes exactly (arena accounting is preserved by
+    arbitrary allocate/free interleavings)."""
+    cap = 1 << 16
+    t = TLSF(cap)
+    live = {}
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            off = t.alloc(size)
+            if off is not None:
+                live[off] = t.block_size(off)
+                assert live[off] >= size   # rounding never shrinks a request
+        else:
+            off = sorted(live)[len(live) // 2]
+            t.free(off)
+            del live[off]
+        assert t.allocated_bytes == sum(live.values())
+        assert t.allocated_bytes + t.free_bytes == cap
+    for off in sorted(live):
+        t.free(off)
+    assert t.allocated_bytes == 0 and t.free_bytes == cap
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.tuples(st.booleans(), st.integers(64, 4096)),
                 min_size=1, max_size=200))
