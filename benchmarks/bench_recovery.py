@@ -12,7 +12,7 @@ from repro.core import (PartitionScheme, expected_conflicts, fail_node,
                         register_replica)
 from repro.runtime.cluster import Cluster
 
-from .common import record, timeit
+from .common import record, scaled, timeit
 
 REC = np.dtype([("okey", np.int64), ("pkey", np.int64)])
 N = 600_000
@@ -21,16 +21,17 @@ CLUSTER_N = 200_000
 
 def run() -> None:
     rng = np.random.default_rng(0)
-    recs = np.zeros(N, REC)
-    recs["okey"] = rng.permutation(N)
-    recs["pkey"] = rng.integers(0, 10_000, N)
+    recs = np.zeros(scaled(N), REC)
+    N_ = len(recs)
+    recs["okey"] = rng.permutation(N_)
+    recs["pkey"] = rng.integers(0, 10_000, N_)
     for nodes in (10, 20, 30):
         src = random_dispatch("lineitem", recs, nodes, seed=nodes)
         scheme = PartitionScheme("okey", lambda r: r["okey"], 10 * nodes,
                                  nodes)
         tgt = partition_set(src, "lineitem_pt", scheme)
         reg = register_replica(src, tgt, scheme)
-        ratio = reg.num_conflicting / N
+        ratio = reg.num_conflicting / N_
 
         def recover():
             import copy
@@ -41,8 +42,10 @@ def run() -> None:
 
         t = timeit(recover, repeats=3)
         record(f"recovery/nodes{nodes}", t * 1e6,
-               f"conflict_ratio={ratio:.4f};expected={1/nodes:.4f}")
+               f"conflict_ratio={ratio:.4f};expected={1/nodes:.4f}",
+               conflict_ratio=ratio, expected_ratio=1 / nodes)
     run_cluster()
+    run_degrade()
 
 
 def run_cluster() -> None:
@@ -50,9 +53,10 @@ def run_cluster() -> None:
     time is real work (paged reads on replica holders, sequential writes into
     the replacement pool, CRC verification)."""
     rng = np.random.default_rng(1)
-    recs = np.zeros(CLUSTER_N, REC)
-    recs["okey"] = rng.permutation(CLUSTER_N)
-    recs["pkey"] = rng.integers(0, 10_000, CLUSTER_N)
+    n = scaled(CLUSTER_N)
+    recs = np.zeros(n, REC)
+    recs["okey"] = rng.permutation(n)
+    recs["pkey"] = rng.integers(0, 10_000, n)
     for nodes in (4, 8):
         cluster = Cluster(nodes, node_capacity=64 << 20, page_size=1 << 18,
                           replication_factor=1)
@@ -67,7 +71,37 @@ def run_cluster() -> None:
         record(f"recovery/cluster{nodes}node", report.seconds * 1e6,
                f"shard_mb={shard_bytes/1e6:.2f};"
                f"moved_mb={report.bytes_transferred/1e6:.2f};"
-               f"mb_per_s={mbps:.0f};checksums_ok={report.ok}")
+               f"mb_per_s={mbps:.0f};checksums_ok={report.ok}",
+               recovery_s=report.seconds,
+               bytes_transferred=report.bytes_transferred,
+               checksums_ok=report.ok)
+        cluster.shutdown()
+
+
+def run_degrade() -> None:
+    """Unrecoverable loss: no replacement node, so the cluster shrinks via
+    elastic remesh and re-shards every set over the survivors."""
+    rng = np.random.default_rng(2)
+    n = scaled(CLUSTER_N)
+    recs = np.zeros(n, REC)
+    recs["okey"] = rng.permutation(n)
+    recs["pkey"] = rng.integers(0, 10_000, n)
+    for nodes in (4, 8):
+        cluster = Cluster(nodes, node_capacity=64 << 20, page_size=1 << 18,
+                          replication_factor=1)
+        cluster.create_sharded_set("lineitem", recs,
+                                   key_fn=lambda r: r["okey"])
+        cluster.kill_node(nodes // 2)
+        report = cluster.remesh_degrade()
+        assert report.ok, report.lost
+        record(f"recovery/degrade{nodes}to{nodes-1}node",
+               report.seconds * 1e6,
+               f"moved_mb={report.bytes_transferred/1e6:.2f};"
+               f"resharded={len(report.resharded)}",
+               degrade_s=report.seconds,
+               bytes_transferred=report.bytes_transferred,
+               surviving_nodes=len(report.node_ids))
+        cluster.shutdown()
 
 
 if __name__ == "__main__":

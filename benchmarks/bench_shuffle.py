@@ -1,19 +1,24 @@
 """Paper Table 4: shuffle write/read — Pangea shuffle service (one locality
 set per partition, virtual shuffle buffers) vs the Spark-like baseline
 (numWorkers × numPartitions separate spill buffers, concatenated at read),
-plus the distributed shuffle through a real N-node cluster of buffer pools
-(map-side job-data pages, reducer pull over the node-to-node path)."""
+plus the distributed shuffle through a real N-node cluster of buffer pools:
+the ``r % N`` reducer-placement baseline vs the scheduler's locality-aware
+placement (reducer on the byte-heaviest map node, overlapped async pulls),
+and the co-partitioned aggregation that elides the shuffle entirely
+(net_bytes == 0)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import BufferPool
 from repro.core.services import ShuffleService
-from repro.runtime.cluster import Cluster, ClusterShuffle
+from repro.runtime.cluster import (Cluster, ClusterShuffle,
+                                   cluster_hash_aggregate)
 
-from .common import record, timeit
+from .common import record, scaled, timeit
 
 REC = np.dtype([("key", np.int64), ("payload", np.uint8, (10,))])
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
 WORKERS, PARTS = 4, 4
 NODES = 4
 
@@ -61,37 +66,85 @@ def _sparklike(n: int) -> None:
             part["payload"].sum()
 
 
-def _cluster_shuffle(n: int) -> Cluster:
+def _cluster_shuffle(n: int, locality: bool) -> Cluster:
     """End-to-end distributed shuffle on a real 4-node cluster: shard the
     records, map-side partition into each node's local pool, reducers pull
-    every partition across the transfer path."""
-    cluster = Cluster(NODES, node_capacity=64 << 20, page_size=1 << 18)
+    every partition across the transfer path. ``locality=True`` routes the
+    pulls through the scheduler: reducer placement by map-output bytes and
+    overlapped async pulls via the transfer engine."""
+    cluster = Cluster(NODES, node_capacity=64 << 20, page_size=1 << 18,
+                      replication_factor=0)
     rng = np.random.default_rng(0)
     recs = np.zeros(n, REC)
-    recs["key"] = rng.integers(0, 1 << 40, n)
+    # zipf-skewed keys: hot keys concentrate a partition's map output on the
+    # node storing them, which is exactly the locality placement's win; the
+    # r % N baseline ships those bytes anyway
+    recs["key"] = rng.zipf(1.3, n).astype(np.int64)
     sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
     sh = ClusterShuffle(cluster, "sh", num_reducers=NODES, dtype=REC)
     sh.map_sharded(sset, key_fn=lambda r: r["key"])
     sh.finish_maps()
-    for r in range(NODES):
-        part = sh.pull(r)
-        part["payload"].sum()
-        sh.release_reducer(r)
+    if locality:
+        sh.place_reducers_locally()
+        futs = [sh.pull_async(r) for r in range(NODES)]
+        for r, fut in enumerate(futs):
+            fut.result()["payload"].sum()
+            sh.release_reducer(r)
+    else:
+        for r in range(NODES):
+            sh.pull(r)["payload"].sum()
+            sh.release_reducer(r)
+    cluster.shutdown()
+    return cluster
+
+
+def _co_partitioned_agg(n: int) -> Cluster:
+    """The §9.2.2 co-partitioned case: input staged partitioned on the
+    aggregation key, so the scheduler elides the shuffle (net_bytes == 0)."""
+    cluster = Cluster(NODES, node_capacity=64 << 20, page_size=1 << 18,
+                      replication_factor=0)
+    rng = np.random.default_rng(0)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, n // 8 or 1, n)
+    recs["val"] = rng.random(n)
+    sset = cluster.create_sharded_set("co", recs, key_fn=lambda r: r["key"],
+                                      partition_key="key")
+    cluster_hash_aggregate(cluster, sset, "key", "val")
+    cluster.shutdown()
     return cluster
 
 
 def run() -> None:
-    for n in (100_000, 400_000):
+    for n in (scaled(100_000), scaled(400_000)):
         tp = timeit(lambda: _pangea(n))
         tb = timeit(lambda: _sparklike(n))
         record(f"shuffle/pangea/n{n}", tp * 1e6,
-               f"recs_per_s={n/tp:.0f}")
+               f"recs_per_s={n/tp:.0f}", recs_per_s=n / tp)
         record(f"shuffle/sparklike/n{n}", tb * 1e6,
-               f"recs_per_s={n/tb:.0f};speedup={tb/tp:.2f}x")
+               f"recs_per_s={n/tb:.0f};speedup={tb/tp:.2f}x",
+               recs_per_s=n / tb, pangea_speedup=tb / tp)
+        runs = {}
+        for locality in (False, True):
+            last = []
+            tc = timeit(lambda: last.append(_cluster_shuffle(n, locality)))
+            runs[locality] = (tc, last[-1].net_bytes)
+            tag = "locality" if locality else "baseline"
+            record(f"shuffle/cluster{NODES}node/{tag}/n{n}", tc * 1e6,
+                   f"recs_per_s={n/tc:.0f};net_mb={last[-1].net_bytes/1e6:.2f}",
+                   recs_per_s=n / tc, net_bytes=last[-1].net_bytes,
+                   placement=tag)
+        (tb_c, net_base), (tl_c, net_loc) = runs[False], runs[True]
+        saved = net_base - net_loc
+        record(f"shuffle/cluster{NODES}node/locality_gain/n{n}", 0.0,
+               f"net_saved_mb={saved/1e6:.2f};"
+               f"net_ratio={net_loc/max(net_base, 1):.3f}",
+               net_bytes_baseline=net_base, net_bytes_locality=net_loc,
+               net_bytes_saved=saved)
         last = []
-        tc = timeit(lambda: last.append(_cluster_shuffle(n)))
-        record(f"shuffle/cluster{NODES}node/n{n}", tc * 1e6,
-               f"recs_per_s={n/tc:.0f};net_mb={last[-1].net_bytes/1e6:.2f}")
+        ta = timeit(lambda: last.append(_co_partitioned_agg(n)))
+        record(f"shuffle/cluster{NODES}node/copartitioned_agg/n{n}", ta * 1e6,
+               f"recs_per_s={n/ta:.0f};net_bytes={last[-1].net_bytes}",
+               recs_per_s=n / ta, net_bytes=last[-1].net_bytes)
 
 
 if __name__ == "__main__":

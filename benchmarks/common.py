@@ -1,14 +1,34 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers: CSV rows, structured metrics for the JSON
+artifact, wall-clock timing, and smoke mode (BENCH_SMOKE=1 shrinks problem
+sizes so CI can run the suite as a correctness smoke test)."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional
 
-ROWS: List[Tuple[str, float, str]] = []
+SCHEMA_VERSION = 1
+
+ROWS: List[dict] = []
 
 
-def record(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
+def smoke_mode() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def scaled(n: int, floor: int = 2_000) -> int:
+    """Problem size under the current mode: full, or ~1/20th in smoke mode."""
+    return max(floor, n // 20) if smoke_mode() else n
+
+
+def record(name: str, us_per_call: float, derived: str = "",
+           **metrics) -> None:
+    """Print the legacy CSV line and keep a structured row. ``metrics``
+    keyword pairs (throughput, net_bytes, seconds, ...) land in the JSON
+    artifact written by ``benchmarks/run.py``."""
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived, **metrics})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
@@ -21,3 +41,24 @@ def timeit(fn: Callable, *, repeats: int = 3) -> float:
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def write_results_json(path: str, prefixes: Optional[List[str]] = None,
+                       extra: Optional[Dict] = None) -> dict:
+    """Write recorded rows (optionally filtered by name prefix) as a
+    schema-versioned JSON document so the perf trajectory accumulates across
+    PRs."""
+    rows = [r for r in ROWS
+            if prefixes is None or any(r["name"].startswith(p)
+                                       for p in prefixes)]
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "generated_by": "benchmarks/run.py",
+        "smoke": smoke_mode(),
+        "results": rows,
+        **(extra or {}),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote {path} ({len(rows)} rows, schema v{SCHEMA_VERSION})")
+    return doc

@@ -200,8 +200,10 @@ class VirtualShuffleBuffer:
     """Per-(worker, partition) append handle writing into small pages
     (paper §3.2 code example + §8)."""
 
-    def __init__(self, allocator: _SmallPageAllocator, dtype: np.dtype):
+    def __init__(self, allocator: _SmallPageAllocator, dtype: np.dtype,
+                 on_write: Optional[Callable[[int, int], None]] = None):
         self.allocator = allocator
+        self.on_write = on_write  # (num_records, num_bytes) per add_batch
         self.dtype = np.dtype(dtype)
         self._page: Optional[Page] = None
         self._base = 0
@@ -216,6 +218,8 @@ class VirtualShuffleBuffer:
 
     def add_batch(self, records: np.ndarray) -> None:
         raw = as_record_bytes(records, self.dtype)
+        if self.on_write is not None and len(raw):
+            self.on_write(len(raw), len(raw) * self.dtype.itemsize)
         i = 0
         pool = self.allocator.pool
         while i < len(raw):
@@ -255,12 +259,21 @@ class ShuffleService:
             self.partition_sets.append(ls)
             self._allocators.append(_SmallPageAllocator(pool, ls))
         self._buffers: Dict[Tuple[int, int], VirtualShuffleBuffer] = {}
+        # per-partition write accounting: what the locality-aware scheduler
+        # reads to place reducers where their input already lives
+        self.partition_records: List[int] = [0] * num_partitions
+        self.partition_bytes: List[int] = [0] * num_partitions
+
+    def _count_write(self, partition_id: int, nrec: int, nbytes: int) -> None:
+        self.partition_records[partition_id] += nrec
+        self.partition_bytes[partition_id] += nbytes
 
     def get_buffer(self, worker_id: int, partition_id: int) -> VirtualShuffleBuffer:
         key = (worker_id, partition_id)
         if key not in self._buffers:
             self._buffers[key] = VirtualShuffleBuffer(
-                self._allocators[partition_id], self.dtype)
+                self._allocators[partition_id], self.dtype,
+                on_write=lambda nr, nb, p=partition_id: self._count_write(p, nr, nb))
         return self._buffers[key]
 
     def shuffle_batch(self, worker_id: int, records: np.ndarray,

@@ -27,9 +27,42 @@ class StatisticsDB:
         # logical dataset -> list of physical replicas
         self._replicas: Dict[str, List[ReplicaInfo]] = {}
         self._access_counts: Dict[str, int] = {}
+        # shuffle -> partition -> node -> bytes of map output held there
+        # (the locality signal behind scheduler reducer placement)
+        self._shuffle_bytes: Dict[str, Dict[int, Dict[int, int]]] = {}
 
     def register_replica(self, logical_name: str, info: ReplicaInfo) -> None:
         self._replicas.setdefault(logical_name, []).append(info)
+
+    def update_replica(self, logical_name: str, info: ReplicaInfo) -> None:
+        """Replace the registered entry with the same ``set_name`` (used when a
+        set is re-sharded after an elastic remesh), or append if new."""
+        replicas = self._replicas.setdefault(logical_name, [])
+        for i, r in enumerate(replicas):
+            if r.set_name == info.set_name:
+                replicas[i] = info
+                return
+        replicas.append(info)
+
+    # -- shuffle placement statistics (scheduler input) -----------------------
+    def record_shuffle_bytes(self, shuffle: str, partition: int, node: int,
+                             nbytes: int) -> None:
+        """Record (idempotently) how many map-output bytes for ``partition``
+        live on ``node``; re-recording after straggler re-execution simply
+        overwrites the stale figure."""
+        self._shuffle_bytes.setdefault(shuffle, {}) \
+            .setdefault(partition, {})[node] = nbytes
+
+    def shuffle_partition_bytes(self, shuffle: str,
+                                partition: int) -> Dict[int, int]:
+        return dict(self._shuffle_bytes.get(shuffle, {}).get(partition, {}))
+
+    def total_shuffle_bytes(self, shuffle: str) -> int:
+        return sum(b for part in self._shuffle_bytes.get(shuffle, {}).values()
+                   for b in part.values())
+
+    def clear_shuffle(self, shuffle: str) -> None:
+        self._shuffle_bytes.pop(shuffle, None)
 
     def replicas_of(self, logical_name: str) -> List[ReplicaInfo]:
         return list(self._replicas.get(logical_name, []))

@@ -178,25 +178,51 @@ def write_sharded_token_dataset(cluster, name: str, tokens: np.ndarray,
     recs["tokens"] = tokens.astype(np.int32)
     return cluster.create_sharded_set(
         name, recs, key_fn=lambda r: r["seq_id"], page_size=page_size,
-        replication_factor=replication_factor)
+        replication_factor=replication_factor, partition_key="seq_id")
 
 
 class DistributedBatchLoader:
     """Batch iterator over a sharded token dataset: streams each shard
-    through its owner node's pool (sequential read service) and yields the
-    same {"tokens", "labels"} batches as the single-pool BatchLoader."""
+    through the pool that holds it and yields the same {"tokens", "labels"}
+    batches as the single-pool BatchLoader.
 
-    def __init__(self, cluster, sset, batch_size: int, drop_last: bool = True):
+    Scheduler-driven since PR 2: the shard read plan comes from the cluster
+    scheduler (a dead owner's shard is read from a CRC-verified replica
+    holder instead of failing), and up to ``prefetch`` shard reads run ahead
+    as transfer-engine jobs, overlapping the consumer the way the
+    single-pool ``BatchLoader``'s producer thread does."""
+
+    def __init__(self, cluster, sset, batch_size: int, drop_last: bool = True,
+                 prefetch: int = 2):
         self.cluster = cluster
         self.sset = sset
         self.batch_size = batch_size
         self.drop_last = drop_last
+        self.prefetch = max(0, prefetch)
+
+    def _shard_stream(self) -> Iterator[np.ndarray]:
+        # read_shard resolves each shard's source through the cluster
+        # scheduler (primary, or a CRC-verified replica when the owner is
+        # dead), so shard order is all the plan we need here
+        order = sorted(self.sset.shards)
+        if self.prefetch == 0:
+            for node_id in order:
+                yield self.cluster.read_shard(self.sset, node_id)
+            return
+        engine = self.cluster.transfer
+        window: List = []
+        for node_id in order:
+            window.append(engine.submit(self.cluster.read_shard, self.sset,
+                                        node_id, label=f"prefetch{node_id}"))
+            if len(window) >= self.prefetch:
+                yield window.pop(0).result()
+        for fut in window:
+            yield fut.result()
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         buf: List[np.ndarray] = []
         have = 0
-        for node_id in sorted(self.sset.shards):
-            shard = self.cluster.read_shard(self.sset, node_id)
+        for shard in self._shard_stream():
             if len(shard) == 0:
                 continue
             buf.append(shard["tokens"])
@@ -224,19 +250,28 @@ def cluster_aggregate(cluster, name: str, records: np.ndarray,
                       num_reducers: Optional[int] = None,
                       page_size: int = 1 << 18,
                       replication_factor: Optional[int] = None,
-                      keep_dataset: bool = False):
+                      keep_dataset: bool = False,
+                      partition_field: Optional[str] = None,
+                      force_shuffle: bool = False):
     """The end-to-end hash-aggregation workload (paper §9's Spark
-    comparison), driven through the cluster: stage ``records`` as a sharded
-    locality set (sequential-write service on each node), shuffle by key hash
-    to the reducers, aggregate per reducer through each local pool's hash
-    service, and merge. Returns ``(keys, summed_vals)`` sorted by key."""
+    comparison), driven through the cluster scheduler: stage ``records`` as a
+    sharded locality set partitioned on ``partition_field`` (default: the
+    aggregation key — the storage layer sees the query, so it stages the
+    data co-partitioned and the scheduler elides the shuffle entirely, the
+    paper's §9.2.2 result). Pass a different ``partition_field`` or
+    ``force_shuffle=True`` to exercise the full shuffle path with
+    locality-aware reducer placement. Returns ``(keys, summed_vals)`` sorted
+    by key."""
     from ..runtime.cluster import cluster_hash_aggregate
+    partition_field = partition_field or key_field
     sset = cluster.create_sharded_set(
-        name, records, key_fn=lambda r: r[key_field], page_size=page_size,
-        replication_factor=replication_factor)
+        name, records, key_fn=lambda r: r[partition_field],
+        page_size=page_size, replication_factor=replication_factor,
+        partition_key=partition_field)
     try:
         return cluster_hash_aggregate(cluster, sset, key_field, val_field,
-                                      num_reducers=num_reducers)
+                                      num_reducers=num_reducers,
+                                      force_shuffle=force_shuffle)
     finally:
         if not keep_dataset:
             cluster.drop_sharded_set(sset)

@@ -1,10 +1,15 @@
 from .watchdog import CollectiveWatchdog, HostMonitor, StepTimer
-from .elastic import plan_remesh, surviving_mesh_shape
+from .elastic import plan_remesh, surviving_mesh_shape, surviving_node_ids
+from .scheduler import AggregationPlan, ClusterScheduler
+from .transfer import TransferEngine, TransferError, TransferFuture, copy_set
 from .cluster import (Cluster, ClusterShuffle, DeadNodeError, RecoveryReport,
-                      ShardInfo, ShardedSet, StorageNode,
+                      RemeshReport, ShardInfo, ShardedSet, StorageNode,
                       cluster_hash_aggregate, dispatch_plan)
 
 __all__ = ["CollectiveWatchdog", "HostMonitor", "StepTimer", "plan_remesh",
-           "surviving_mesh_shape", "Cluster", "ClusterShuffle",
-           "DeadNodeError", "RecoveryReport", "ShardInfo", "ShardedSet",
-           "StorageNode", "cluster_hash_aggregate", "dispatch_plan"]
+           "surviving_mesh_shape", "surviving_node_ids", "AggregationPlan",
+           "ClusterScheduler", "TransferEngine", "TransferError",
+           "TransferFuture", "copy_set", "Cluster", "ClusterShuffle",
+           "DeadNodeError", "RecoveryReport", "RemeshReport", "ShardInfo",
+           "ShardedSet", "StorageNode", "cluster_hash_aggregate",
+           "dispatch_plan"]

@@ -1,27 +1,31 @@
 """Multi-node cluster runtime over unified buffer pools — paper §2, §7–§9.
 
 This is the layer that turns the single-node mechanisms (TLSF arena, unified
-buffer pool, data-aware paging, services) into the system the paper evaluates:
+buffer pool, data-aware paging, services) into the system the paper evaluates.
+Since PR 2 it is split into three layers:
 
-* ``StorageNode`` — one storage service instance: its own ``BufferPool`` +
-  spill store, holding the node's locality sets.
-* ``Cluster`` — N nodes plus the manager-side catalog (``StatisticsDB``).
-  Sharded locality sets are routed across nodes by hash partition
-  (``PartitionScheme``); each shard is also chain-replicated to
-  ``replication_factor`` other nodes through the node-to-node transfer path,
-  with CRC32 checksums recorded in the catalog.
-* ``ClusterShuffle`` — the distributed shuffle service: map-side output is
-  written as job-data pages into each mapper's *local* pool (one virtual
-  shuffle buffer per reducer, paper §8); reducers pull their partition from
-  every map node over the transfer path, then the map output's lifetime is
-  ended so its pages become free eviction victims (paper §6).
-* ``cluster_hash_aggregate`` — the paper §9 Spark-comparison workload:
-  shuffle-by-key-hash to R reducers, per-reducer ``HashService`` aggregation
-  in the local pool, disjoint merge at the driver.
-* Replica-based recovery — ``kill_node`` loses a pool wholesale;
-  ``recover_node`` re-materializes the node's primary shards from surviving
-  replicas and re-replicates what the node hosted for others, verifying every
-  rebuilt shard against its cataloged checksum.
+* **Mechanics (this module)** — ``StorageNode`` (one storage service: a
+  ``BufferPool`` + spill store), ``Cluster`` (N nodes + the manager-side
+  catalog/``StatisticsDB``), ``ShardedSet`` (hash-partitioned locality sets
+  with chain replicas + CRC32 checksums), ``ClusterShuffle`` (map-side
+  job-data pages, reducer pull, lifetime-ended release), replica-based
+  ``recover_node``, and elastic ``remesh_degrade``.
+* **Policy (``runtime/scheduler.py``)** — every placement decision is
+  delegated to a ``ClusterScheduler``: reducer ``r`` lands on the node already
+  holding the most map-output bytes for partition ``r``; reads of a dead
+  owner's shard are routed to a CRC-verified surviving replica; a
+  co-partitioned input elides the shuffle entirely (``stats.best_replica``);
+  stragglers flagged by ``watchdog.StepTimer`` are re-executed from replica
+  holders.
+* **Wire (``runtime/transfer.py``)** — all inter-pool movement goes through
+  ``copy_set`` and the threaded ``TransferEngine``; ``Cluster.transfer_records``
+  is one client of it, and reducer pulls are engine jobs that overlap map
+  finalization and each other.
+
+On unrecoverable node loss (no replacement machine), ``Cluster.remesh_degrade``
+falls through to ``elastic.plan_remesh``: the cluster shrinks to the surviving
+membership and every sharded set is re-partitioned over it from the freshest
+surviving copies, instead of raising.
 
 Everything moves through buffer pools: a "network transfer" is a paged read
 from the source pool streamed into a sequential write on the destination pool,
@@ -29,9 +33,10 @@ with byte accounting standing in for the wire.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,9 +45,13 @@ from ..core.buffer_pool import BufferPool, SpillStore
 from ..core.locality_set import LocalitySet
 from ..core.replication import (PartitionScheme, replica_nodes,
                                 shard_checksum)
-from ..core.services import (HashService, PageIterator, SequentialWriter,
-                             ShuffleService, job_data_attrs, read_all)
+from ..core.services import (HashService, SequentialWriter, ShuffleService,
+                             job_data_attrs, read_all)
 from ..core.statistics import ReplicaInfo, StatisticsDB
+from .elastic import plan_remesh, surviving_node_ids
+from .scheduler import ClusterScheduler
+from .transfer import TransferEngine, copy_set
+from .watchdog import StepTimer
 
 
 def _host_dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
@@ -75,7 +84,8 @@ def dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
 
 
 class DeadNodeError(RuntimeError):
-    """Raised when touching a node that has been killed and not recovered."""
+    """Raised when touching a node that has been killed and not recovered,
+    and no surviving replica can stand in for it."""
 
 
 class StorageNode:
@@ -118,18 +128,37 @@ class ShardedSet:
     """A logical dataset hash-partitioned across the cluster's pools.
 
     ``shards[n]`` describes node ``n``'s primary shard; replicas live on the
-    chain successors. All placement follows ``scheme`` (fib-hash of the key,
-    partitions folded onto nodes), so any node can compute routing locally.
+    chain successors. Placement follows ``scheme`` over the set's placement
+    domain ``node_ids`` (slot ``s`` of the scheme maps to ``node_ids[s]``) —
+    the full membership at creation time, or the surviving membership after an
+    elastic remesh. Any node can compute routing locally.
     """
 
     def __init__(self, name: str, dtype: np.dtype, scheme: PartitionScheme,
-                 page_size: int, replication_factor: int):
+                 page_size: int, replication_factor: int,
+                 node_ids: Optional[Sequence[int]] = None):
         self.name = name
         self.dtype = np.dtype(dtype)
         self.scheme = scheme
         self.page_size = page_size
         self.replication_factor = replication_factor
+        self.node_ids: List[int] = (list(node_ids) if node_ids is not None
+                                    else list(range(scheme.num_nodes)))
+        # how to build each shard's AttributeSet; remembered so re-sharding
+        # (remesh_degrade) re-creates shards under the same attributes
+        self.attrs_factory: Optional[Callable[[], AttributeSet]] = None
         self.shards: Dict[int, ShardInfo] = {}
+
+    @property
+    def partition_key(self) -> str:
+        """What this set is partitioned on (the scheme name registered in the
+        statistics DB; co-partition detection compares it to a query's key)."""
+        return self.scheme.name
+
+    def node_of_records(self, records: np.ndarray) -> np.ndarray:
+        """Actual node id (not scheme slot) each record routes to."""
+        slots = self.scheme.node_of_records(records)
+        return np.asarray(self.node_ids, dtype=np.int64)[slots]
 
     def primary_set_name(self, node_id: int) -> str:
         return f"{self.name}/shard{node_id}"
@@ -152,17 +181,39 @@ class RecoveryReport:
         return not self.checksum_failures
 
 
+@dataclass
+class RemeshReport:
+    """What ``Cluster.remesh_degrade`` did: the elastic plan plus the
+    re-sharding work (paper's recovery story when no replacement node
+    exists — shrink instead of fail)."""
+
+    dead_nodes: List[int]
+    node_ids: List[int]                 # surviving placement domain
+    plan: dict = field(default_factory=dict)
+    resharded: List[str] = field(default_factory=list)
+    lost: List[str] = field(default_factory=list)
+    bytes_transferred: int = 0
+    seconds: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.lost
+
+
 class Cluster:
     """N storage nodes + the manager node's catalog (paper §2 architecture).
 
     The manager here is in-process: ``catalog`` maps sharded-set names to
-    their shard/replica/checksum metadata, and ``stats`` is the paper's
-    statistics database used by query planning (``best_replica``).
+    their shard/replica/checksum metadata, ``stats`` is the paper's statistics
+    database used by query planning (``best_replica``, shuffle byte maps),
+    ``scheduler`` owns placement policy, and ``transfer`` is the lazy threaded
+    engine every inter-pool byte rides through.
     """
 
     def __init__(self, num_nodes: int, node_capacity: int = 32 << 20,
                  page_size: int = 1 << 18, replication_factor: int = 1,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 transfer_workers: int = 4):
         if num_nodes < 2:
             raise ValueError("a cluster needs at least 2 nodes")
         self.num_nodes = num_nodes
@@ -176,6 +227,10 @@ class Cluster:
         }
         self.stats = StatisticsDB()
         self.catalog: Dict[str, ShardedSet] = {}
+        self.scheduler = ClusterScheduler(self)
+        self._transfer_workers = transfer_workers
+        self._transfer: Optional[TransferEngine] = None
+        self._acct_lock = threading.Lock()
         self.net_bytes = 0          # bytes that crossed node boundaries
         self.local_bytes = 0        # bytes moved pool->pool on one node
 
@@ -194,6 +249,9 @@ class Cluster:
     def alive_node_ids(self) -> List[int]:
         return [n for n, node in self.nodes.items() if node.alive]
 
+    def dead_node_ids(self) -> List[int]:
+        return [n for n, node in self.nodes.items() if not node.alive]
+
     def kill_node(self, node_id: int) -> None:
         """Simulate a machine loss: the node's pool, spill store, and every
         locality set on it are gone."""
@@ -201,32 +259,62 @@ class Cluster:
         node.alive = False
         node.pool = None  # drop the arena; nothing on this node survives
 
+    # -- byte accounting (thread-safe: pulls run on engine workers) -----------
+    def add_net_bytes(self, n: int) -> None:
+        with self._acct_lock:
+            self.net_bytes += n
+
+    def add_local_bytes(self, n: int) -> None:
+        with self._acct_lock:
+            self.local_bytes += n
+
     # -- node-to-node transfer path -------------------------------------------
+    @property
+    def transfer(self) -> TransferEngine:
+        """The cluster's transfer engine, spawned on first use (its workers
+        exit when idle, so short-lived clusters don't accumulate threads)."""
+        if self._transfer is None:
+            self._transfer = TransferEngine(self._transfer_workers,
+                                            name="transfer")
+        return self._transfer
+
+    def _stream_records(self, src_id: int, src_set: str, dst_id: int,
+                        dst_set: str, dtype: np.dtype,
+                        page_size: Optional[int] = None,
+                        attrs: Optional[AttributeSet] = None) -> int:
+        src = self.node(src_id)
+        dst = self.node(dst_id)
+        moved = copy_set(src.pool, src_set, dst.pool, dst_set, dtype,
+                         page_size or self.page_size, attrs)
+        if src_id == dst_id:
+            self.add_local_bytes(moved)
+        else:
+            self.add_net_bytes(moved)
+        return moved
+
     def transfer_records(self, src_id: int, src_set: str, dst_id: int,
                          dst_set: str, dtype: np.dtype,
                          page_size: Optional[int] = None,
                          attrs: Optional[AttributeSet] = None) -> int:
-        """Stream one locality set between pools page by page (the cluster's
-        "network": paged reads on the source, sequential writes on the
-        destination). Returns bytes moved; cross-node bytes are tallied as
-        network traffic, same-node as pool-local copies."""
-        src = self.node(src_id)
-        dst = self.node(dst_id)
-        dtype = np.dtype(dtype)
-        ls_src = src.pool.get_set(src_set)
-        ls_dst = dst.pool.create_set(dst_set, page_size or self.page_size,
-                                     attrs)
-        writer = SequentialWriter(dst.pool, ls_dst, dtype)
-        moved = 0
-        for recs in PageIterator(src.pool, ls_src, dtype, sorted(ls_src.pages)):
-            writer.append_batch(recs)
-            moved += recs.nbytes
-        writer.close()
-        if src_id == dst_id:
-            self.local_bytes += moved
-        else:
-            self.net_bytes += moved
-        return moved
+        """Stream one locality set between pools (the cluster's "network":
+        ``transfer.copy_set`` under the engine). Returns bytes moved;
+        cross-node bytes are tallied as network traffic, same-node as
+        pool-local copies."""
+        if threading.current_thread().name.startswith("transfer"):
+            # already on an engine worker: run inline rather than submitting a
+            # job we would then block on (a full pool of waiters would wedge)
+            return self._stream_records(src_id, src_set, dst_id, dst_set,
+                                        dtype, page_size, attrs)
+        return self.transfer_records_async(src_id, src_set, dst_id, dst_set,
+                                           dtype, page_size, attrs).result()
+
+    def transfer_records_async(self, src_id: int, src_set: str, dst_id: int,
+                               dst_set: str, dtype: np.dtype,
+                               page_size: Optional[int] = None,
+                               attrs: Optional[AttributeSet] = None):
+        return self.transfer.submit(
+            self._stream_records, src_id, src_set, dst_id, dst_set, dtype,
+            page_size, attrs, label=f"{src_set}->{dst_set}")
 
     # -- sharded locality sets ------------------------------------------------
     def create_sharded_set(self, name: str, records: np.ndarray,
@@ -235,57 +323,109 @@ class Cluster:
                            page_size: Optional[int] = None,
                            replication_factor: Optional[int] = None,
                            attrs_factory: Optional[Callable[[], AttributeSet]] = None,
+                           partition_key: Optional[str] = None,
+                           node_ids: Optional[Sequence[int]] = None,
                            ) -> ShardedSet:
-        """Hash-partition ``records`` across every node's pool and
-        chain-replicate each shard (paper §7 applied at page level: the
-        replica IS another locality set, just on a different node). Requires
-        all nodes alive — the scheme routes over the full membership;
-        recover dead nodes first (shrinking placement to survivors is the
-        elastic-remesh follow-up in ROADMAP.md)."""
+        """Hash-partition ``records`` across the placement domain (every alive
+        node by default) and chain-replicate each shard (paper §7 applied at
+        page level: the replica IS another locality set, just on a different
+        node). ``partition_key`` names what the set is partitioned on (e.g.
+        the key field) so ``stats.best_replica`` can match co-partitioned
+        queries and skip their shuffles; it defaults to the set name, which
+        never matches and preserves the always-shuffle behavior."""
         if name in self.catalog:
             raise ValueError(f"sharded set {name!r} already exists")
         factor = (self.replication_factor if replication_factor is None
                   else replication_factor)
         page_size = page_size or self.page_size
-        scheme = PartitionScheme(name, key_fn,
-                                 partitions_per_node * self.num_nodes,
-                                 self.num_nodes)
-        sset = ShardedSet(name, records.dtype, scheme, page_size, factor)
-        placement = scheme.node_of_records(records)
-        order, counts, offsets = dispatch_plan(placement, self.num_nodes)
-        routed = records[order]
-        for n in range(self.num_nodes):
-            shard = routed[offsets[n]:offsets[n + 1]]
-            attrs = attrs_factory() if attrs_factory else None
-            self.node(n).write_records(sset.primary_set_name(n), shard,
-                                       sset.dtype, page_size, attrs)
-            info = ShardInfo(node_id=n, set_name=sset.primary_set_name(n),
-                             num_records=len(shard),
-                             checksum=shard_checksum(shard))
-            for holder in replica_nodes(n, self.num_nodes, factor):
-                rep_name = sset.replica_set_name(n, holder)
-                self.transfer_records(n, info.set_name, holder, rep_name,
-                                      sset.dtype, page_size)
-                info.replicas.append((holder, rep_name))
-            sset.shards[n] = info
+        domain = list(node_ids) if node_ids is not None else self.alive_node_ids()
+        if not domain:
+            raise DeadNodeError("no alive nodes to place a sharded set on")
+        if factor >= len(domain):
+            raise ValueError(f"replication factor {factor} needs more than "
+                             f"{len(domain)} nodes")
+        scheme = PartitionScheme(partition_key or name, key_fn,
+                                 partitions_per_node * len(domain),
+                                 len(domain))
+        sset = ShardedSet(name, records.dtype, scheme, page_size, factor,
+                          node_ids=domain)
+        sset.attrs_factory = attrs_factory
+        self._place_records(sset, records)
         self.catalog[name] = sset
-        self.stats.register_replica(name, ReplicaInfo(
-            set_name=name, partition_key=scheme.name,
-            num_partitions=scheme.num_partitions, num_nodes=self.num_nodes,
-            page_size=page_size, extra={"replication_factor": factor}))
+        self.stats.register_replica(name, self._replica_info(sset))
         return sset
 
+    def register_replica_set(self, logical_name: str,
+                             sset: ShardedSet) -> None:
+        """Register a sharded set as a heterogeneously partitioned replica of
+        a logical dataset (paper §7 through the cluster pools): queries over
+        ``logical_name`` may then be routed to whichever replica's
+        partitioning matches (``scheduler.plan_aggregation``), e.g. a
+        by-key replica making an aggregation shuffle-free."""
+        self.stats.register_replica(logical_name, self._replica_info(sset))
+
+    def _replica_info(self, sset: ShardedSet) -> ReplicaInfo:
+        return ReplicaInfo(
+            set_name=sset.name, partition_key=sset.partition_key,
+            num_partitions=sset.scheme.num_partitions,
+            num_nodes=len(sset.node_ids), page_size=sset.page_size,
+            extra={"replication_factor": sset.replication_factor,
+                   "node_ids": list(sset.node_ids)})
+
+    def _place_records(self, sset: ShardedSet, records: np.ndarray) -> None:
+        """Write primaries + chain replicas for ``records`` over the set's
+        placement domain (shared by creation and remesh re-sharding; shard
+        attributes come from the set's remembered ``attrs_factory``)."""
+        domain = sset.node_ids
+        slots = sset.scheme.node_of_records(records)
+        order, counts, offsets = dispatch_plan(slots, len(domain))
+        routed = records[order]
+        for slot, nid in enumerate(domain):
+            shard = routed[offsets[slot]:offsets[slot + 1]]
+            attrs = sset.attrs_factory() if sset.attrs_factory else None
+            self.node(nid).write_records(sset.primary_set_name(nid), shard,
+                                         sset.dtype, sset.page_size, attrs)
+            info = ShardInfo(node_id=nid, set_name=sset.primary_set_name(nid),
+                             num_records=len(shard),
+                             checksum=shard_checksum(shard))
+            for hslot in replica_nodes(slot, len(domain),
+                                       sset.replication_factor):
+                holder = domain[hslot]
+                rep_name = sset.replica_set_name(nid, holder)
+                self.transfer_records(nid, info.set_name, holder, rep_name,
+                                      sset.dtype, sset.page_size)
+                info.replicas.append((holder, rep_name))
+            sset.shards[nid] = info
+
+    def read_shard_from(self, sset: ShardedSet,
+                        node_id: int) -> Tuple[int, np.ndarray]:
+        """Read one shard, preferring the primary but falling back to any
+        surviving replica whose CRC32 matches the catalog (so a dead node with
+        intact replicas never fails a read). Returns ``(holder, records)``."""
+        info = sset.shards[node_id]
+        mismatches: List[str] = []
+        for holder, set_name in self.scheduler.read_sources(sset, node_id):
+            recs = self.nodes[holder].read_records(set_name, sset.dtype)
+            if holder == node_id or shard_checksum(recs) == info.checksum:
+                return holder, recs
+            mismatches.append(f"{set_name}@{holder}")
+        detail = (f" (checksum mismatch on {', '.join(mismatches)})"
+                  if mismatches else "")
+        raise DeadNodeError(
+            f"node {node_id} is down and no verified replica of "
+            f"{sset.name!r} shard {node_id} survives{detail}")
+
     def read_shard(self, sset: ShardedSet, node_id: int) -> np.ndarray:
-        return self.node(node_id).read_records(
-            sset.primary_set_name(node_id), sset.dtype)
+        return self.read_shard_from(sset, node_id)[1]
 
     def read_sharded(self, sset: ShardedSet) -> np.ndarray:
-        """Gather every primary shard (raises DeadNodeError if an owner is
-        down and unrecovered — exactly what recovery exists to prevent)."""
+        """Gather every shard, reading dead owners' shards from surviving
+        replicas (raises DeadNodeError only when a shard has no verified copy
+        left — exactly what recovery and remesh exist to prevent)."""
         parts = [self.read_shard(sset, n) for n in sorted(sset.shards)]
         return np.concatenate(parts) if parts else np.empty(0, sset.dtype)
 
-    def drop_sharded_set(self, sset: ShardedSet) -> None:
+    def _drop_physical(self, sset: ShardedSet) -> None:
         for n, info in sset.shards.items():
             node = self.nodes[n]
             if node.alive and info.set_name in node.pool.paging.sets:
@@ -294,6 +434,9 @@ class Cluster:
                 hnode = self.nodes[holder]
                 if hnode.alive and rep_name in hnode.pool.paging.sets:
                     hnode.pool.drop_set(hnode.pool.get_set(rep_name))
+
+    def drop_sharded_set(self, sset: ShardedSet) -> None:
+        self._drop_physical(sset)
         self.catalog.pop(sset.name, None)
 
     # -- replica-based recovery (paper §7) ------------------------------------
@@ -355,10 +498,65 @@ class Cluster:
         report.seconds = time.perf_counter() - t0
         return report
 
+    # -- elastic degrade (ROADMAP follow-up: shrink instead of fail) ----------
+    def remesh_degrade(self,
+                       dead_nodes: Optional[Sequence[int]] = None
+                       ) -> RemeshReport:
+        """Unrecoverable node loss: no replacement machine will take the dead
+        node's identity, so fall through to ``elastic.plan_remesh`` — shrink
+        the membership to the survivors and re-partition every sharded set
+        over it from the freshest surviving copies (primaries where alive,
+        CRC-verified replicas where not). Sets with an unreadable shard are
+        reported as ``lost`` rather than silently truncated. The set objects
+        are updated in place, so existing handles stay valid."""
+        t0 = time.perf_counter()
+        for n in (dead_nodes or ()):
+            if self.nodes[n].alive:
+                self.kill_node(n)
+        dead = self.dead_node_ids()
+        alive = surviving_node_ids(self.num_nodes, dead)
+        if not alive:
+            raise DeadNodeError("no surviving nodes to remesh onto")
+        report = RemeshReport(
+            dead_nodes=dead, node_ids=alive,
+            plan=plan_remesh(self.num_nodes, dead, chips_per_host=1,
+                             prefer_model=1))
+        for name in sorted(self.catalog):
+            sset = self.catalog[name]
+            try:
+                records = self.read_sharded(sset)
+            except DeadNodeError:
+                report.lost.append(name)
+                continue
+            base_net = self.net_bytes
+            partitions_per_node = max(
+                1, sset.scheme.num_partitions // max(1, len(sset.node_ids)))
+            self._drop_physical(sset)
+            sset.node_ids = list(alive)
+            sset.scheme = PartitionScheme(
+                sset.scheme.name, sset.scheme.key_fn,
+                partitions_per_node * len(alive), len(alive))
+            sset.replication_factor = min(sset.replication_factor,
+                                          len(alive) - 1)
+            sset.shards = {}
+            self._place_records(sset, records)
+            self.stats.update_replica(name, self._replica_info(sset))
+            report.resharded.append(name)
+            report.bytes_transferred += self.net_bytes - base_net
+        report.seconds = time.perf_counter() - t0
+        return report
+
     # -- accounting -----------------------------------------------------------
     def memory_report(self) -> Dict[int, Dict[str, Dict[str, int]]]:
         return {n: node.pool.memory_report()
                 for n, node in self.nodes.items() if node.alive}
+
+    def shutdown(self) -> None:
+        """Stop the transfer engine's workers (benchmarks that build many
+        clusters call this; tests can rely on idle-exit instead)."""
+        if self._transfer is not None:
+            self._transfer.shutdown()
+            self._transfer = None
 
 
 # ---------------------------------------------------------------------------
@@ -367,22 +565,49 @@ class Cluster:
 class ClusterShuffle:
     """Map-side: each node's ``ShuffleService`` writes one virtual shuffle
     buffer per *global* reducer into the node-local pool (concurrent-write
-    job data). Reduce-side: reducer ``r`` (hosted on node ``r % N``) pulls
-    partition ``r`` from every map node through the transfer path, after
-    which the map output's lifetime is ended and its pages dropped."""
+    job data). Reduce-side: reducer ``r`` pulls partition ``r`` from every map
+    node through the transfer path, after which the map output's lifetime is
+    ended and its pages dropped.
+
+    Placement is the scheduler's: ``finish_maps`` publishes per-partition
+    byte counts to the statistics DB, ``place_reducers_locally`` then pins
+    each reducer to the byte-heaviest map node (default placement is the
+    round-robin baseline over alive nodes). ``pull_async`` runs pulls as
+    transfer-engine jobs so they overlap finalization and each other, and
+    ``reexecute_stragglers`` re-runs a slow mapper's work on a node holding a
+    replica of its shard."""
 
     def __init__(self, cluster: Cluster, name: str, num_reducers: int,
-                 dtype: np.dtype, page_size: Optional[int] = None):
+                 dtype: np.dtype, page_size: Optional[int] = None,
+                 scheduler: Optional[ClusterScheduler] = None):
         self.cluster = cluster
         self.name = name
         self.num_reducers = num_reducers
         self.dtype = np.dtype(dtype)
         self.page_size = page_size or cluster.page_size
+        self.scheduler = scheduler or cluster.scheduler
+        self.placement: Optional[Dict[int, int]] = None
         self._services: Dict[int, ShuffleService] = {}
-        self._pulled: Dict[int, str] = {}  # reducer -> reduce-set name
+        self._pulled: Dict[int, Tuple[str, int]] = {}  # reducer -> (set, node)
+        # worker node -> shard-map work items it performed, for straggler
+        # re-execution: (sset, shard_id, key_fn, transform, batch)
+        self._work: Dict[int, List[tuple]] = {}
 
     def reducer_node(self, reducer: int) -> int:
-        return reducer % self.cluster.num_nodes
+        if self.placement is not None and reducer in self.placement:
+            return self.placement[reducer]
+        alive = self.cluster.alive_node_ids()
+        return alive[reducer % len(alive)]
+
+    def assign_placement(self, placement: Dict[int, int]) -> None:
+        self.placement = dict(placement)
+
+    def place_reducers_locally(self) -> Dict[int, int]:
+        """Adopt the scheduler's locality-aware placement (call after
+        ``finish_maps`` — it needs the published byte statistics)."""
+        placement = self.scheduler.place_reducers(self.name, self.num_reducers)
+        self.assign_placement(placement)
+        return placement
 
     def _service(self, node_id: int) -> ShuffleService:
         if node_id not in self._services:
@@ -397,9 +622,9 @@ class ClusterShuffle:
         # deliberately NOT the storage-placement hash (PartitionScheme's
         # golden-ratio multiplier): reusing it
         # would silently co-locate every record with its reducer and the
-        # shuffle would never exercise the transfer path. Locality-aware
-        # reducer placement is an explicit optimization (see ROADMAP), not a
-        # hash collision.
+        # shuffle would never exercise the transfer path. Shuffle-free
+        # execution is an explicit scheduler decision (plan_aggregation), not
+        # a hash collision.
         h = keys.astype(np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)
         h ^= h >> np.uint64(29)
         return (h % np.uint64(self.num_reducers)).astype(np.int64)
@@ -419,20 +644,116 @@ class ClusterShuffle:
             if len(chunk):
                 svc.get_buffer(node_id, r).add_batch(chunk)
 
+    def map_shard(self, sset: ShardedSet, shard_id: int,
+                  key_fn: Callable[[np.ndarray], np.ndarray],
+                  transform: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+                  batch: int = 65536) -> int:
+        """Run the map side for one shard on the node that holds its bytes
+        (the primary owner, or a replica holder when the owner is down).
+        Returns the worker node id; the work item is remembered so a
+        straggler's shards can be replayed elsewhere."""
+        worker, records = self.cluster.read_shard_from(sset, shard_id)
+        if transform is not None:
+            records = transform(records)
+        for i in range(0, len(records), batch):
+            self.map_batch(worker, records[i:i + batch], key_fn)
+        self._work.setdefault(worker, []).append(
+            (sset, shard_id, key_fn, transform, batch, len(records)))
+        return worker
+
     def map_sharded(self, sset: ShardedSet,
                     key_fn: Callable[[np.ndarray], np.ndarray],
-                    batch: int = 65536) -> None:
+                    batch: int = 65536,
+                    step_timer: Optional[StepTimer] = None) -> None:
         """Run the map side over every shard of a sharded set, reading
-        through each owner's pool (sequential read service)."""
+        through each holder's pool (sequential read service). With a
+        ``step_timer``, per-shard map times feed the straggler detector
+        (attributed to the node that executed the work, which for a dead
+        owner's shard is its replica holder) and flagged mappers are
+        re-executed from replica holders; a single map pass per host counts
+        (``min_samples=1``)."""
         for n in sorted(sset.shards):
-            shard = self.cluster.read_shard(sset, n)
-            for i in range(0, len(shard), batch):
-                self.map_batch(n, shard[i:i + batch], key_fn)
+            t0 = time.perf_counter()
+            worker = self.map_shard(sset, n, key_fn, batch=batch)
+            if step_timer is not None:
+                step_timer.record(worker, time.perf_counter() - t0)
+        if step_timer is not None:
+            self.reexecute_stragglers(step_timer.stragglers(min_samples=1))
+
+    # -- straggler re-execution (ROADMAP follow-up) ---------------------------
+    def discard_map_output(self, node_id: int) -> None:
+        """Throw away everything node ``node_id`` mapped (its job-data pages
+        are lifetime-ended and dropped) — the straggler's partial output must
+        not double-count once a backup re-executes its shards."""
+        svc = self._services.pop(node_id, None)
+        if svc is None:
+            return
+        svc.finish_writes()
+        for r in range(self.num_reducers):
+            svc.release_partition(r)
+
+    def reexecute_stragglers(self,
+                             stragglers: Sequence[int]) -> List[Tuple[int, int]]:
+        """Re-execute every shard a straggler mapped on a node that already
+        holds a copy (``scheduler.backup_source``: the alive primary when the
+        straggler was only a backup, else a replica holder — paper §7's
+        backup tasks applied to execution). Call between the map phase and
+        ``finish_maps`` — the byte statistics published at finalization then
+        reflect the re-executed layout. The slow output stands (no discard)
+        when a shard has no other surviving copy, or when the node's service
+        holds records fed through the raw ``map_batch`` API (untracked work
+        cannot be replayed, and dropping it would lose records). Returns
+        ``[(straggler, backup), ...]``."""
+        redone: List[Tuple[int, int]] = []
+        for s in stragglers:
+            items = self._work.get(s)
+            svc = self._services.get(s)
+            if not items or svc is None:
+                continue
+            tracked = sum(it[5] for it in items)
+            if sum(svc.partition_records) != tracked:
+                continue  # mixed provenance: raw map_batch records present
+            sources = [self.scheduler.backup_source(sset, shard_id, exclude=s)
+                       for (sset, shard_id, *_rest) in items]
+            if any(src is None for src in sources):
+                continue  # nowhere else to run it; slow output stands
+            self.discard_map_output(s)
+            self._work.pop(s, None)
+            for (sset, shard_id, key_fn, transform, batch, _n), \
+                    (holder, set_name) in zip(items, sources):
+                records = self.cluster.nodes[holder].read_records(
+                    set_name, sset.dtype)
+                if transform is not None:
+                    records = transform(records)
+                for i in range(0, len(records), batch):
+                    self.map_batch(holder, records[i:i + batch], key_fn)
+                self._work.setdefault(holder, []).append(
+                    (sset, shard_id, key_fn, transform, batch, len(records)))
+                redone.append((s, holder))
+        return redone
+
+    # -- map finalization ------------------------------------------------------
+    def _finish_node(self, node_id: int, svc: ShuffleService) -> None:
+        svc.finish_writes()
+        for r in range(self.num_reducers):
+            self.cluster.stats.record_shuffle_bytes(
+                self.name, r, node_id, svc.partition_bytes[r])
 
     def finish_maps(self) -> None:
-        for svc in self._services.values():
-            svc.finish_writes()
+        """Seal every map node's shuffle buffers and publish per-partition
+        byte counts to the statistics DB (the scheduler's placement input)."""
+        for node_id, svc in sorted(self._services.items()):
+            self._finish_node(node_id, svc)
 
+    def finish_maps_async(self, engine: Optional[TransferEngine] = None) -> list:
+        """Finalize each map node as an engine job; reducer pulls submitted
+        ``after=`` these futures overlap finalization across nodes."""
+        engine = engine or self.cluster.transfer
+        return [engine.submit(self._finish_node, node_id, svc,
+                              label=f"{self.name}/finish{node_id}")
+                for node_id, svc in sorted(self._services.items())]
+
+    # -- reduce-side pulls -----------------------------------------------------
     def pull(self, reducer: int) -> np.ndarray:
         """Reduce-side fetch: gather partition ``reducer`` from every map
         node into the reducer node's pool, then release the map-side pages
@@ -447,20 +768,27 @@ class ClusterShuffle:
             if len(part):
                 writer.append_batch(part)
                 if node_id == dst:
-                    self.cluster.local_bytes += part.nbytes
+                    self.cluster.add_local_bytes(part.nbytes)
                 else:
-                    self.cluster.net_bytes += part.nbytes
+                    self.cluster.add_net_bytes(part.nbytes)
             svc.release_partition(reducer)
         writer.close()
-        self._pulled[reducer] = reduce_set
+        self._pulled[reducer] = (reduce_set, dst)
         return self.cluster.node(dst).read_records(reduce_set, self.dtype)
+
+    def pull_async(self, reducer: int, after: Sequence = ()):
+        """Submit ``pull(reducer)`` to the transfer engine; returns its
+        future. Safe to run concurrently with other pulls: the buffer pools
+        are internally locked and each pull touches its own partition."""
+        return self.cluster.transfer.submit(
+            self.pull, reducer, after=after, label=f"{self.name}/pull{reducer}")
 
     def release_reducer(self, reducer: int) -> None:
         """Drop a pulled reduce partition once the reducer has consumed it."""
-        name = self._pulled.pop(reducer, None)
+        name, dst = self._pulled.pop(reducer, (None, None))
         if name is None:
             return
-        pool = self.cluster.node(self.reducer_node(reducer)).pool
+        pool = self.cluster.node(dst).pool
         if name in pool.paging.sets:
             ls = pool.get_set(name)
             ls.end_lifetime(pool.clock)
@@ -475,14 +803,29 @@ def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
                            num_reducers: Optional[int] = None,
                            num_root_partitions: int = 4,
                            hash_page_size: int = 1 << 16,
+                           scheduler: Optional[ClusterScheduler] = None,
+                           async_pull: bool = True,
+                           step_timer: Optional[StepTimer] = None,
+                           force_shuffle: bool = False,
                            ) -> Tuple[np.ndarray, np.ndarray]:
-    """SELECT key, SUM(val) GROUP BY key over a sharded set: map-side shuffle
-    by key hash, per-reducer HashService aggregation in the local pool,
-    disjoint merge. Reducer outputs are disjoint by construction (keys are
-    routed by hash), so the merge is a concatenate + sort."""
+    """SELECT key, SUM(val) GROUP BY key over a sharded set, scheduled by the
+    ``ClusterScheduler``:
+
+    * input already partitioned on ``key_field`` (``stats.best_replica``
+      finds a co-partitioned replica) → the shuffle is elided: every shard is
+      aggregated in the pool that holds it and the merge is disjoint; zero
+      bytes cross the network (paper §9.2.2's co-partitioned result).
+    * otherwise → map-side shuffle by key hash; reducer ``r`` is placed on
+      the node holding the most map output for partition ``r``; pulls run as
+      overlapped transfer-engine jobs (``async_pull=False`` forces the
+      synchronous path — results are identical).
+
+    Reducer outputs are disjoint by construction (keys are routed by hash),
+    so the merge is a concatenate + sort."""
+    scheduler = scheduler or cluster.scheduler
     num_reducers = num_reducers or cluster.num_nodes
     pair = HashService.PAIR_DTYPE
-    sh = ClusterShuffle(cluster, f"{sset.name}.agg", num_reducers, pair)
+    plan = scheduler.plan_aggregation(sset, key_field)
 
     def to_pairs(records: np.ndarray) -> np.ndarray:
         out = np.empty(len(records), pair)
@@ -490,17 +833,8 @@ def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
         out["val"] = records[val_field]
         return out
 
-    for n in sorted(sset.shards):
-        shard = cluster.read_shard(sset, n)
-        sh.map_batch(n, to_pairs(shard), key_fn=lambda p: p["key"])
-    sh.finish_maps()
-
-    keys_out: List[np.ndarray] = []
-    vals_out: List[np.ndarray] = []
-    for r in range(num_reducers):
-        node = cluster.node(sh.reducer_node(r))
-        pulled = sh.pull(r)
-        hs = HashService(node.pool, f"{sset.name}.agg/hash{r}",
+    def aggregate(node: StorageNode, tag, pulled: np.ndarray):
+        hs = HashService(node.pool, f"{sset.name}.agg/hash{tag}",
                          num_root_partitions=num_root_partitions,
                          page_size=hash_page_size)
         if len(pulled):
@@ -508,9 +842,53 @@ def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
         k, v = hs.finalize()
         hs.close()
         node.pool.drop_set(hs.ls)
-        sh.release_reducer(r)
-        keys_out.append(k)
-        vals_out.append(v)
+        return k, v
+
+    keys_out: List[np.ndarray] = []
+    vals_out: List[np.ndarray] = []
+    if plan.shuffle_free and not force_shuffle:
+        # co-partitioned: same key -> same shard, so shard-local aggregation
+        # is complete and the merge disjoint. net_bytes does not move. The
+        # scheduler may have routed us to a by-key replica of the same
+        # logical data (heterogeneous replicas, paper §7/§9.2.2).
+        target = (cluster.catalog.get(plan.target_name, sset)
+                  if plan.target_name else sset)
+        for n in sorted(target.shards):
+            holder, shard = cluster.read_shard_from(target, n)
+            k, v = aggregate(cluster.node(holder), f"local{n}",
+                             to_pairs(shard))
+            keys_out.append(k)
+            vals_out.append(v)
+    else:
+        sh = ClusterShuffle(cluster, f"{sset.name}.agg", num_reducers, pair,
+                            scheduler=scheduler)
+        for n in sorted(sset.shards):
+            t0 = time.perf_counter()
+            worker = sh.map_shard(sset, n, key_fn=lambda p: p["key"],
+                                  transform=to_pairs)
+            if step_timer is not None:
+                step_timer.record(worker, time.perf_counter() - t0)
+        if step_timer is not None:
+            sh.reexecute_stragglers(step_timer.stragglers(min_samples=1))
+        if async_pull:
+            engine = cluster.transfer
+            fin = sh.finish_maps_async(engine)
+            placed = engine.submit(sh.place_reducers_locally, after=fin,
+                                   label=f"{sh.name}/place")
+            futures = [sh.pull_async(r, after=[placed])
+                       for r in range(num_reducers)]
+            pulls = (fut.result() for fut in futures)
+        else:
+            sh.finish_maps()
+            sh.place_reducers_locally()
+            pulls = (sh.pull(r) for r in range(num_reducers))
+        for r, pulled in enumerate(pulls):
+            node = cluster.node(sh.reducer_node(r))
+            k, v = aggregate(node, r, pulled)
+            sh.release_reducer(r)
+            keys_out.append(k)
+            vals_out.append(v)
+        cluster.stats.clear_shuffle(sh.name)
     keys = np.concatenate(keys_out)
     vals = np.concatenate(vals_out)
     order = np.argsort(keys)

@@ -6,6 +6,15 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple
 
 
+def surviving_node_ids(total_hosts: int,
+                       dead_hosts: Sequence[int]) -> List[int]:
+    """The shrunk placement domain after unrecoverable losses: the alive node
+    ids in order. Sharded sets are re-partitioned over exactly this list by
+    the cluster's remesh-degrade path."""
+    dead = set(dead_hosts)
+    return [h for h in range(total_hosts) if h not in dead]
+
+
 def surviving_mesh_shape(n_alive: int,
                          prefer_model: int = 16) -> Tuple[int, int]:
     """Largest (data, model) grid with model | prefer_model using <= n_alive

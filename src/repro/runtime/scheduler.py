@@ -1,0 +1,139 @@
+"""Cluster scheduler — placement policy extracted from the cluster mechanics.
+
+The paper's monolithic-storage argument (§1, §9.2.2) is that because one
+storage layer sees everything — replica partitionings in the statistics
+database, map-output locality, liveness — it can make the placement decisions
+that layered stacks (Spark over Alluxio over HDFS) each make blindly. This
+module owns those decisions; ``runtime/cluster.py`` owns the mechanics and
+asks the scheduler where to put things:
+
+* **Reducer placement** (``place_reducers``) — reducer ``r`` lands on the
+  node already holding the most map-output bytes for partition ``r``
+  (``StatisticsDB.shuffle_partition_bytes``), instead of the naive ``r % N``.
+  Ties prefer the baseline node so placement is never worse than round-robin.
+* **Shuffle elision** (``plan_aggregation``) — when the input sharded set is
+  already partitioned on the aggregation key (``stats.best_replica`` finds a
+  co-partitioned replica), the shuffle is skipped outright: every node
+  aggregates its own shard and the merge is disjoint. net_bytes == 0.
+* **Read-source selection** (``read_sources``) — reads of a dead owner's
+  shard are routed to a surviving CRC-verified replica holder rather than
+  failing.
+* **Straggler re-execution** (``backup_source``) — a mapper flagged by the
+  ``watchdog.StepTimer`` gets its partitions re-executed on a node holding a
+  replica of its shard (backup tasks from replica holders, paper §7 applied
+  to execution; ``ClusterShuffle.reexecute_stragglers`` drives it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..core.statistics import ReplicaInfo
+
+
+@dataclass
+class AggregationPlan:
+    """How an aggregation over a sharded set should execute."""
+
+    co_partitioned: bool
+    replica: Optional[ReplicaInfo] = None
+    target_name: Optional[str] = None   # the sharded set to actually read
+
+    @property
+    def shuffle_free(self) -> bool:
+        return self.co_partitioned
+
+
+class ClusterScheduler:
+    """Placement decisions over a ``Cluster`` (duck-typed: anything with
+    ``nodes``, ``alive_node_ids()`` and ``stats``)."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+
+    # -- reducer placement -----------------------------------------------------
+    def baseline_placement(self, num_reducers: int) -> Dict[int, int]:
+        """The PR-1 policy: round-robin over the alive membership."""
+        alive = self.cluster.alive_node_ids()
+        return {r: alive[r % len(alive)] for r in range(num_reducers)}
+
+    def place_reducers(self, shuffle_name: str,
+                       num_reducers: int) -> Dict[int, int]:
+        """Locality-aware placement: reducer ``r`` goes to the alive node
+        holding the most map-output bytes for partition ``r``. Per-reducer
+        cross-node traffic is ``total_bytes(r) - bytes_on(chosen)``, so the
+        byte-heaviest choice minimizes it; ties fall back to the baseline
+        node, which makes the plan never worse than round-robin."""
+        stats = self.cluster.stats
+        placement = self.baseline_placement(num_reducers)
+        for r in range(num_reducers):
+            base = placement[r]
+            by_node = {n: b for n, b
+                       in stats.shuffle_partition_bytes(shuffle_name, r).items()
+                       if self.cluster.nodes[n].alive}
+            if not by_node:
+                continue
+            placement[r] = max(
+                by_node,
+                key=lambda n: (by_node[n], n == base, -n))
+        return placement
+
+    def placement_net_bytes(self, shuffle_name: str,
+                            placement: Dict[int, int]) -> int:
+        """Predicted cross-node bytes for a reducer placement (what the
+        benchmark reports next to the measured figure)."""
+        stats = self.cluster.stats
+        total = 0
+        for r, node in placement.items():
+            by_node = stats.shuffle_partition_bytes(shuffle_name, r)
+            total += sum(b for n, b in by_node.items() if n != node)
+        return total
+
+    # -- shuffle elision -------------------------------------------------------
+    def plan_aggregation(self, sset, key_field: str) -> AggregationPlan:
+        """Co-partitioned input aggregates shard-locally with zero network
+        bytes; otherwise shuffle, with reducer placement decided after the
+        map phase (it needs the byte statistics maps produce).
+
+        ``stats.best_replica`` is consulted for the *logical* dataset, so a
+        heterogeneously partitioned replica set (same records, partitioned on
+        ``key_field``, registered via ``Cluster.register_replica_set``) makes
+        the query shuffle-free even when the set handed in is not — the
+        paper's "select a Pangea replica that is the best for the query"."""
+        replica = self.cluster.stats.best_replica(sset.name, key_field)
+        target = sset
+        if (replica is not None and replica.partition_key == key_field
+                and replica.set_name != sset.name):
+            alt = self.cluster.catalog.get(replica.set_name)
+            if alt is not None and alt.partition_key == key_field:
+                target = alt
+        co = (replica is not None and replica.partition_key == key_field
+              and target.partition_key == key_field)
+        return AggregationPlan(co_partitioned=co, replica=replica,
+                               target_name=target.name)
+
+    # -- read-source selection -------------------------------------------------
+    def read_sources(self, sset, node_id: int) -> List[Tuple[int, str]]:
+        """Candidate locations for shard ``node_id`` of ``sset``, best first:
+        the primary when its owner is alive, then every alive replica holder.
+        The cluster walks these in order, CRC-verifying replica reads."""
+        info = sset.shards[node_id]
+        sources: List[Tuple[int, str]] = []
+        if self.cluster.nodes[node_id].alive:
+            sources.append((node_id, info.set_name))
+        sources.extend((holder, rep_name)
+                       for holder, rep_name in info.replicas
+                       if self.cluster.nodes[holder].alive)
+        return sources
+
+    # -- straggler re-execution ------------------------------------------------
+    def backup_source(self, sset, shard_id: int,
+                      exclude: int) -> Optional[Tuple[int, str]]:
+        """Where a straggler's map work for ``shard_id`` should re-execute:
+        the first surviving copy *not* on the straggler (the alive primary
+        when the straggler was only a backup, else a replica holder). None
+        when no such copy exists — the slow output must stand."""
+        for holder, set_name in self.read_sources(sset, shard_id):
+            if holder != exclude:
+                return holder, set_name
+        return None

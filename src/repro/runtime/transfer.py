@@ -1,0 +1,215 @@
+"""Async node-to-node transfer engine — the cluster's "network stack".
+
+PR 1 moved every byte synchronously: ``Cluster.transfer_records`` streamed
+pages inline, so reducer pulls serialized behind map finalization and behind
+each other. This module extracts the two halves:
+
+* ``copy_set`` — the mechanics: stream one locality set between two buffer
+  pools page by page (paged reads on the source, sequential writes on the
+  destination). ``Cluster.transfer_records`` is now one client of it.
+* ``TransferEngine`` — the asynchrony: a small producer/consumer thread pool
+  (BatchLoader-style) whose jobs may declare dependencies (``after=``), so a
+  reducer pull can be submitted before the map side has finalized and the
+  engine orders them. Workers exit after an idle timeout and are respawned on
+  the next submit, so short-lived clusters in tests don't accumulate threads.
+
+The buffer pool is internally locked (pin/unpin/new_page take the pool's
+RLock), which is what makes concurrent pulls through shared source pools safe.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.attributes import AttributeSet
+from ..core.services import PageIterator, SequentialWriter
+
+
+def copy_set(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
+             dtype: np.dtype, page_size: int,
+             attrs: Optional[AttributeSet] = None) -> int:
+    """Stream one locality set between pools page by page; returns bytes
+    moved. This is the wire: a paged read on the source feeding a sequential
+    write on the destination."""
+    dtype = np.dtype(dtype)
+    ls_src = src_pool.get_set(src_set_name)
+    ls_dst = dst_pool.create_set(dst_set_name, page_size, attrs)
+    writer = SequentialWriter(dst_pool, ls_dst, dtype)
+    moved = 0
+    for recs in PageIterator(src_pool, ls_src, dtype, sorted(ls_src.pages)):
+        writer.append_batch(recs)
+        moved += recs.nbytes
+    writer.close()
+    return moved
+
+
+class TransferError(RuntimeError):
+    """A transfer job failed because one of its dependencies failed."""
+
+
+class TransferFuture:
+    """Result handle for a submitted transfer job."""
+
+    def __init__(self, job_id: int, label: str = ""):
+        self.job_id = job_id
+        self.label = label
+        self._done = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"transfer job {self.label or self.job_id} "
+                               f"did not finish within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        self._done.wait(timeout)
+        return self._exc
+
+    def _finish(self, result=None, exc: Optional[BaseException] = None):
+        self._result = result
+        self._exc = exc
+        self._done.set()
+
+
+class _Job:
+    __slots__ = ("fn", "args", "kwargs", "future", "deps")
+
+    def __init__(self, fn, args, kwargs, future, deps):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+        self.future = future
+        self.deps: List[TransferFuture] = deps
+
+
+class TransferEngine:
+    """Producer/consumer job pool with dependency ordering.
+
+    ``submit(fn, *args, after=[futs])`` enqueues a job that runs only once
+    every future in ``after`` has completed; a failed dependency fails the
+    dependent with ``TransferError`` instead of running it. Jobs with no
+    pending dependencies go straight to the ready queue that worker threads
+    drain. Dependency resolution happens on completion callbacks, never by a
+    worker blocking, so the pool cannot deadlock on its own ordering.
+    """
+
+    IDLE_EXIT_S = 5.0  # workers exit after this much idleness; respawned lazily
+
+    def __init__(self, num_workers: int = 4, name: str = "transfer"):
+        self.num_workers = num_workers
+        self.name = name
+        self._ready: "queue.Queue[Optional[_Job]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._pending: List[_Job] = []      # jobs waiting on dependencies
+        self._inflight = 0                  # submitted but not finished
+        self._workers: List[threading.Thread] = []
+        self._idle = threading.Condition(self._lock)
+        self._closed = False
+        self._ids = itertools.count()
+
+    # -- worker management ----------------------------------------------------
+    def _ensure_workers(self) -> None:
+        self._workers = [t for t in self._workers if t.is_alive()]
+        while len(self._workers) < self.num_workers:
+            t = threading.Thread(target=self._worker_loop, daemon=True,
+                                 name=f"{self.name}-{len(self._workers)}")
+            t.start()
+            self._workers.append(t)
+
+    def _worker_loop(self) -> None:
+        me = threading.current_thread()
+        while True:
+            try:
+                job = self._ready.get(timeout=self.IDLE_EXIT_S)
+            except queue.Empty:
+                # idle exit — but deregister under the submit lock and
+                # re-check the queue there, so a submit that raced the
+                # timeout either finds us still listed (we loop again) or
+                # sees us gone and spawns a replacement; a job can never
+                # strand between an exiting worker and _ensure_workers
+                with self._lock:
+                    if not self._ready.empty():
+                        continue
+                    if me in self._workers:
+                        self._workers.remove(me)
+                    return
+            if job is None:  # shutdown sentinel
+                return
+            self._run(job)
+
+    def _run(self, job: _Job) -> None:
+        failed = next((d for d in job.deps if d.exception() is not None), None)
+        try:
+            if failed is not None:
+                raise TransferError(
+                    f"dependency {failed.label or failed.job_id} failed: "
+                    f"{failed.exception()!r}")
+            result = job.fn(*job.args, **job.kwargs)
+        except BaseException as exc:  # noqa: BLE001 - delivered via future
+            job.future._finish(exc=exc)
+        else:
+            job.future._finish(result=result)
+        self._on_done()
+
+    def _on_done(self) -> None:
+        with self._lock:
+            self._inflight -= 1
+            newly_ready = [j for j in self._pending
+                           if all(d.done() for d in j.deps)]
+            for j in newly_ready:
+                self._pending.remove(j)
+                self._ready.put(j)
+            self._idle.notify_all()
+
+    # -- public API ------------------------------------------------------------
+    def submit(self, fn: Callable, *args,
+               after: Sequence[TransferFuture] = (),
+               label: str = "", **kwargs) -> TransferFuture:
+        if self._closed:
+            raise RuntimeError("engine is shut down")
+        future = TransferFuture(next(self._ids), label or getattr(fn, "__name__", ""))
+        job = _Job(fn, args, kwargs, future, list(after))
+        with self._lock:
+            self._inflight += 1
+            self._ensure_workers()
+            if all(d.done() for d in job.deps):
+                self._ready.put(job)
+            else:
+                self._pending.append(job)
+        return future
+
+    def map(self, fn: Callable, items: Sequence,
+            after: Sequence[TransferFuture] = ()) -> List[TransferFuture]:
+        return [self.submit(fn, item, after=after) for item in items]
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted job has finished."""
+        with self._idle:
+            if not self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout):
+                raise TimeoutError(
+                    f"{self._inflight} transfer jobs still in flight")
+
+    def shutdown(self) -> None:
+        """Finish outstanding work, then stop the workers."""
+        self.drain()
+        self._closed = True
+        for _ in self._workers:
+            self._ready.put(None)
+
+    def __enter__(self) -> "TransferEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

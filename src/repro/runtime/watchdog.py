@@ -5,6 +5,7 @@ logic (what to do when) is what this module owns and what the tests cover.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from dataclasses import dataclass, field
@@ -70,17 +71,31 @@ class StepTimer:
         self.count: Dict[int, int] = {h: 0 for h in hosts}
 
     def record(self, host: int, step_time: float) -> None:
-        c = self.count[host]
+        c = self.count.get(host, 0)
         self.ewma[host] = (step_time if c == 0
                            else (1 - self.alpha) * self.ewma[host]
                            + self.alpha * step_time)
         self.count[host] = c + 1
 
-    def stragglers(self) -> List[int]:
+    @contextlib.contextmanager
+    def time(self, host: int,
+             clock: Callable[[], float] = time.perf_counter):
+        """Time a block of work on ``host`` and record it as one step — how
+        the cluster map phase feeds the straggler detector."""
+        t0 = clock()
+        try:
+            yield
+        finally:
+            self.record(host, clock() - t0)
+
+    def stragglers(self, min_samples: Optional[int] = None) -> List[int]:
         """Robust detection: median + k * 1.4826 * MAD (a lone extreme host
         can't inflate the threshold the way it inflates a stddev), with a
-        20%-of-median floor so benign jitter never triggers."""
-        ready = [h for h, c in self.count.items() if c >= self.min_samples]
+        20%-of-median floor so benign jitter never triggers. ``min_samples``
+        overrides the instance default — one-shot phases (a single map pass
+        per host) pass 1, long-running pipelines keep the warmup guard."""
+        need = self.min_samples if min_samples is None else min_samples
+        ready = [h for h, c in self.count.items() if c >= need]
         if len(ready) < 2:
             return []
         vals = sorted(self.ewma[h] for h in ready)

@@ -153,8 +153,9 @@ def test_pipeline_cluster_aggregate_cleans_up():
 
 
 # -- replica-based recovery --------------------------------------------------
-def test_dead_node_access_raises():
-    cluster = _cluster()
+def test_dead_node_access_raises_without_replicas():
+    """With no replicas, a dead owner really is unreadable."""
+    cluster = _cluster(replication_factor=0)
     recs = _pairs(4_000, 100, seed=8)
     sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
     cluster.kill_node(1)
@@ -162,6 +163,21 @@ def test_dead_node_access_raises():
         cluster.read_shard(sset, 1)
     with pytest.raises(DeadNodeError):
         cluster.read_sharded(sset)
+
+
+def test_dead_node_reads_fall_back_to_replica():
+    """The PR-1 bug: a dead node with surviving replicas still killed reads.
+    Reads now route to a CRC-verified replica holder."""
+    cluster = _cluster()
+    recs = _pairs(4_000, 100, seed=8)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    lost = np.sort(cluster.read_shard(sset, 1)["key"]).copy()
+    cluster.kill_node(1)
+    holder, shard = cluster.read_shard_from(sset, 1)
+    assert holder != 1 and cluster.nodes[holder].alive
+    assert np.array_equal(np.sort(shard["key"]), lost)
+    back = cluster.read_sharded(sset)  # whole-set read survives the loss
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
 
 
 @pytest.mark.parametrize("victim", [0, 1, 2, 3])

@@ -1,0 +1,442 @@
+"""Scheduler-driven execution: locality-aware reducer placement, shuffle
+elision for co-partitioned inputs, overlapped async pulls, straggler
+re-execution from replica holders, and elastic remesh-degrade.
+
+The ISSUE-2 acceptance scenarios: net_bytes == 0 for a co-partitioned hash
+aggregation, and locality-aware placement strictly below the ``r % N``
+baseline on a skewed shuffle.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (DistributedBatchLoader, cluster_aggregate,
+                                 write_sharded_token_dataset)
+from repro.runtime.cluster import (Cluster, ClusterShuffle, DeadNodeError,
+                                   cluster_hash_aggregate)
+from repro.runtime.scheduler import ClusterScheduler
+from repro.runtime.transfer import TransferEngine, TransferError
+from repro.runtime.watchdog import StepTimer
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def _pairs(n, key_range, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, key_range, n)
+    recs["val"] = rng.random(n)
+    return recs
+
+
+def _cluster(replication_factor=1, **kw):
+    kw.setdefault("node_capacity", 16 << 20)
+    kw.setdefault("page_size", 1 << 16)
+    return Cluster(4, replication_factor=replication_factor, **kw)
+
+
+def _oracle(recs):
+    uk, inv = np.unique(recs["key"], return_inverse=True)
+    out = np.zeros(len(uk))
+    np.add.at(out, inv, recs["val"])
+    return uk, out
+
+
+# -- transfer engine ----------------------------------------------------------
+def test_transfer_engine_runs_jobs_and_returns_results():
+    with TransferEngine(num_workers=3) as eng:
+        futs = [eng.submit(lambda x: x * x, i) for i in range(10)]
+        assert [f.result(timeout=10) for f in futs] == [i * i for i in range(10)]
+
+
+def test_transfer_engine_orders_dependencies():
+    order = []
+    lock = threading.Lock()
+
+    def step(tag, delay=0.0):
+        time.sleep(delay)
+        with lock:
+            order.append(tag)
+        return tag
+
+    with TransferEngine(num_workers=4) as eng:
+        slow = eng.submit(step, "first", 0.05)
+        dep = eng.submit(step, "second", after=[slow])
+        assert dep.result(timeout=10) == "second"
+        assert order == ["first", "second"]
+
+
+def test_transfer_engine_propagates_dependency_failure():
+    def boom():
+        raise ValueError("boom")
+
+    with TransferEngine(num_workers=2) as eng:
+        bad = eng.submit(boom)
+        dep = eng.submit(lambda: "ran", after=[bad])
+        with pytest.raises(ValueError):
+            bad.result(timeout=10)
+        with pytest.raises(TransferError):
+            dep.result(timeout=10)
+
+
+def test_transfer_engine_drain_waits_for_everything():
+    done = []
+    with TransferEngine(num_workers=2) as eng:
+        for i in range(6):
+            eng.submit(lambda j: done.append(j) or time.sleep(0.01), i)
+        eng.drain(timeout=10)
+        assert len(done) == 6
+
+
+# -- locality-aware reducer placement ----------------------------------------
+def _skewed_shuffle(cluster, num_reducers=4, rows_heavy=4000, rows_light=50):
+    """Hand-built map outputs: partition r's bytes are concentrated on node
+    (r + 1) % N, so the r % N baseline is maximally wrong."""
+    sh = ClusterShuffle(cluster, "skew", num_reducers, PAIR)
+    rng = np.random.default_rng(0)
+    # find keys that hash to each reducer partition
+    probe = np.arange(200_000, dtype=np.int64)
+    part = sh.partition_of_keys(probe)
+    for r in range(num_reducers):
+        heavy_node = (r + 1) % cluster.num_nodes
+        keys = probe[part == r]
+        heavy = np.zeros(rows_heavy, PAIR)
+        heavy["key"] = rng.choice(keys, rows_heavy)
+        heavy["val"] = rng.random(rows_heavy)
+        sh.map_batch(heavy_node, heavy, key_fn=lambda p: p["key"])
+        for n in range(cluster.num_nodes):
+            if n == heavy_node:
+                continue
+            light = np.zeros(rows_light, PAIR)
+            light["key"] = rng.choice(keys, rows_light)
+            light["val"] = rng.random(rows_light)
+            sh.map_batch(n, light, key_fn=lambda p: p["key"])
+    sh.finish_maps()
+    return sh
+
+
+def test_locality_placement_picks_byte_heaviest_node():
+    cluster = _cluster(replication_factor=0)
+    sh = _skewed_shuffle(cluster)
+    placement = cluster.scheduler.place_reducers("skew", 4)
+    for r in range(4):
+        assert placement[r] == (r + 1) % 4  # the heavy node, not r % 4
+    by_node = cluster.stats.shuffle_partition_bytes("skew", 0)
+    assert max(by_node, key=by_node.get) == placement[0]
+
+
+def test_locality_placement_strictly_reduces_net_bytes():
+    baseline = _cluster(replication_factor=0)
+    sh = _skewed_shuffle(baseline)
+    b0 = baseline.net_bytes
+    for r in range(4):
+        sh.pull(r)  # default r % N placement
+    baseline_net = baseline.net_bytes - b0
+
+    local = _cluster(replication_factor=0)
+    sh2 = _skewed_shuffle(local)
+    sh2.place_reducers_locally()
+    predicted = local.scheduler.placement_net_bytes("skew", sh2.placement)
+    b0 = local.net_bytes
+    for r in range(4):
+        sh2.pull(r)
+    locality_net = local.net_bytes - b0
+
+    assert locality_net < baseline_net
+    assert locality_net == predicted  # the plan's cost model is exact
+
+
+def test_locality_placement_never_worse_on_uniform_data():
+    """On hash-uniform data the byte-heaviest node is arbitrary, but the
+    chosen plan can never move more bytes than round-robin."""
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(20_000, 1 << 40, seed=2)
+    sset = cluster.create_sharded_set("u", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "u.sh", 8, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    sched = cluster.scheduler
+    base_net = sched.placement_net_bytes("u.sh", sched.baseline_placement(8))
+    loc_net = sched.placement_net_bytes("u.sh", sched.place_reducers("u.sh", 8))
+    assert loc_net <= base_net
+
+
+# -- co-partitioned shuffle elision ------------------------------------------
+def test_co_partitioned_aggregation_moves_zero_network_bytes():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(30_000, 2_000, seed=3)
+    sset = cluster.create_sharded_set("sales", recs,
+                                      key_fn=lambda r: r["key"],
+                                      partition_key="key")
+    plan = cluster.scheduler.plan_aggregation(sset, "key")
+    assert plan.shuffle_free
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val")
+    assert cluster.net_bytes == 0  # the ISSUE-2 acceptance criterion
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+
+
+def test_non_co_partitioned_aggregation_still_shuffles():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(20_000, 1_000, seed=4)
+    # partitioned on the set name (default), not on "key" -> no elision
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    assert not cluster.scheduler.plan_aggregation(sset, "key").shuffle_free
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val")
+    assert cluster.net_bytes > 0
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+
+
+def test_query_routes_to_co_partitioned_replica_set():
+    """Heterogeneous replicas through the pools: the same logical records
+    registered under a by-key partitioning make the aggregation shuffle-free
+    even when queried through the non-co-partitioned set."""
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(12_000, 800, seed=18)
+    src = cluster.create_sharded_set("orders", recs,
+                                     key_fn=lambda r: r["val"].astype(np.int64))
+    by_key = cluster.create_sharded_set("orders_by_key", recs,
+                                        key_fn=lambda r: r["key"],
+                                        partition_key="key")
+    cluster.register_replica_set("orders", by_key)
+    plan = cluster.scheduler.plan_aggregation(src, "key")
+    assert plan.shuffle_free and plan.target_name == "orders_by_key"
+    base_net = cluster.net_bytes
+    keys, vals = cluster_hash_aggregate(cluster, src, "key", "val")
+    assert cluster.net_bytes == base_net  # the replica made it shuffle-free
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+
+
+def test_pipeline_cluster_aggregate_is_shuffle_free_by_default():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(15_000, 700, seed=5)
+    keys, vals = cluster_aggregate(cluster, "s", recs, "key", "val")
+    assert cluster.net_bytes == 0
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+    # and the shuffle path is still reachable on demand
+    k2, v2 = cluster_aggregate(cluster, "s2", recs, "key", "val",
+                               force_shuffle=True)
+    assert cluster.net_bytes > 0
+    np.testing.assert_allclose(v2, oracle, rtol=1e-9)
+
+
+# -- async pulls --------------------------------------------------------------
+def test_async_pull_matches_sync_results():
+    recs = _pairs(40_000, 3_000, seed=6)
+    results = {}
+    for mode in (True, False):
+        cluster = _cluster(replication_factor=0)
+        sset = cluster.create_sharded_set("a", recs, key_fn=lambda r: r["key"])
+        results[mode] = cluster_hash_aggregate(cluster, sset, "key", "val",
+                                               num_reducers=8,
+                                               async_pull=mode)
+    (k_async, v_async), (k_sync, v_sync) = results[True], results[False]
+    assert np.array_equal(k_async, k_sync)
+    np.testing.assert_allclose(v_async, v_sync, rtol=1e-12)
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(k_async, uk)
+    np.testing.assert_allclose(v_async, oracle, rtol=1e-9)
+
+
+def test_concurrent_async_pulls_are_disjoint_and_complete():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(25_000, 1 << 40, seed=7)
+    sset = cluster.create_sharded_set("p", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "p.sh", 8, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    fin = sh.finish_maps_async()
+    placed = cluster.transfer.submit(sh.place_reducers_locally, after=fin)
+    futs = [sh.pull_async(r, after=[placed]) for r in range(8)]
+    pulled = [f.result(timeout=60) for f in futs]
+    allk = np.concatenate([p["key"] for p in pulled])
+    assert len(allk) == len(recs)
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+    for r, part in enumerate(pulled):
+        assert (sh.partition_of_keys(part["key"]) == r).all()
+
+
+# -- straggler re-execution ---------------------------------------------------
+def test_straggler_map_work_reexecuted_from_replica_holder():
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(20_000, 1_500, seed=8)
+    sset = cluster.create_sharded_set("st", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "st.sh", 4, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    # deterministic detector input: node 2 is 10x slower than its peers
+    timer = StepTimer(hosts=list(cluster.nodes), min_samples=1)
+    for n in cluster.nodes:
+        for _ in range(5):
+            timer.record(n, 1.0 if n != 2 else 10.0)
+    assert timer.stragglers() == [2]
+    redone = sh.reexecute_stragglers(timer.stragglers())
+    assert redone, "straggler work was not re-executed"
+    straggler, backup = redone[0]
+    assert straggler == 2 and backup != 2
+    assert (backup, sset.replica_set_name(2, backup)) in \
+        [(h, n) for h, n in sset.shards[2].replicas]
+    assert 2 not in sh._services  # the slow mapper's output was discarded
+    sh.finish_maps()
+    pulled = [sh.pull(r) for r in range(4)]
+    allk = np.concatenate([p["key"] for p in pulled])
+    # nothing lost, nothing double-counted
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+
+
+def test_map_times_attributed_to_executing_worker():
+    """A dead owner's shard is mapped by its replica holder, so the step
+    time must be charged to the holder — flagging the dead node would make
+    re-execution a no-op (it has no work items)."""
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(8_000, 400, seed=19)
+    sset = cluster.create_sharded_set("w", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(1)
+    sh = ClusterShuffle(cluster, "w.sh", 4, PAIR)
+    timer = StepTimer(hosts=[])
+    sh.map_sharded(sset, key_fn=lambda r: r["key"], step_timer=timer)
+    assert 1 not in timer.count          # dead node never executed map work
+    assert sum(timer.count.values()) == len(sset.shards)
+    sh.finish_maps()
+    allk = np.concatenate([sh.pull(r)["key"] for r in range(4)])
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+
+
+def test_straggler_without_replica_keeps_its_output():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(8_000, 500, seed=9)
+    sset = cluster.create_sharded_set("st0", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "st0.sh", 4, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    assert sh.reexecute_stragglers([1]) == []
+    sh.finish_maps()
+    allk = np.concatenate([sh.pull(r)["key"] for r in range(4)])
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+
+
+def test_straggler_with_untracked_map_batch_output_is_not_discarded():
+    """Records fed through the raw map_batch API have no work item to
+    replay; discarding the straggler's service would silently lose them, so
+    re-execution must refuse and keep the slow output."""
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(10_000, 600, seed=20)
+    sset = cluster.create_sharded_set("mx", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "mx.sh", 4, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    extra = _pairs(500, 600, seed=21)
+    sh.map_batch(2, extra, key_fn=lambda p: p["key"])  # untracked records
+    assert sh.reexecute_stragglers([2]) == []
+    sh.finish_maps()
+    allk = np.concatenate([sh.pull(r)["key"] for r in range(4)])
+    assert len(allk) == len(recs) + len(extra)  # nothing lost
+
+
+def test_aggregation_with_straggler_reexecution_matches_oracle():
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(25_000, 1_200, seed=10)
+    sset = cluster.create_sharded_set("agg", recs, key_fn=lambda r: r["key"])
+    timer = StepTimer(hosts=list(cluster.nodes), min_samples=1)
+    for n in cluster.nodes:  # pre-bias the EWMA so node 0 is flagged
+        for _ in range(8):
+            timer.record(n, 20.0 if n == 0 else 1e-4)
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val",
+                                        step_timer=timer)
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+
+
+# -- elastic remesh degrade ---------------------------------------------------
+def test_remesh_degrade_shrinks_and_preserves_data():
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(20_000, 1_500, seed=11)
+    sset = cluster.create_sharded_set("d", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(2)
+    report = cluster.remesh_degrade()
+    assert report.ok
+    assert report.dead_nodes == [2]
+    assert report.node_ids == [0, 1, 3]
+    assert report.plan["mesh_shape"] == (3, 1)
+    assert "d" in report.resharded
+    assert sset.node_ids == [0, 1, 3]      # handle updated in place
+    assert sorted(sset.shards) == [0, 1, 3]
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+    # placement routing is consistent with the shrunk domain
+    for n in [0, 1, 3]:
+        shard = cluster.read_shard(sset, n)
+        if len(shard):
+            assert (sset.node_of_records(shard) == n).all()
+
+
+def test_remesh_degrade_then_aggregate_and_create():
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(18_000, 900, seed=12)
+    sset = cluster.create_sharded_set("d2", recs, key_fn=lambda r: r["key"],
+                                      partition_key="key")
+    cluster.kill_node(1)
+    assert cluster.remesh_degrade().ok
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val")
+    uk, oracle = _oracle(recs)
+    assert np.array_equal(keys, uk)
+    np.testing.assert_allclose(vals, oracle, rtol=1e-9)
+    # new sets place on the surviving membership only
+    more = _pairs(4_000, 100, seed=13)
+    s2 = cluster.create_sharded_set("d3", more, key_fn=lambda r: r["key"])
+    assert s2.node_ids == [0, 2, 3]
+
+
+def test_remesh_degrade_reports_lost_sets_without_replicas():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(6_000, 300, seed=14)
+    cluster.create_sharded_set("gone", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(0)
+    report = cluster.remesh_degrade()
+    assert not report.ok
+    assert report.lost == ["gone"]
+
+
+def test_remesh_degrade_two_failures_with_two_replicas():
+    cluster = _cluster(replication_factor=2)
+    recs = _pairs(12_000, 600, seed=15)
+    sset = cluster.create_sharded_set("d4", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(0)
+    cluster.kill_node(3)
+    report = cluster.remesh_degrade()
+    assert report.ok and report.node_ids == [1, 2]
+    assert sset.replication_factor == 1    # clamped to the shrunk membership
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+
+
+# -- scheduler-driven batch loader -------------------------------------------
+def test_distributed_loader_prefetches_and_survives_node_loss():
+    cluster = _cluster(replication_factor=1)
+    rng = np.random.default_rng(16)
+    toks = rng.integers(0, 1000, (512, 32), dtype=np.int32)
+    sset = write_sharded_token_dataset(cluster, "tok", toks)
+    cluster.kill_node(1)  # loader must read node 1's shard from its replica
+    loader = DistributedBatchLoader(cluster, sset, batch_size=64, prefetch=2)
+    batches = list(loader)
+    assert len(batches) == 8
+    seen = np.concatenate([b["tokens"] for b in batches])
+    assert np.array_equal(np.sort(seen[:, 0]), np.sort(toks[:, 0]))
+
+
+def test_scheduler_read_sources_prefers_primary():
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(4_000, 100, seed=17)
+    sset = cluster.create_sharded_set("rs", recs, key_fn=lambda r: r["key"])
+    sched = ClusterScheduler(cluster)
+    sources = sched.read_sources(sset, 0)
+    assert sources[0] == (0, sset.primary_set_name(0))
+    cluster.kill_node(0)
+    sources = sched.read_sources(sset, 0)
+    assert sources and all(h != 0 for h, _ in sources)
