@@ -5,7 +5,10 @@ plus the distributed shuffle through a real N-node cluster of buffer pools:
 the ``r % N`` reducer-placement baseline vs the scheduler's locality-aware
 placement (reducer on the byte-heaviest map node, overlapped async pulls),
 and the co-partitioned aggregation that elides the shuffle entirely
-(net_bytes == 0)."""
+(net_bytes == 0). The over-capacity configuration (pool < map output) drives
+cross-node shuffle spill through the per-node MemoryManagers and compares the
+paper's data-aware eviction against global LRU (spill bytes, page faults,
+wall time)."""
 from __future__ import annotations
 
 import numpy as np
@@ -98,6 +101,34 @@ def _cluster_shuffle(n: int, locality: bool) -> Cluster:
     return cluster
 
 
+def _over_capacity_shuffle(n: int, policy: str):
+    """ISSUE-3 acceptance workload: total map output >= 2x per-node pool
+    capacity, so map-side job data and the already-consumed source shards
+    must page through the eviction policy, and reducer pulls fault spilled
+    map output back in. Compares the paper's data-aware policy against the
+    global-LRU baseline on the same over-committed cluster."""
+    total_bytes = n * PAIR.itemsize
+    cap = max(256 << 10, total_bytes // 4)       # >= 2x over-commit when full
+    cluster = Cluster(NODES, node_capacity=cap, page_size=1 << 14,
+                      replication_factor=0, policy=policy)
+    rng = np.random.default_rng(0)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, 1 << 40, n)
+    recs["val"] = rng.random(n)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    cluster_hash_aggregate(cluster, sset, "key", "val", num_reducers=NODES,
+                           hash_page_size=1 << 14, force_shuffle=True)
+    spill = sum(node.memory.stats["spill_bytes"]
+                for node in cluster.nodes.values())
+    fetch = sum(node.memory.stats["fetch_bytes"]
+                for node in cluster.nodes.values())
+    faults = sum(node.pool.spill.read_ops for node in cluster.nodes.values())
+    cluster.shutdown()
+    return {"spill_bytes": spill, "fetch_bytes": fetch, "faults": faults,
+            "net_bytes": cluster.net_bytes, "node_capacity": cap,
+            "overcommit": total_bytes / cap}
+
+
 def _co_partitioned_agg(n: int) -> Cluster:
     """The §9.2.2 co-partitioned case: input staged partitioned on the
     aggregation key, so the scheduler elides the shuffle (net_bytes == 0)."""
@@ -145,6 +176,29 @@ def run() -> None:
         record(f"shuffle/cluster{NODES}node/copartitioned_agg/n{n}", ta * 1e6,
                f"recs_per_s={n/ta:.0f};net_bytes={last[-1].net_bytes}",
                recs_per_s=n / ta, net_bytes=last[-1].net_bytes)
+
+    # over-capacity shuffle: pool < map output, data-aware vs global LRU
+    n = scaled(200_000)
+    over = {}
+    for policy in ("data-aware", "lru"):
+        stats = []
+        t = timeit(lambda: stats.append(_over_capacity_shuffle(n, policy)))
+        s = stats[-1]
+        over[policy] = (t, s)
+        record(f"shuffle/cluster{NODES}node/overcap/{policy}/n{n}", t * 1e6,
+               f"spill_mb={s['spill_bytes']/1e6:.2f};"
+               f"faults={s['faults']};"
+               f"overcommit={s['overcommit']:.1f}x",
+               recs_per_s=n / t, policy=policy, **s)
+    (td, sd), (tl, sl) = over["data-aware"], over["lru"]
+    record(f"shuffle/cluster{NODES}node/overcap_gain/n{n}", 0.0,
+           f"fault_ratio={sd['faults']/max(1, sl['faults']):.3f};"
+           f"time_ratio={td/tl:.3f}",
+           faults_data_aware=sd["faults"], faults_lru=sl["faults"],
+           spill_bytes_data_aware=sd["spill_bytes"],
+           spill_bytes_lru=sl["spill_bytes"],
+           seconds_data_aware=td, seconds_lru=tl,
+           data_aware_wins=bool(sd["faults"] < sl["faults"] or td < tl))
 
 
 if __name__ == "__main__":

@@ -8,7 +8,9 @@ import os
 import time
 from typing import Callable, Dict, List, Optional
 
-SCHEMA_VERSION = 1
+# v2: overcap shuffle rows (spill_bytes / fetch_bytes / faults / overcommit
+# / data_aware_wins) joined the cluster artifact
+SCHEMA_VERSION = 2
 
 ROWS: List[dict] = []
 

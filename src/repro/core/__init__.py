@@ -8,10 +8,12 @@ from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
 from .buffer_pool import BufferPool, PoolExhaustedError, SpillStore
 from .kvcache import HBMExhaustedError, PagedKVCache
 from .locality_set import LocalitySet, Page
+from .memory_manager import MemoryManager, MemoryReservation
 from .paging import PagingSystem, eviction_overhead
 from .replication import (DistributedSet, PartitionScheme, ReplicaRegistration,
-                          expected_conflicts, fail_node, partition_set,
-                          random_dispatch, recover_source_shard,
+                          combine_content_checksums, expected_conflicts,
+                          fail_node, partition_set, random_dispatch,
+                          record_content_checksum, recover_source_shard,
                           recover_target_shard, register_replica,
                           replica_nodes, shard_checksum)
 from .services import (HashService, PageIterator, SequentialWriter,
@@ -24,7 +26,8 @@ from .tlsf import TLSF
 __all__ = [
     "AttributeSet", "BufferPool", "CurrentOperation", "DistributedSet",
     "DurabilityType", "EvictionStrategy", "HBMExhaustedError", "HashService",
-    "Lifetime", "LocalitySet", "Location", "Page", "PagedKVCache",
+    "Lifetime", "LocalitySet", "Location", "MemoryManager",
+    "MemoryReservation", "Page", "PagedKVCache",
     "PageIterator", "PagingSystem", "PartitionScheme", "PoolExhaustedError",
     "ReadingPattern", "ReplicaInfo", "ReplicaRegistration", "SequentialWriter",
     "ShuffleService", "SpillStore", "StatisticsDB", "TLSF",
@@ -32,7 +35,8 @@ __all__ = [
     "eviction_ratio", "expected_conflicts", "fail_node", "get_page_iterators",
     "as_record_bytes", "from_record_bytes", "job_data_attrs",
     "join_service", "partition_set", "random_dispatch", "read_all",
-    "replica_nodes", "shard_checksum",
+    "replica_nodes", "shard_checksum", "record_content_checksum",
+    "combine_content_checksums",
     "recover_source_shard", "recover_target_shard", "register_replica",
     "select_strategy", "spilling_cost",
 ]

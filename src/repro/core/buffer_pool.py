@@ -4,68 +4,30 @@ One pool manages *all* data (user data, job data, shuffle data, hash data, KV
 pages, dataset staging) in a single shared arena, the monolithic alternative to
 per-layer caches. Pages are allocated from the arena by a TLSF allocator
 (paper §5); callers receive zero-copy numpy views (the mmap shared-memory
-analogue). Pin/unpin with reference counting; eviction is delegated to the
-data-aware PagingSystem (paper §6); spilled pages go to a SpillStore ("disk").
+analogue). Pin/unpin with reference counting.
+
+Since PR 3 everything pressure-related — the data-aware ``PagingSystem``
+(paper §6), the ``SpillStore``, resident/pinned/spilled accounting with
+high-water marks, and the ``reserve``/``under_pressure`` backpressure API —
+is owned by the per-node ``MemoryManager`` (``core/memory_manager.py``); the
+pool is the arena + page mechanics and delegates policy to its manager
+(``pool.memory``). ``pool.paging`` / ``pool.spill`` / ``pool.stats`` remain
+as views into the manager for existing callers.
 """
 from __future__ import annotations
 
-import os
-import tempfile
 import threading
 from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from .attributes import AttributeSet, CurrentOperation, DurabilityType, Lifetime
+from .attributes import AttributeSet, DurabilityType, Lifetime
 from .locality_set import LocalitySet, Page
+from .memory_manager import MemoryManager, SpillStore
 from .paging import PagingSystem
 from .tlsf import TLSF
 
-
-class SpillStore:
-    """Secondary storage for evicted pages. In-memory by default; set
-    ``directory`` to spill to real files (used by the I/O benchmarks)."""
-
-    def __init__(self, directory: Optional[str] = None):
-        self.directory = directory
-        self._mem: Dict[int, bytes] = {}
-        self.bytes_written = 0
-        self.bytes_read = 0
-        self.write_ops = 0
-        self.read_ops = 0
-        if directory:
-            os.makedirs(directory, exist_ok=True)
-
-    def _path(self, page_id: int) -> str:
-        return os.path.join(self.directory, f"page_{page_id}.bin")
-
-    def write(self, page_id: int, data: bytes) -> None:
-        self.bytes_written += len(data)
-        self.write_ops += 1
-        if self.directory:
-            with open(self._path(page_id), "wb") as f:
-                f.write(data)
-        else:
-            self._mem[page_id] = bytes(data)
-
-    def read(self, page_id: int) -> bytes:
-        self.read_ops += 1
-        if self.directory:
-            with open(self._path(page_id), "rb") as f:
-                data = f.read()
-        else:
-            data = self._mem[page_id]
-        self.bytes_read += len(data)
-        return data
-
-    def delete(self, page_id: int) -> None:
-        if self.directory:
-            try:
-                os.remove(self._path(page_id))
-            except FileNotFoundError:
-                pass
-        else:
-            self._mem.pop(page_id, None)
+__all__ = ["BufferPool", "PoolExhaustedError", "SpillStore", "MemoryManager"]
 
 
 class PoolExhaustedError(MemoryError):
@@ -77,22 +39,33 @@ class BufferPool:
     """Monolithic pool over a single arena (paper §5).
 
     ``capacity`` bytes of "RAM"; everything beyond that spills through the
-    data-aware paging system to ``spill_store``.
+    data-aware paging system to the memory manager's spill store.
     """
 
     def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
-                 policy: str = "data-aware"):
+                 policy: str = "data-aware",
+                 memory: Optional[MemoryManager] = None):
         self.capacity = capacity
         self.arena = np.zeros(capacity, dtype=np.uint8)
         self.tlsf = TLSF(capacity)
-        self.spill = spill_store or SpillStore()
-        self.paging = PagingSystem(policy)
+        self.memory = memory or MemoryManager(capacity, spill_store, policy)
         self.clock = 1  # logical time (paper: AccessRecency integers)
         self._pages: Dict[int, Page] = {}
         self._next_page_id = 0
         self._lock = threading.RLock()
-        self.stats = {"evictions": 0, "spill_bytes": 0, "fetch_bytes": 0,
-                      "alloc_retries": 0}
+
+    # -- delegation views (pre-PR-3 public surface) -----------------------------
+    @property
+    def spill(self) -> SpillStore:
+        return self.memory.spill
+
+    @property
+    def paging(self) -> PagingSystem:
+        return self.memory.paging
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.memory.stats
 
     # -- locality-set lifecycle -------------------------------------------------
     def create_set(self, name: str, page_size: int,
@@ -107,15 +80,39 @@ class BufferPool:
     def get_set(self, name: str) -> LocalitySet:
         return self.paging.sets[name]
 
+    def rename_set(self, ls: LocalitySet, new_name: str) -> LocalitySet:
+        """Re-key a locality set (streaming remesh writes a shard under a
+        staging name, then renames it into place once the old shard's pages
+        are gone). Page ids are pool-global, so spill images carry over."""
+        with self._lock:
+            if new_name == ls.name:
+                return ls
+            if new_name in self.paging.sets:
+                raise ValueError(f"locality set {new_name!r} already exists")
+            self.paging.unregister(ls.name)
+            ls.name = new_name
+            for page in ls.pages.values():
+                page.set_name = new_name
+            self.paging.register(ls, self.clock)
+            return ls
+
     def drop_set(self, ls: LocalitySet) -> None:
-        """Free every page (lifetime over, data discarded)."""
+        """Free every page (lifetime over, data discarded) — including any
+        spill images, which otherwise leak in the spill store."""
         with self._lock:
             for page in list(ls.pages.values()):
+                if page.pinned:  # dropped out from under a holder
+                    self.memory.note_unpinned(page.size)
+                    page.pin_count = 0
+                paged_out = page.spilled and not page.resident
                 if page.resident:
                     self.tlsf.free(page.offset)
+                    self.memory.note_free(page.size)
                     page.offset = None
                 if page.spilled:
-                    self.spill.delete(page.page_id)
+                    self.memory.discard_spilled(page.page_id, page.size,
+                                                paged_out)
+                    page.spilled = False
                 self._pages.pop(page.page_id, None)
             ls.pages.clear()
             self.paging.unregister(ls.name)
@@ -133,6 +130,8 @@ class BufferPool:
             page = Page(page_id=self._next_page_id, set_name=ls.name, size=size,
                         offset=offset, pin_count=1, dirty=True,
                         last_access=self._tick())
+            self.memory.note_alloc(size)
+            self.memory.note_pinned(size)
             self._next_page_id += 1
             ls.pages[page.page_id] = page
             self._pages[page.page_id] = page
@@ -152,12 +151,16 @@ class BufferPool:
             if not page.resident:
                 offset = self._alloc_with_eviction(page.size)
                 page.offset = offset
+                self.memory.note_alloc(page.size)
                 if page.spilled:
                     data = np.frombuffer(self.spill.read(page.page_id), dtype=np.uint8)
                     self.arena[offset:offset + page.size] = data
                     ls.stats["fetch_bytes"] += page.size
-                    self.stats["fetch_bytes"] += page.size
+                    self.memory.note_fetched(page.size)
+                    self.memory.note_paged_in(page.size)
                 page.dirty = False
+            if page.pin_count == 0:
+                self.memory.note_pinned(page.size)
             page.pin_count += 1
             page.last_access = self._tick()
             return self.view(page)
@@ -167,11 +170,13 @@ class BufferPool:
             if page.pin_count <= 0:
                 raise ValueError(f"unpin of unpinned page {page.page_id}")
             page.pin_count -= 1
+            if page.pin_count == 0:
+                self.memory.note_unpinned(page.size)
             page.dirty = page.dirty or dirty
             ls = self.get_set(page.set_name)
             # write-through: persist immediately once written (paper §4)
             if (page.dirty and ls.attrs.durability == DurabilityType.WRITE_THROUGH):
-                self._spill_page(ls, page, count_eviction=False)
+                self._spill_page(ls, page)
                 page.dirty = False
                 page.spilled = True
 
@@ -180,7 +185,7 @@ class BufferPool:
         offset = self.tlsf.alloc(size)
         while offset is None:
             self.stats["alloc_retries"] += 1
-            picked = self.paging.pick_victims(self.clock)
+            picked = self.memory.paging.pick_victims(self.clock)
             if picked is None:
                 raise PoolExhaustedError(
                     f"cannot allocate {size}B: all resident pages pinned "
@@ -197,12 +202,12 @@ class BufferPool:
             offset = self.tlsf.alloc(size)
         return offset
 
-    def _spill_page(self, ls: LocalitySet, page: Page, count_eviction: bool = True) -> None:
+    def _spill_page(self, ls: LocalitySet, page: Page) -> None:
         data = self.arena[page.offset:page.offset + page.size].tobytes()
         self.spill.write(page.page_id, data)
         page.spilled = True
         ls.stats["spill_bytes"] += page.size
-        self.stats["spill_bytes"] += page.size
+        self.memory.note_spilled(page.size)
 
     def _evict_page(self, ls: LocalitySet, page: Page) -> None:
         assert page.resident and not page.pinned
@@ -210,14 +215,20 @@ class BufferPool:
             self._spill_page(ls, page)
         page.dirty = False
         self.tlsf.free(page.offset)
+        self.memory.note_free(page.size)
         page.offset = None
         ls.stats["evictions"] += 1
         self.stats["evictions"] += 1
         if ls.attrs.lifetime == Lifetime.ENDED:
-            # data will never be read again; drop any spill image too
+            # data will never be read again; drop any spill image too (it
+            # was a copy of a resident page, so it never counted as paged out)
             if page.spilled:
-                self.spill.delete(page.page_id)
+                self.memory.discard_spilled(page.page_id, page.size,
+                                            paged_out=False)
                 page.spilled = False
+        elif page.spilled:
+            # the page's only live copy is now on "disk": that is pressure
+            self.memory.note_paged_out(page.size)
 
     # -- iteration helper (sequential-read service uses this) ----------------------
     def iter_pages(self, ls: LocalitySet) -> Iterator[Page]:

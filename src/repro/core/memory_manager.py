@@ -1,0 +1,264 @@
+"""Per-node memory authority — eviction policy promoted out of the pool.
+
+The paper's §6 data-aware eviction was a ``BufferPool`` internal, which meant
+only the pool's own allocation path could see or react to memory pressure.
+The ``MemoryManager`` owns everything pressure-related for one node:
+
+* the ``PagingSystem`` (Eq. 1 / Algorithm 1 victim selection) and the
+  ``SpillStore`` the victims land in;
+* pressure accounting — resident / pinned / spilled / reserved bytes with
+  high-water marks, so "how close to the cliff did this workload get" is a
+  first-class, assertable number (the streaming-remesh driver budget and the
+  reducer pull staging both run through ``reserve``);
+* the backpressure API — ``reserve(nbytes)`` for staging buffers that live
+  *outside* the arena (driver-side chunks in flight, pull staging), and
+  ``under_pressure()`` / ``pressure_score()`` for callers that should slow
+  down or place work elsewhere. The cluster scheduler reads the score through
+  the statistics DB and penalizes nodes that are already spilling.
+
+``BufferPool`` delegates to it (``pool.paging`` / ``pool.spill`` /
+``pool.stats`` are views into the manager), and ``StorageNode`` exposes it to
+the runtime as ``node.memory``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional, Set
+
+from .paging import PagingSystem
+
+
+class SpillStore:
+    """Secondary storage for evicted pages. In-memory by default; set
+    ``directory`` to spill to real files (used by the I/O benchmarks).
+    Tracks every page id it holds so ``clear()`` can delete them all when the
+    owning node goes away (PR-3 leak fix: spill files used to outlive their
+    pool)."""
+
+    def __init__(self, directory: Optional[str] = None):
+        self.directory = directory
+        self._mem: Dict[int, bytes] = {}
+        self._held: Set[int] = set()
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.write_ops = 0
+        self.read_ops = 0
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def _path(self, page_id: int) -> str:
+        return os.path.join(self.directory, f"page_{page_id}.bin")
+
+    def write(self, page_id: int, data: bytes) -> None:
+        self.bytes_written += len(data)
+        self.write_ops += 1
+        self._held.add(page_id)
+        if self.directory:
+            with open(self._path(page_id), "wb") as f:
+                f.write(data)
+        else:
+            self._mem[page_id] = bytes(data)
+
+    def read(self, page_id: int) -> bytes:
+        self.read_ops += 1
+        if self.directory:
+            with open(self._path(page_id), "rb") as f:
+                data = f.read()
+        else:
+            data = self._mem[page_id]
+        self.bytes_read += len(data)
+        return data
+
+    def delete(self, page_id: int) -> None:
+        self._held.discard(page_id)
+        if self.directory:
+            try:
+                os.remove(self._path(page_id))
+            except FileNotFoundError:
+                pass
+        else:
+            self._mem.pop(page_id, None)
+
+    def held_page_ids(self) -> Set[int]:
+        return set(self._held)
+
+    def clear(self) -> None:
+        """Delete every page image this store holds."""
+        for pid in list(self._held):
+            self.delete(pid)
+
+
+class MemoryReservation:
+    """A ``reserve()`` grant: bytes staged outside the arena but charged to
+    this node. Context-managed so staging buffers can't leak accounting."""
+
+    def __init__(self, manager: "MemoryManager", nbytes: int):
+        self.manager = manager
+        self.nbytes = nbytes
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self.manager._release(self.nbytes)
+
+    def __enter__(self) -> "MemoryReservation":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class MemoryManager:
+    """Owns one node's eviction policy, spill store, and pressure accounting.
+
+    All byte counters are *logical* page bytes (what callers asked for, not
+    TLSF-rounded block sizes); ``BufferPool`` drives them through the
+    ``note_*`` hooks under its own lock, and external stagers charge
+    themselves via ``reserve``.
+    """
+
+    def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
+                 policy: str = "data-aware",
+                 pressure_watermark: float = 0.85):
+        self.capacity = capacity
+        self.spill = spill_store or SpillStore()
+        self.paging = PagingSystem(policy)
+        self.pressure_watermark = pressure_watermark
+        self._lock = threading.RLock()
+        # live counters
+        self.resident_bytes = 0
+        self.pinned_bytes = 0
+        # bytes paged OUT: spilled AND not resident (a write-through
+        # durability copy of a resident page is not pressure)
+        self.spilled_bytes = 0
+        self.reserved_bytes = 0    # out-of-arena staging charged via reserve()
+        # high-water marks
+        self.resident_hwm = 0
+        self.pinned_hwm = 0
+        self.reserved_hwm = 0
+        self.stats: Dict[str, int] = {"evictions": 0, "spill_bytes": 0,
+                                      "fetch_bytes": 0, "alloc_retries": 0}
+
+    @property
+    def policy(self) -> str:
+        return self.paging.policy
+
+    # -- accounting hooks (called by BufferPool) ------------------------------
+    def note_alloc(self, nbytes: int) -> None:
+        with self._lock:
+            self.resident_bytes += nbytes
+            self.resident_hwm = max(self.resident_hwm, self.resident_bytes)
+
+    def note_free(self, nbytes: int) -> None:
+        with self._lock:
+            self.resident_bytes -= nbytes
+
+    def note_pinned(self, nbytes: int) -> None:
+        """A page's pin count went 0 -> 1: its bytes are now unevictable."""
+        with self._lock:
+            self.pinned_bytes += nbytes
+            self.pinned_hwm = max(self.pinned_hwm, self.pinned_bytes)
+
+    def note_unpinned(self, nbytes: int) -> None:
+        """A page's pin count went 1 -> 0."""
+        with self._lock:
+            self.pinned_bytes -= nbytes
+
+    def note_spilled(self, nbytes: int) -> None:
+        """Bytes written to the spill store (durability copies included)."""
+        with self._lock:
+            self.stats["spill_bytes"] += nbytes
+
+    def note_paged_out(self, nbytes: int) -> None:
+        """A page left residency with its backing copy on "disk"."""
+        with self._lock:
+            self.spilled_bytes += nbytes
+
+    def note_paged_in(self, nbytes: int) -> None:
+        """A paged-out page was faulted back into the arena."""
+        with self._lock:
+            self.spilled_bytes -= nbytes
+
+    def note_fetched(self, nbytes: int) -> None:
+        with self._lock:
+            self.stats["fetch_bytes"] += nbytes
+
+    def discard_spilled(self, page_id: int, nbytes: int,
+                        paged_out: bool) -> None:
+        """Delete a page's spill image (set dropped or lifetime ended);
+        ``paged_out`` says whether those bytes were counted as pressure
+        (non-resident) or were just a durability copy of a resident page."""
+        with self._lock:
+            self.spill.delete(page_id)
+            if paged_out:
+                self.spilled_bytes -= nbytes
+
+    # -- backpressure ----------------------------------------------------------
+    def reserve(self, nbytes: int) -> MemoryReservation:
+        """Charge ``nbytes`` of out-of-arena staging to this node. Always
+        grants (the monolithic pool spills rather than refuses) but moves the
+        pressure signal, which is what schedulers and stagers key off."""
+        with self._lock:
+            self.reserved_bytes += nbytes
+            self.reserved_hwm = max(self.reserved_hwm, self.reserved_bytes)
+        return MemoryReservation(self, nbytes)
+
+    def _release(self, nbytes: int) -> None:
+        with self._lock:
+            self.reserved_bytes -= nbytes
+
+    def reset_reserved_hwm(self) -> int:
+        """Start a fresh reservation high-water window (returns the old
+        mark). Callers that assert a staging bound — e.g. the streaming
+        remesh's O(page) driver guarantee — reset first so the measurement
+        is theirs, not some earlier stager's."""
+        with self._lock:
+            old = self.reserved_hwm
+            self.reserved_hwm = self.reserved_bytes
+            return old
+
+    def under_pressure(self) -> bool:
+        """True when the node is past its watermark (arena residency plus
+        out-of-arena reservations) or is carrying spilled-out bytes — i.e.
+        new work placed here will likely page."""
+        with self._lock:
+            occupied = self.resident_bytes + self.reserved_bytes
+            return (occupied >= self.pressure_watermark * self.capacity
+                    or self.spilled_bytes > 0)
+
+    def pressure_score(self) -> float:
+        """Scalar pressure in [0, 1] for placement penalties: how far past
+        the watermark the node sits, or how much of a capacity's worth of
+        data it has already pushed to disk — whichever is worse."""
+        with self._lock:
+            occupied = self.resident_bytes + self.reserved_bytes
+            wm = self.pressure_watermark * self.capacity
+            over = max(0.0, occupied - wm) / max(1.0, self.capacity - wm)
+            spill_frac = self.spilled_bytes / max(1, self.capacity)
+            return min(1.0, max(over, spill_frac))
+
+    def pressure_report(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "capacity": self.capacity,
+                "resident": self.resident_bytes,
+                "pinned": self.pinned_bytes,
+                "spilled": self.spilled_bytes,
+                "reserved": self.reserved_bytes,
+                "resident_hwm": self.resident_hwm,
+                "pinned_hwm": self.pinned_hwm,
+                "reserved_hwm": self.reserved_hwm,
+                "under_pressure": self.under_pressure(),
+                "pressure_score": self.pressure_score(),
+                **self.stats,
+            }
+
+    def close(self) -> None:
+        """Tear the node's secondary storage down with it (a dead machine's
+        local disk is gone): every spill image this manager wrote is deleted,
+        so killed/replaced nodes don't leak spill files."""
+        with self._lock:
+            self.spill.clear()
+            self.spilled_bytes = 0

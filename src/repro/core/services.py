@@ -290,12 +290,16 @@ class ShuffleService:
         for ls in self.partition_sets:
             ls.set_operation(CurrentOperation.IDLE, self.pool.clock)
 
-    def read_partition(self, partition_id: int) -> np.ndarray:
-        """Read back one partition (walks the small-page directory)."""
+    def iter_partition(self, partition_id: int) -> Iterator[np.ndarray]:
+        """Stream one partition's records small-page by small-page — the
+        pressure-safe read path: a consumer (e.g. a reducer pull) stages
+        O(small page), never the whole partition. Pinning each large page in
+        turn faults any spilled map output back through the pool. Yielded
+        arrays are views valid only until the next iteration; copy to
+        retain."""
         ls = self.partition_sets[partition_id]
         ls.infer_from_service("sequential-read", self.pool.clock)
         small = self._allocators[partition_id].small_page
-        out: List[np.ndarray] = []
         for pid in sorted(ls.pages):
             page = ls.pages[pid]
             view = self.pool.pin(page)
@@ -304,10 +308,14 @@ class ShuffleService:
                     n = int(view[base:base + _HEADER].view(np.int64)[0])
                     if n == 0:
                         continue
-                    out.append(from_record_bytes(
-                        view[base + _HEADER:], self.dtype, n).copy())
+                    yield from_record_bytes(view[base + _HEADER:],
+                                            self.dtype, n)
             finally:
                 self.pool.unpin(page)
+
+    def read_partition(self, partition_id: int) -> np.ndarray:
+        """Read back one whole partition (gathers ``iter_partition``)."""
+        out = [chunk.copy() for chunk in self.iter_partition(partition_id)]
         if not out:
             return np.empty(0, dtype=self.dtype)
         return np.concatenate(out)

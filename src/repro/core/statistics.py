@@ -30,6 +30,10 @@ class StatisticsDB:
         # shuffle -> partition -> node -> bytes of map output held there
         # (the locality signal behind scheduler reducer placement)
         self._shuffle_bytes: Dict[str, Dict[int, Dict[int, int]]] = {}
+        # node -> memory pressure score in [0, 1] (published by the shuffle
+        # finalizer from each node's MemoryManager; the scheduler penalizes
+        # placement onto nodes that are already spilling)
+        self._node_pressure: Dict[int, float] = {}
 
     def register_replica(self, logical_name: str, info: ReplicaInfo) -> None:
         self._replicas.setdefault(logical_name, []).append(info)
@@ -63,6 +67,16 @@ class StatisticsDB:
 
     def clear_shuffle(self, shuffle: str) -> None:
         self._shuffle_bytes.pop(shuffle, None)
+
+    # -- per-node memory pressure (scheduler placement penalty) ----------------
+    def record_node_pressure(self, node: int, score: float) -> None:
+        self._node_pressure[node] = max(0.0, min(1.0, float(score)))
+
+    def node_pressure(self, node: int) -> float:
+        return self._node_pressure.get(node, 0.0)
+
+    def node_pressure_map(self) -> Dict[int, float]:
+        return dict(self._node_pressure)
 
     def replicas_of(self, logical_name: str) -> List[ReplicaInfo]:
         return list(self._replicas.get(logical_name, []))

@@ -200,24 +200,69 @@ class DistributedBatchLoader:
         self.drop_last = drop_last
         self.prefetch = max(0, prefetch)
 
+    def _read_reserved(self, node_id: int, cancelled: threading.Event):
+        # charge the staged shard to the driver's MemoryManager while it sits
+        # in the prefetch window, so loader pressure shows up in the same
+        # high-water accounting as remesh streaming. ``cancelled`` is set
+        # when the consumer abandons the stream: a worker still in flight
+        # then skips (or immediately returns) its reservation, so nothing
+        # can leak past the drain below.
+        shard = self.cluster.read_shard(self.sset, node_id)
+        if cancelled.is_set():
+            return shard, None
+        res = self.cluster.driver_memory.reserve(shard.nbytes)
+        if cancelled.is_set():
+            res.release()
+            return shard, None
+        return shard, res
+
     def _shard_stream(self) -> Iterator[np.ndarray]:
         # read_shard resolves each shard's source through the cluster
         # scheduler (primary, or a CRC-verified replica when the owner is
         # dead), so shard order is all the plan we need here
         order = sorted(self.sset.shards)
+        cancelled = threading.Event()
         if self.prefetch == 0:
             for node_id in order:
-                yield self.cluster.read_shard(self.sset, node_id)
+                shard, res = self._read_reserved(node_id, cancelled)
+                try:
+                    yield shard
+                finally:
+                    if res is not None:
+                        res.release()
             return
         engine = self.cluster.transfer
         window: List = []
-        for node_id in order:
-            window.append(engine.submit(self.cluster.read_shard, self.sset,
-                                        node_id, label=f"prefetch{node_id}"))
-            if len(window) >= self.prefetch:
-                yield window.pop(0).result()
-        for fut in window:
-            yield fut.result()
+        try:
+            for node_id in order:
+                window.append(engine.submit(self._read_reserved,
+                                            node_id, cancelled,
+                                            label=f"prefetch{node_id}"))
+                if len(window) >= self.prefetch:
+                    shard, res = window.pop(0).result()
+                    try:
+                        yield shard
+                    finally:
+                        if res is not None:
+                            res.release()
+            while window:
+                shard, res = window.pop(0).result()
+                try:
+                    yield shard
+                finally:
+                    if res is not None:
+                        res.release()
+        finally:
+            # consumer abandoned the iterator mid-stream: stop in-flight
+            # workers from reserving, then release what already landed
+            cancelled.set()
+            for fut in window:
+                try:
+                    _shard, res = fut.result(timeout=30)
+                except Exception:
+                    continue
+                if res is not None:
+                    res.release()
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         buf: List[np.ndarray] = []

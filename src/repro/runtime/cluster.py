@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -43,12 +44,17 @@ import numpy as np
 from ..core.attributes import AttributeSet
 from ..core.buffer_pool import BufferPool, SpillStore
 from ..core.locality_set import LocalitySet
-from ..core.replication import (PartitionScheme, replica_nodes,
+from ..core.memory_manager import MemoryManager
+from ..core.replication import (DistributedSet, PartitionScheme,
+                                ReplicaRegistration,
+                                combine_content_checksums,
+                                record_content_checksum,
+                                recover_target_shard, replica_nodes,
                                 shard_checksum)
-from ..core.services import (HashService, SequentialWriter, ShuffleService,
-                             job_data_attrs, read_all)
+from ..core.services import (HashService, PageIterator, SequentialWriter,
+                             ShuffleService, job_data_attrs, read_all)
 from ..core.statistics import ReplicaInfo, StatisticsDB
-from .elastic import plan_remesh, surviving_node_ids
+from .elastic import plan_remesh, remesh_partition_plan, surviving_node_ids
 from .scheduler import ClusterScheduler
 from .transfer import TransferEngine, copy_set
 from .watchdog import StepTimer
@@ -89,15 +95,23 @@ class DeadNodeError(RuntimeError):
 
 
 class StorageNode:
-    """One Pangea storage service: a unified buffer pool plus its spill store
-    (paper §2 — every node runs one storage process owning all its data)."""
+    """One Pangea storage service: a unified buffer pool plus its memory
+    manager (paper §2 — every node runs one storage process owning all its
+    data). ``node.memory`` is the runtime's window into the node's eviction
+    policy, spill store, and pressure accounting."""
 
     def __init__(self, node_id: int, capacity: int,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 policy: str = "data-aware"):
         self.node_id = node_id
         self.capacity = capacity
-        self.pool = BufferPool(capacity, SpillStore(spill_dir))
+        self.pool = BufferPool(capacity, SpillStore(spill_dir), policy=policy)
         self.alive = True
+
+    @property
+    def memory(self) -> Optional[MemoryManager]:
+        """The node's MemoryManager (None once the node is dead)."""
+        return self.pool.memory if self.pool is not None else None
 
     def write_records(self, set_name: str, records: np.ndarray,
                       dtype: np.dtype, page_size: int,
@@ -115,12 +129,19 @@ class StorageNode:
 
 @dataclass
 class ShardInfo:
-    """Catalog entry for one primary shard of a sharded locality set."""
+    """Catalog entry for one primary shard of a sharded locality set.
+
+    ``checksum`` is the order-exact CRC32 of the shard's record bytes
+    (page-for-page copies must match it); ``content_checksum`` is the
+    order-independent fingerprint (``record_content_checksum``) that also
+    certifies shards re-assembled in a different record order — the
+    co-partitioned rebuild path and the streaming remesh verify against it."""
 
     node_id: int
     set_name: str
     num_records: int
     checksum: int
+    content_checksum: int = 0
     replicas: List[Tuple[int, str]] = field(default_factory=list)
 
 
@@ -174,6 +195,9 @@ class RecoveryReport:
     replicas_rebuilt: int = 0
     bytes_transferred: int = 0
     checksum_failures: List[str] = field(default_factory=list)
+    # "<set>:<shard>" -> the recovery source the scheduler chose
+    # ("replica@2", "rebuild<-other_set", ...)
+    sources: Dict[str, str] = field(default_factory=dict)
     seconds: float = 0.0
 
     @property
@@ -193,6 +217,8 @@ class RemeshReport:
     resharded: List[str] = field(default_factory=list)
     lost: List[str] = field(default_factory=list)
     bytes_transferred: int = 0
+    streamed: bool = False              # shard-to-shard streaming path used
+    driver_peak_bytes: int = 0          # driver staging HWM during the remesh
     seconds: float = 0.0
 
     @property
@@ -213,18 +239,25 @@ class Cluster:
     def __init__(self, num_nodes: int, node_capacity: int = 32 << 20,
                  page_size: int = 1 << 18, replication_factor: int = 1,
                  spill_dir: Optional[str] = None,
-                 transfer_workers: int = 4):
+                 transfer_workers: int = 4, policy: str = "data-aware"):
         if num_nodes < 2:
             raise ValueError("a cluster needs at least 2 nodes")
         self.num_nodes = num_nodes
         self.node_capacity = node_capacity
         self.page_size = page_size
         self.replication_factor = replication_factor
+        self.policy = policy
         self._spill_dir = spill_dir
         self.nodes: Dict[int, StorageNode] = {
-            n: StorageNode(n, node_capacity, self._node_spill_dir(n))
+            n: StorageNode(n, node_capacity, self._node_spill_dir(n),
+                           policy=policy)
             for n in range(num_nodes)
         }
+        # the manager/driver process's own memory authority: pure accounting
+        # (no arena) for bytes staged driver-side — remesh streaming chunks,
+        # loader prefetch windows. Its high-water marks are what the
+        # O(page)-driver-memory guarantees are asserted against.
+        self.driver_memory = MemoryManager(node_capacity, policy=policy)
         self.stats = StatisticsDB()
         self.catalog: Dict[str, ShardedSet] = {}
         self.scheduler = ClusterScheduler(self)
@@ -254,9 +287,13 @@ class Cluster:
 
     def kill_node(self, node_id: int) -> None:
         """Simulate a machine loss: the node's pool, spill store, and every
-        locality set on it are gone."""
+        locality set on it are gone. The memory manager deletes every spill
+        image it wrote — a dead machine's local disk is gone with it, and
+        leaving the files behind leaked them under a real ``spill_dir``."""
         node = self.nodes[node_id]
         node.alive = False
+        if node.pool is not None:
+            node.pool.memory.close()
         node.pool = None  # drop the arena; nothing on this node survives
 
     # -- byte accounting (thread-safe: pulls run on engine workers) -----------
@@ -387,7 +424,8 @@ class Cluster:
                                          sset.dtype, sset.page_size, attrs)
             info = ShardInfo(node_id=nid, set_name=sset.primary_set_name(nid),
                              num_records=len(shard),
-                             checksum=shard_checksum(shard))
+                             checksum=shard_checksum(shard),
+                             content_checksum=record_content_checksum(shard))
             for hslot in replica_nodes(slot, len(domain),
                                        sset.replication_factor):
                 holder = domain[hslot]
@@ -440,12 +478,106 @@ class Cluster:
         self.catalog.pop(sset.name, None)
 
     # -- replica-based recovery (paper §7) ------------------------------------
+    def _rebuild_shard_from_replica(self, sset: ShardedSet, shard_id: int,
+                                    alt_name: str) -> Tuple[np.ndarray, int]:
+        """Re-materialize a shard by re-running ``sset``'s partitioner over a
+        heterogeneously partitioned replica of the same logical data
+        (``core/replication.recover_target_shard`` — paper §7's recovery from
+        a differently partitioned replica). Returns ``(records, net_bytes)``;
+        record order differs from the original, so callers verify the
+        order-independent ``content_checksum``."""
+        alt = self.catalog[alt_name]
+        slot = sset.node_ids.index(shard_id)
+        src_shards: Dict = {}
+        reservations = []
+        moved = 0
+        try:
+            for i, n in enumerate(sorted(alt.shards)):
+                holder, recs = self.read_shard_from(alt, n)
+                # string keys: no alt shard may be skipped as "the failed
+                # node" — a dead owner's shard reaches us through a replica
+                src_shards[f"alt{i}"] = recs
+                # the rebuild gathers the whole alt set driver-side: charge
+                # it, so recovery shows up in the same pressure accounting
+                # as every other stager
+                reservations.append(self.driver_memory.reserve(recs.nbytes))
+                if holder != shard_id:
+                    moved += recs.nbytes
+            reg = ReplicaRegistration(
+                source=DistributedSet(f"{alt_name}.rebuild-src", None,
+                                      src_shards),
+                target=DistributedSet(sset.name, sset.scheme, {}),
+                scheme=sset.scheme)
+            return recover_target_shard(reg, slot), moved
+        finally:
+            for res in reservations:
+                res.release()
+
+    def _recover_shard(self, sset: ShardedSet, info: ShardInfo, node_id: int,
+                       report: RecoveryReport) -> bool:
+        """Execute the scheduler's cheapest viable recovery source for one
+        lost primary shard. A candidate that fails verification falls through
+        to the next-cheapest one; returns False when every candidate is
+        exhausted."""
+        pool = self.nodes[node_id].pool
+        for src in self.scheduler.recovery_plan(sset, node_id, node_id):
+            if src.kind == "rebuild":
+                rebuilt, moved = self._rebuild_shard_from_replica(
+                    sset, node_id, src.replica_of)
+                if record_content_checksum(rebuilt) != info.content_checksum:
+                    report.checksum_failures.append(
+                        f"{sset.name}: content mismatch rebuilding shard "
+                        f"{node_id} from {src.replica_of}")
+                    continue
+                attrs = sset.attrs_factory() if sset.attrs_factory else None
+                self.nodes[node_id].write_records(
+                    info.set_name, rebuilt, sset.dtype, sset.page_size, attrs)
+                self.add_net_bytes(moved)
+                report.bytes_transferred += moved
+                # the rebuilt order is the shard's new canonical layout:
+                # re-key the order-exact CRC and refresh surviving replicas
+                info.checksum = shard_checksum(rebuilt)
+                for holder, rep_name in info.replicas:
+                    hnode = self.nodes[holder]
+                    if not hnode.alive:
+                        continue
+                    if rep_name in hnode.pool.paging.sets:
+                        hnode.pool.drop_set(hnode.pool.get_set(rep_name))
+                    report.bytes_transferred += self.transfer_records(
+                        node_id, info.set_name, holder, rep_name, sset.dtype,
+                        sset.page_size)
+                report.sources[f"{sset.name}:{node_id}"] = \
+                    f"rebuild<-{src.replica_of}"
+                report.shards_recovered += 1
+                return True
+            # primary/replica: page-for-page copy, order-exact CRC check
+            report.bytes_transferred += self.transfer_records(
+                src.holder, src.set_name, node_id, info.set_name, sset.dtype,
+                sset.page_size)
+            rebuilt = self.read_shard(sset, node_id)
+            if shard_checksum(rebuilt) != info.checksum:
+                report.checksum_failures.append(
+                    f"{sset.name}: checksum mismatch on shard {node_id} "
+                    f"from {src.kind}@{src.holder}")
+                pool.drop_set(pool.get_set(info.set_name))
+                continue
+            report.sources[f"{sset.name}:{node_id}"] = \
+                f"{src.kind}@{src.holder}"
+            report.shards_recovered += 1
+            return True
+        return False
+
     def recover_node(self, node_id: int) -> RecoveryReport:
         """Bring a fresh node up under the failed node's identity and rebuild
         its state through the buffer pools:
 
-        1. every primary shard it owned is re-materialized from a surviving
-           chain replica and verified against the cataloged CRC32;
+        1. every primary shard it owned is re-materialized from the *cheapest*
+           source the scheduler can cost (``scheduler.recovery_plan``): a
+           surviving chain replica (verified against the cataloged CRC32,
+           ties broken toward the least memory-pressured holder), or — when
+           no direct copy survives — a co-partitioned rebuild from a
+           heterogeneously partitioned replica set (verified against the
+           order-independent content checksum);
         2. every replica it held for other owners is re-replicated from the
            (alive) primary, restoring the replication factor.
         """
@@ -455,29 +587,16 @@ class Cluster:
         if node.alive:
             raise ValueError(f"node {node_id} is alive; nothing to recover")
         node.pool = BufferPool(node.capacity,
-                               SpillStore(self._node_spill_dir(node_id)))
+                               SpillStore(self._node_spill_dir(node_id)),
+                               policy=self.policy)
         node.alive = True
         for sset in self.catalog.values():
             info = sset.shards.get(node_id)
             if info is not None:
-                source = next(
-                    ((holder, rep) for holder, rep in info.replicas
-                     if self.nodes[holder].alive), None)
-                if source is None:
+                if not self._recover_shard(sset, info, node_id, report):
                     report.checksum_failures.append(
                         f"{sset.name}: no surviving replica of shard "
                         f"{node_id}")
-                else:
-                    holder, rep_name = source
-                    report.bytes_transferred += self.transfer_records(
-                        holder, rep_name, node_id, info.set_name, sset.dtype,
-                        sset.page_size)
-                    rebuilt = self.read_shard(sset, node_id)
-                    if shard_checksum(rebuilt) != info.checksum:
-                        report.checksum_failures.append(
-                            f"{sset.name}: checksum mismatch on shard "
-                            f"{node_id}")
-                    report.shards_recovered += 1
             # replicas this node held for other owners
             for owner, oinfo in sset.shards.items():
                 if owner == node_id:
@@ -499,16 +618,165 @@ class Cluster:
         return report
 
     # -- elastic degrade (ROADMAP follow-up: shrink instead of fail) ----------
+    def _verify_set_crc(self, holder: int, set_name: str, dtype: np.dtype,
+                        expect: int) -> bool:
+        """Streaming CRC pass over a candidate source set before it feeds the
+        remesh: one page pinned at a time, O(page) driver memory, no gather."""
+        pool = self.nodes[holder].pool
+        ls = pool.get_set(set_name)
+        crc = 0
+        for chunk in PageIterator(pool, ls, dtype, sorted(ls.pages)):
+            crc = zlib.crc32(np.ascontiguousarray(chunk).tobytes(), crc)
+        return (crc & 0xFFFFFFFF) == expect
+
+    def _remesh_set_gather(self, sset: ShardedSet, alive: List[int],
+                           report: RemeshReport) -> bool:
+        """The PR-2 path: gather the whole set at the driver, re-place it.
+        Kept as the reference implementation (the streaming path must produce
+        byte-identical shards) — its driver reservation is the whole set."""
+        try:
+            records = self.read_sharded(sset)
+        except DeadNodeError:
+            return False
+        base_net = self.net_bytes
+        with self.driver_memory.reserve(records.nbytes):
+            per_node, num_parts = remesh_partition_plan(
+                sset.scheme.num_partitions, len(sset.node_ids), alive)
+            self._drop_physical(sset)
+            sset.node_ids = list(alive)
+            sset.scheme = PartitionScheme(sset.scheme.name,
+                                          sset.scheme.key_fn,
+                                          num_parts, len(alive))
+            sset.replication_factor = min(sset.replication_factor,
+                                          len(alive) - 1)
+            sset.shards = {}
+            self._place_records(sset, records)
+        report.bytes_transferred += self.net_bytes - base_net
+        return True
+
+    def _remesh_set_streaming(self, sset: ShardedSet, alive: List[int],
+                              report: RemeshReport) -> bool:
+        """Stream one sharded set shard-to-shard onto the survivors: every
+        source shard is scanned page by page (scheduler-ranked, CRC-verified
+        source), each page-sized chunk is routed by the new scheme and
+        appended to per-destination sequential writers, and only that chunk
+        is ever staged driver-side (charged to ``driver_memory.reserve`` so
+        the O(page) claim is assertable). Per-destination CRC32 and content
+        checksums accumulate as chunks land, so the new catalog entries are
+        certified without ever materializing a shard at the driver."""
+        # 1. pick (and for replicas, verify) a source for every old shard
+        #    before writing anything, so a lost set stages no partial state
+        sources: Dict[int, Tuple[int, str]] = {}
+        for n in sorted(sset.shards):
+            info = sset.shards[n]
+            chosen = None
+            for holder, set_name in self.scheduler.remesh_read_source(
+                    sset, n, alive):
+                if holder == n or self._verify_set_crc(
+                        holder, set_name, sset.dtype, info.checksum):
+                    chosen = (holder, set_name)
+                    break
+            if chosen is None:
+                return False
+            sources[n] = chosen
+        # 2. stage new shards under remesh names, streaming chunk by chunk
+        per_node, num_parts = remesh_partition_plan(
+            sset.scheme.num_partitions, len(sset.node_ids), alive)
+        new_scheme = PartitionScheme(sset.scheme.name, sset.scheme.key_fn,
+                                     num_parts, len(alive))
+        writers: Dict[int, SequentialWriter] = {}
+        crc = {nid: 0 for nid in alive}
+        content = {nid: 0 for nid in alive}
+        counts = {nid: 0 for nid in alive}
+        for nid in alive:
+            attrs = sset.attrs_factory() if sset.attrs_factory else None
+            ls = self.node(nid).pool.create_set(
+                f"{sset.name}/shard{nid}@remesh", sset.page_size, attrs)
+            writers[nid] = SequentialWriter(self.node(nid).pool, ls,
+                                            sset.dtype)
+        base_net = self.net_bytes
+        try:
+            for n in sorted(sset.shards):
+                holder, set_name = sources[n]
+                src_pool = self.nodes[holder].pool
+                ls_src = src_pool.get_set(set_name)
+                for chunk in PageIterator(src_pool, ls_src, sset.dtype,
+                                          sorted(ls_src.pages)):
+                    # staged: the pinned chunk plus its routed copy below
+                    with self.driver_memory.reserve(2 * chunk.nbytes):
+                        slots = new_scheme.node_of_records(chunk)
+                        order, _cnt, offsets = dispatch_plan(slots, len(alive))
+                        routed = chunk[order]
+                        for slot, nid in enumerate(alive):
+                            sub = routed[offsets[slot]:offsets[slot + 1]]
+                            if not len(sub):
+                                continue
+                            writers[nid].append_batch(sub)
+                            crc[nid] = zlib.crc32(
+                                np.ascontiguousarray(sub).tobytes(), crc[nid])
+                            content[nid] = combine_content_checksums(
+                                [content[nid], record_content_checksum(sub)])
+                            counts[nid] += len(sub)
+                            if holder == nid:
+                                self.add_local_bytes(sub.nbytes)
+                            else:
+                                self.add_net_bytes(sub.nbytes)
+            for w in writers.values():
+                w.close()
+        except BaseException:
+            # drop the staging sets so a failed stream (pool exhaustion on a
+            # pressured survivor, a dying source) leaves the old layout
+            # intact and a retried remesh doesn't trip over stale names
+            for nid in alive:
+                pool = self.nodes[nid].pool
+                name = f"{sset.name}/shard{nid}@remesh"
+                if pool is not None and name in pool.paging.sets:
+                    pool.drop_set(pool.get_set(name))
+            raise
+        # 3. swap: drop the old layout, rename staging sets into place
+        self._drop_physical(sset)
+        sset.node_ids = list(alive)
+        sset.scheme = new_scheme
+        sset.replication_factor = min(sset.replication_factor,
+                                      len(alive) - 1)
+        sset.shards = {}
+        for nid in alive:
+            pool = self.node(nid).pool
+            pool.rename_set(pool.get_set(f"{sset.name}/shard{nid}@remesh"),
+                            sset.primary_set_name(nid))
+            sset.shards[nid] = ShardInfo(
+                node_id=nid, set_name=sset.primary_set_name(nid),
+                num_records=counts[nid], checksum=crc[nid] & 0xFFFFFFFF,
+                content_checksum=content[nid])
+        # 4. chain replicas from the new primaries
+        for slot, nid in enumerate(alive):
+            info = sset.shards[nid]
+            for hslot in replica_nodes(slot, len(alive),
+                                       sset.replication_factor):
+                holder = alive[hslot]
+                rep_name = sset.replica_set_name(nid, holder)
+                self.transfer_records(nid, info.set_name, holder, rep_name,
+                                      sset.dtype, sset.page_size)
+                info.replicas.append((holder, rep_name))
+        report.bytes_transferred += self.net_bytes - base_net
+        return True
+
     def remesh_degrade(self,
-                       dead_nodes: Optional[Sequence[int]] = None
-                       ) -> RemeshReport:
+                       dead_nodes: Optional[Sequence[int]] = None,
+                       streaming: bool = True) -> RemeshReport:
         """Unrecoverable node loss: no replacement machine will take the dead
         node's identity, so fall through to ``elastic.plan_remesh`` — shrink
         the membership to the survivors and re-partition every sharded set
         over it from the freshest surviving copies (primaries where alive,
         CRC-verified replicas where not). Sets with an unreadable shard are
         reported as ``lost`` rather than silently truncated. The set objects
-        are updated in place, so existing handles stay valid."""
+        are updated in place, so existing handles stay valid.
+
+        By default each set streams shard-to-shard in page-sized chunks
+        (peak driver-side buffering O(page), asserted via the driver
+        MemoryManager's reservation high-water mark); ``streaming=False``
+        keeps the PR-2 gather-at-driver path, which produces byte-identical
+        shards at O(dataset) driver memory."""
         t0 = time.perf_counter()
         for n in (dead_nodes or ()):
             if self.nodes[n].alive:
@@ -520,29 +788,20 @@ class Cluster:
         report = RemeshReport(
             dead_nodes=dead, node_ids=alive,
             plan=plan_remesh(self.num_nodes, dead, chips_per_host=1,
-                             prefer_model=1))
+                             prefer_model=1),
+            streamed=streaming)
+        # measure THIS remesh's driver staging peak, not lifetime history
+        self.driver_memory.reset_reserved_hwm()
         for name in sorted(self.catalog):
             sset = self.catalog[name]
-            try:
-                records = self.read_sharded(sset)
-            except DeadNodeError:
+            remesh_set = (self._remesh_set_streaming if streaming
+                          else self._remesh_set_gather)
+            if remesh_set(sset, alive, report):
+                self.stats.update_replica(name, self._replica_info(sset))
+                report.resharded.append(name)
+            else:
                 report.lost.append(name)
-                continue
-            base_net = self.net_bytes
-            partitions_per_node = max(
-                1, sset.scheme.num_partitions // max(1, len(sset.node_ids)))
-            self._drop_physical(sset)
-            sset.node_ids = list(alive)
-            sset.scheme = PartitionScheme(
-                sset.scheme.name, sset.scheme.key_fn,
-                partitions_per_node * len(alive), len(alive))
-            sset.replication_factor = min(sset.replication_factor,
-                                          len(alive) - 1)
-            sset.shards = {}
-            self._place_records(sset, records)
-            self.stats.update_replica(name, self._replica_info(sset))
-            report.resharded.append(name)
-            report.bytes_transferred += self.net_bytes - base_net
+        report.driver_peak_bytes = self.driver_memory.reserved_hwm
         report.seconds = time.perf_counter() - t0
         return report
 
@@ -550,6 +809,14 @@ class Cluster:
     def memory_report(self) -> Dict[int, Dict[str, Dict[str, int]]]:
         return {n: node.pool.memory_report()
                 for n, node in self.nodes.items() if node.alive}
+
+    def pressure_report(self) -> Dict[int, Dict[str, float]]:
+        """Every alive node's MemoryManager pressure snapshot, plus the
+        driver's own staging accounting under key ``-1``."""
+        rep = {n: node.memory.pressure_report()
+               for n, node in self.nodes.items() if node.alive}
+        rep[-1] = self.driver_memory.pressure_report()
+        return rep
 
     def shutdown(self) -> None:
         """Stop the transfer engine's workers (benchmarks that build many
@@ -738,10 +1005,18 @@ class ClusterShuffle:
         for r in range(self.num_reducers):
             self.cluster.stats.record_shuffle_bytes(
                 self.name, r, node_id, svc.partition_bytes[r])
+        # publish the node's memory pressure alongside its byte counts: the
+        # scheduler discounts locality on nodes already spilling (their map
+        # output would fault back in page by page anyway)
+        node = self.cluster.nodes[node_id]
+        if node.memory is not None:
+            self.cluster.stats.record_node_pressure(
+                node_id, node.memory.pressure_score())
 
     def finish_maps(self) -> None:
         """Seal every map node's shuffle buffers and publish per-partition
-        byte counts to the statistics DB (the scheduler's placement input)."""
+        byte counts plus memory pressure to the statistics DB (the
+        scheduler's placement inputs)."""
         for node_id, svc in sorted(self._services.items()):
             self._finish_node(node_id, svc)
 
@@ -755,26 +1030,31 @@ class ClusterShuffle:
 
     # -- reduce-side pulls -----------------------------------------------------
     def pull(self, reducer: int) -> np.ndarray:
-        """Reduce-side fetch: gather partition ``reducer`` from every map
-        node into the reducer node's pool, then release the map-side pages
-        (lifetime ended — paper §6's cheapest victims)."""
-        dst = self.reducer_node(reducer)
+        """Reduce-side fetch: stream partition ``reducer`` from every map
+        node into the reducer node's pool small-page by small-page (staging
+        O(small page), charged to the destination's MemoryManager — never
+        the whole partition, so a pull works even when the partition exceeds
+        pool headroom), then release the map-side pages (lifetime ended —
+        paper §6's cheapest victims). Spilled map output faults back in
+        transparently as its pages are pinned."""
+        dst_node = self.cluster.node(self.reducer_node(reducer))
+        dst = dst_node.node_id
         reduce_set = f"{self.name}/reduce{reducer}"
-        dst_pool = self.cluster.node(dst).pool
+        dst_pool = dst_node.pool
         ls = dst_pool.create_set(reduce_set, self.page_size, job_data_attrs())
         writer = SequentialWriter(dst_pool, ls, self.dtype)
         for node_id, svc in sorted(self._services.items()):
-            part = svc.read_partition(reducer)
-            if len(part):
-                writer.append_batch(part)
+            for chunk in svc.iter_partition(reducer):
+                with dst_node.memory.reserve(chunk.nbytes):
+                    writer.append_batch(chunk)
                 if node_id == dst:
-                    self.cluster.add_local_bytes(part.nbytes)
+                    self.cluster.add_local_bytes(chunk.nbytes)
                 else:
-                    self.cluster.add_net_bytes(part.nbytes)
+                    self.cluster.add_net_bytes(chunk.nbytes)
             svc.release_partition(reducer)
         writer.close()
         self._pulled[reducer] = (reduce_set, dst)
-        return self.cluster.node(dst).read_records(reduce_set, self.dtype)
+        return dst_node.read_records(reduce_set, self.dtype)
 
     def pull_async(self, reducer: int, after: Sequence = ()):
         """Submit ``pull(reducer)`` to the transfer engine; returns its

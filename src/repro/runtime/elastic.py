@@ -15,6 +15,15 @@ def surviving_node_ids(total_hosts: int,
     return [h for h in range(total_hosts) if h not in dead]
 
 
+def remesh_partition_plan(old_num_partitions: int, old_domain_size: int,
+                          survivors: Sequence[int]) -> Tuple[int, int]:
+    """How a sharded set re-partitions onto the shrunk membership: keep the
+    per-node partition density of the old layout, scaled to the survivor
+    count. Returns ``(partitions_per_node, new_num_partitions)``."""
+    per_node = max(1, old_num_partitions // max(1, old_domain_size))
+    return per_node, per_node * len(survivors)
+
+
 def surviving_mesh_shape(n_alive: int,
                          prefer_model: int = 16) -> Tuple[int, int]:
     """Largest (data, model) grid with model | prefer_model using <= n_alive

@@ -9,8 +9,11 @@ asks the scheduler where to put things:
 
 * **Reducer placement** (``place_reducers``) — reducer ``r`` lands on the
   node already holding the most map-output bytes for partition ``r``
-  (``StatisticsDB.shuffle_partition_bytes``), instead of the naive ``r % N``.
-  Ties prefer the baseline node so placement is never worse than round-robin.
+  (``StatisticsDB.shuffle_partition_bytes``), instead of the naive ``r % N``;
+  a node's bytes are discounted by its published memory pressure, so a node
+  that is already spilling deliberately trades network bytes for not paging.
+  Absent pressure, ties prefer the baseline node so placement is never worse
+  than round-robin.
 * **Shuffle elision** (``plan_aggregation``) — when the input sharded set is
   already partitioned on the aggregation key (``stats.best_replica`` finds a
   co-partitioned replica), the shuffle is skipped outright: every node
@@ -26,9 +29,35 @@ asks the scheduler where to put things:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.statistics import ReplicaInfo
+
+
+@dataclass
+class RecoverySource:
+    """One costed way to re-materialize a shard (scheduler recovery plan).
+
+    ``kind`` is ``"primary"``/``"replica"`` for a direct page-for-page copy
+    from a surviving set, or ``"rebuild"`` for re-running the partitioner
+    over a heterogeneously partitioned replica of the same logical data
+    (``core/replication.recover_target_shard``). ``cost_bytes`` is the bytes
+    that must cross the network to execute it; ``pressure`` is the source
+    node's memory-pressure score (tie-breaker: don't read a shard off a node
+    that is busy spilling)."""
+
+    kind: str
+    holder: Optional[int]
+    set_name: Optional[str]
+    cost_bytes: int
+    pressure: float = 0.0
+    replica_of: Optional[str] = None   # rebuild: the sharded set to read
+
+    @property
+    def sort_key(self) -> Tuple:
+        return (self.cost_bytes, self.pressure,
+                {"primary": 0, "replica": 1, "rebuild": 2}[self.kind],
+                -1 if self.holder is None else self.holder)
 
 
 @dataclass
@@ -63,7 +92,17 @@ class ClusterScheduler:
         holding the most map-output bytes for partition ``r``. Per-reducer
         cross-node traffic is ``total_bytes(r) - bytes_on(chosen)``, so the
         byte-heaviest choice minimizes it; ties fall back to the baseline
-        node, which makes the plan never worse than round-robin."""
+        node, which (absent pressure) makes the plan never worse than
+        round-robin.
+
+        Bytes are discounted by the node's published memory-pressure score
+        (``StatisticsDB.node_pressure``, fed from each node's MemoryManager
+        at map finalization): a node already spilling its pool would pay for
+        reducer input with page faults, so locality there is worth less —
+        at score 1.0 it is worth nothing and the reducer lands elsewhere.
+        That is a deliberate trade of network bytes for fault avoidance, so
+        under pressure the plan may ship more bytes than round-robin
+        would."""
         stats = self.cluster.stats
         placement = self.baseline_placement(num_reducers)
         for r in range(num_reducers):
@@ -73,9 +112,11 @@ class ClusterScheduler:
                        if self.cluster.nodes[n].alive}
             if not by_node:
                 continue
+            score = {n: b * (1.0 - stats.node_pressure(n))
+                     for n, b in by_node.items()}
             placement[r] = max(
-                by_node,
-                key=lambda n: (by_node[n], n == base, -n))
+                score,
+                key=lambda n: (score[n], n == base, -n))
         return placement
 
     def placement_net_bytes(self, shuffle_name: str,
@@ -113,18 +154,108 @@ class ClusterScheduler:
                                target_name=target.name)
 
     # -- read-source selection -------------------------------------------------
+    def _holds(self, node_id: int, set_name: str) -> bool:
+        """An alive node physically holding the set (a freshly revived node
+        mid-recovery is alive but empty — it must not serve reads yet)."""
+        node = self.cluster.nodes[node_id]
+        return (node.alive and node.pool is not None
+                and set_name in node.pool.paging.sets)
+
     def read_sources(self, sset, node_id: int) -> List[Tuple[int, str]]:
         """Candidate locations for shard ``node_id`` of ``sset``, best first:
-        the primary when its owner is alive, then every alive replica holder.
-        The cluster walks these in order, CRC-verifying replica reads."""
+        the primary when its owner is alive and holds it, then every alive
+        replica holder. The cluster walks these in order, CRC-verifying
+        replica reads."""
         info = sset.shards[node_id]
         sources: List[Tuple[int, str]] = []
-        if self.cluster.nodes[node_id].alive:
+        if self._holds(node_id, info.set_name):
             sources.append((node_id, info.set_name))
         sources.extend((holder, rep_name)
                        for holder, rep_name in info.replicas
-                       if self.cluster.nodes[holder].alive)
+                       if self._holds(holder, rep_name))
         return sources
+
+    # -- recovery source costing (ROADMAP "Recovery source costing") -----------
+    def node_pressure_live(self, node_id: int) -> float:
+        """Current MemoryManager pressure score of an alive node (0 for dead
+        nodes — they have no pool to pressure)."""
+        node = self.cluster.nodes.get(node_id)
+        if node is None or not node.alive or node.pool is None:
+            return 0.0
+        return node.pool.memory.pressure_score()
+
+    def _shard_bytes(self, sset, info) -> int:
+        return info.num_records * sset.dtype.itemsize
+
+    def recovery_plan(self, sset, shard_id: int,
+                      target_node: int) -> List[RecoverySource]:
+        """Every way to re-materialize ``sset``'s shard ``shard_id`` onto
+        ``target_node``, cheapest first. Candidates:
+
+        * the alive primary / each alive replica holder — a page-for-page
+          copy; costs the shard's bytes when the holder is remote, zero when
+          the bytes are already on the target;
+        * a heterogeneously partitioned replica of the same logical dataset
+          (``Cluster.register_replica_set``) — rebuild by re-running the
+          partitioner over its readable shards
+          (``core/replication.recover_target_shard``); costs every remote
+          byte of that replica set, since each shard must be scanned.
+
+        Ties break toward the source node with the lowest live memory
+        pressure: reading a shard off a node that is busy spilling faults
+        its pool on every page."""
+        info = sset.shards[shard_id]
+        shard_bytes = self._shard_bytes(sset, info)
+        plan: List[RecoverySource] = []
+        if self._holds(shard_id, info.set_name):
+            plan.append(RecoverySource(
+                kind="primary", holder=shard_id, set_name=info.set_name,
+                cost_bytes=0 if shard_id == target_node else shard_bytes,
+                pressure=self.node_pressure_live(shard_id)))
+        for holder, rep_name in info.replicas:
+            if not self._holds(holder, rep_name):
+                continue
+            plan.append(RecoverySource(
+                kind="replica", holder=holder, set_name=rep_name,
+                cost_bytes=0 if holder == target_node else shard_bytes,
+                pressure=self.node_pressure_live(holder)))
+        for rinfo in self.cluster.stats.replicas_of(sset.name):
+            alt = self.cluster.catalog.get(rinfo.set_name)
+            if alt is None or alt is sset or alt.name == sset.name:
+                continue
+            cost = 0
+            readable = True
+            pressures = [0.0]
+            for n, ainfo in alt.shards.items():
+                sources = self.read_sources(alt, n)
+                if not sources:
+                    readable = False
+                    break
+                holder = sources[0][0]
+                if holder != target_node:
+                    cost += self._shard_bytes(alt, ainfo)
+                pressures.append(self.node_pressure_live(holder))
+            if readable:
+                plan.append(RecoverySource(
+                    kind="rebuild", holder=None, set_name=None,
+                    cost_bytes=cost, pressure=max(pressures),
+                    replica_of=alt.name))
+        plan.sort(key=lambda s: s.sort_key)
+        return plan
+
+    def remesh_read_source(self, sset, shard_id: int,
+                           survivors: Sequence[int]) -> List[Tuple[int, str]]:
+        """Source ordering for the streaming remesh's per-shard scan: the
+        usual ``read_sources`` candidates, re-ranked so that a holder inside
+        the surviving domain (its slice of the re-partition stays local) and
+        under the least memory pressure streams the shard."""
+        surv = set(survivors)
+        ranked = sorted(
+            self.read_sources(sset, shard_id),
+            key=lambda hs: (hs[0] not in surv,
+                            self.node_pressure_live(hs[0]),
+                            hs[0] != shard_id, hs[0]))
+        return ranked
 
     # -- straggler re-execution ------------------------------------------------
     def backup_source(self, sset, shard_id: int,

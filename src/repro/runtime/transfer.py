@@ -34,14 +34,23 @@ def copy_set(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
              attrs: Optional[AttributeSet] = None) -> int:
     """Stream one locality set between pools page by page; returns bytes
     moved. This is the wire: a paged read on the source feeding a sequential
-    write on the destination."""
+    write on the destination. Each in-flight chunk is charged to the
+    destination's MemoryManager (``reserve``) so replica creation and
+    recovery copies show up in the same pressure accounting as shuffle pulls
+    and remesh streams."""
     dtype = np.dtype(dtype)
     ls_src = src_pool.get_set(src_set_name)
     ls_dst = dst_pool.create_set(dst_set_name, page_size, attrs)
     writer = SequentialWriter(dst_pool, ls_dst, dtype)
+    memory = getattr(dst_pool, "memory", None)
     moved = 0
     for recs in PageIterator(src_pool, ls_src, dtype, sorted(ls_src.pages)):
-        writer.append_batch(recs)
+        reservation = memory.reserve(recs.nbytes) if memory is not None else None
+        try:
+            writer.append_batch(recs)
+        finally:
+            if reservation is not None:
+                reservation.release()
         moved += recs.nbytes
     writer.close()
     return moved

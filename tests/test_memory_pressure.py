@@ -1,0 +1,530 @@
+"""Cluster-wide memory pressure (ISSUE 3): the per-node MemoryManager that
+owns eviction policy, the spill-capable distributed shuffle, the streaming
+remesh, and scheduler recovery-source costing.
+
+Acceptance scenarios:
+* a cluster shuffle whose total map output is >= 2x per-node pool capacity
+  completes with byte-identical aggregation results vs the in-memory path,
+  with nonzero spill counted in ``memory_report``;
+* ``remesh_degrade`` peak driver-side buffering stays O(page) (asserted via
+  MemoryManager high-water accounting) while producing the same post-remesh
+  shard contents as the gather-based path;
+* ``recover_node`` picks the cheapest costed source (asserted via
+  ``RecoveryReport.sources``), including the co-partitioned rebuild through
+  ``core/replication.recover_target_shard`` when no chain replica survives.
+"""
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferPool, MemoryManager, SpillStore,
+                        combine_content_checksums, record_content_checksum,
+                        shard_checksum)
+from repro.runtime.cluster import (Cluster, ClusterShuffle,
+                                   cluster_hash_aggregate)
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+REC2 = np.dtype([("key", np.int64), ("key2", np.int64), ("val", np.float64)])
+
+
+def _pairs(n, key_range, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, key_range, n)
+    recs["val"] = rng.random(n)
+    return recs
+
+
+def _oracle(recs):
+    uk, inv = np.unique(recs["key"], return_inverse=True)
+    out = np.zeros(len(uk))
+    np.add.at(out, inv, recs["val"])
+    return uk, out
+
+
+# -- MemoryManager accounting -------------------------------------------------
+def test_memory_manager_tracks_resident_pinned_spilled():
+    pool = BufferPool(1 << 16)
+    mm = pool.memory
+    ls = pool.create_set("a", 8192)
+    p1 = pool.new_page(ls)                       # allocated + pinned
+    assert mm.resident_bytes == 8192 and mm.pinned_bytes == 8192
+    pool.unpin(p1, dirty=True)
+    assert mm.pinned_bytes == 0 and mm.resident_bytes == 8192
+    # overflow the pool so p1 spills
+    others = [pool.new_page(ls) for _ in range(7)]
+    for p in others:
+        pool.unpin(p, dirty=True)
+    extra = pool.new_page(pool.create_set("b", 8192))
+    pool.unpin(extra, dirty=True)
+    assert mm.spilled_bytes > 0
+    assert mm.stats["spill_bytes"] > 0
+    spilled_before = mm.spilled_bytes
+    victim = next(p for p in ls.pages.values() if p.spilled and not p.resident)
+    pool.pin(victim)                             # fault back in (image stays)
+    pool.unpin(victim)
+    assert mm.stats["fetch_bytes"] >= 8192
+    # faulting one page in pages another out of the over-committed pool
+    assert mm.spilled_bytes > 0
+    assert mm.spilled_bytes == sum(
+        p.size for lset in (ls, pool.get_set("b"))
+        for p in lset.pages.values() if p.spilled and not p.resident)
+    # high-water marks are monotone and at least the live peaks
+    assert mm.resident_hwm >= mm.resident_bytes
+    assert mm.pinned_hwm >= 8192
+    pool.drop_set(ls)
+    pool.drop_set(pool.get_set("b"))
+    assert mm.resident_bytes == 0 and mm.spilled_bytes == 0
+
+
+def test_memory_manager_reserve_and_pressure():
+    mm = MemoryManager(1 << 20, pressure_watermark=0.5)
+    assert not mm.under_pressure() and mm.pressure_score() == 0.0
+    with mm.reserve(700 << 10) as res:
+        assert mm.under_pressure()
+        assert 0.0 < mm.pressure_score() <= 1.0
+        assert mm.reserved_bytes == 700 << 10
+    assert mm.reserved_bytes == 0
+    assert mm.reserved_hwm == 700 << 10          # HWM survives the release
+    assert not mm.under_pressure()
+    res.release()                                # double release is a no-op
+    assert mm.reserved_bytes == 0
+
+
+def test_write_through_copies_are_not_pressure():
+    """Regression: write-through durability copies hit the spill store but
+    the pages stay resident — they must not read as memory pressure."""
+    from repro.data.pipeline import user_data_attrs
+    pool = BufferPool(1 << 16)
+    ls = pool.create_set("user", 8192, user_data_attrs())
+    for i in range(4):                           # half the pool, persisted
+        p = pool.new_page(ls)
+        pool.view(p)[:] = i
+        pool.unpin(p, dirty=True)
+    assert pool.stats["spill_bytes"] > 0         # durability copies written
+    assert pool.memory.spilled_bytes == 0        # nothing paged out
+    assert not pool.memory.under_pressure()
+    assert pool.memory.pressure_score() == 0.0
+    pool.drop_set(ls)                            # images still cleaned up
+    assert pool.spill.held_page_ids() == set()
+    assert pool.memory.spilled_bytes == 0
+
+
+def test_remesh_driver_peak_is_per_call_window():
+    """Regression: driver_peak_bytes must measure THIS remesh, not the
+    driver manager's lifetime high-water mark."""
+    recs = _pairs(30_000, 1_000, seed=21)
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 14,
+                      replication_factor=1)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    with cluster.driver_memory.reserve(64 << 20):  # earlier O(dataset) stager
+        pass
+    cluster.kill_node(2)
+    report = cluster.remesh_degrade(streaming=True)
+    assert report.ok
+    assert report.driver_peak_bytes <= 2 * cluster.page_size
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+    cluster.shutdown()
+
+
+def test_pool_views_delegate_to_manager():
+    """pool.paging / pool.spill / pool.stats are the manager's objects."""
+    pool = BufferPool(1 << 16, policy="lru")
+    assert pool.paging is pool.memory.paging
+    assert pool.spill is pool.memory.spill
+    assert pool.stats is pool.memory.stats
+    assert pool.memory.policy == "lru"
+
+
+# -- content checksum (order-independent shard fingerprint) -------------------
+def test_content_checksum_is_order_independent_and_chunkable():
+    recs = _pairs(5_000, 200, seed=3)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(recs))
+    assert record_content_checksum(recs) == record_content_checksum(recs[perm])
+    parts = [record_content_checksum(recs[i:i + 777])
+             for i in range(0, len(recs), 777)]
+    assert combine_content_checksums(parts) == record_content_checksum(recs)
+    # duplicate-sensitive: doubling a record changes the fingerprint
+    assert record_content_checksum(np.concatenate([recs, recs[:1]])) != \
+        record_content_checksum(recs)
+
+
+# -- spill-store lifecycle (satellite bugfix) ---------------------------------
+def test_drop_set_deletes_spill_images(tmp_path):
+    """Regression: dropping a set must delete its spilled pages from the
+    SpillStore — on disk and in memory — not just free its arena pages."""
+    pool = BufferPool(1 << 16, SpillStore(str(tmp_path)))
+    ls_a = pool.create_set("a", 8192)
+    ls_b = pool.create_set("b", 8192)
+    for ls in (ls_a, ls_b):
+        for i in range(6):                       # 96K through a 64K pool
+            p = pool.new_page(ls)
+            pool.view(p)[:] = i
+            pool.unpin(p, dirty=True)
+    assert pool.spill.held_page_ids()            # something spilled
+    assert list(tmp_path.iterdir())
+    pool.drop_set(ls_a)
+    pool.drop_set(ls_b)
+    assert pool.spill.held_page_ids() == set()
+    assert list(tmp_path.iterdir()) == []
+    assert pool.memory.spilled_bytes == 0
+
+
+def test_kill_node_deletes_spill_files(tmp_path):
+    """A dead machine's local disk is gone: killing a node must not leave its
+    spill files behind (they used to leak under a real spill_dir)."""
+    cluster = Cluster(2, node_capacity=256 << 10, page_size=1 << 14,
+                      replication_factor=0, spill_dir=str(tmp_path))
+    recs = _pairs(40_000, 100, seed=4)           # 640K through 256K pools
+    cluster.create_sharded_set("big", recs, key_fn=lambda r: r["key"])
+    node_dirs = [d for d in tmp_path.iterdir() if any(d.iterdir())]
+    assert node_dirs                             # staging really spilled
+    cluster.kill_node(0)
+    leaked = list((tmp_path / "node0").iterdir())
+    assert leaked == []
+    cluster.shutdown()
+
+
+# -- over-capacity distributed shuffle (acceptance #3) ------------------------
+def _shuffle_aggregate(recs, node_capacity, policy="data-aware"):
+    cluster = Cluster(4, node_capacity=node_capacity, page_size=1 << 14,
+                      replication_factor=0, policy=policy)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    keys, vals = cluster_hash_aggregate(cluster, sset, "key", "val",
+                                        num_reducers=4, force_shuffle=True)
+    cluster.shutdown()
+    return (keys, vals), cluster
+
+
+def test_over_capacity_shuffle_matches_in_memory_bitwise():
+    n = 60_000                                   # 960K of pairs
+    recs = _pairs(n, 1 << 40, seed=5)
+    small_cap = 384 << 10                        # map output >= 2x capacity
+    assert recs.nbytes >= 2 * small_cap
+    (bk, bv), big = _shuffle_aggregate(recs, 64 << 20)
+    (sk, sv), small = _shuffle_aggregate(recs, small_cap)
+    # byte-identical results vs the in-memory path
+    assert np.array_equal(bk, sk)
+    assert np.array_equal(bv.view(np.uint64), sv.view(np.uint64))
+    uk, ov = _oracle(recs)
+    assert np.array_equal(sk, uk)
+    np.testing.assert_allclose(sv, ov, rtol=1e-9)
+    # the big pool never paged; the small one spilled and it is visible in
+    # both the per-set memory_report and the managers' pressure accounting
+    def total_spill(c):
+        return sum(s.get("spill_bytes", 0)
+                   for node in c.memory_report().values()
+                   for s in node.values())
+    assert total_spill(big) == 0
+    assert total_spill(small) > 0
+    assert sum(node.memory.stats["spill_bytes"]
+               for node in small.nodes.values()) > 0
+    assert any(node.memory.stats["fetch_bytes"] > 0
+               for node in small.nodes.values())
+
+
+def test_over_capacity_shuffle_under_lru_baseline_also_correct():
+    recs = _pairs(30_000, 1 << 40, seed=6)
+    (k1, v1), _ = _shuffle_aggregate(recs, 384 << 10, policy="lru")
+    uk, ov = _oracle(recs)
+    assert np.array_equal(k1, uk)
+    np.testing.assert_allclose(v1, ov, rtol=1e-9)
+
+
+def test_finish_maps_publishes_node_pressure():
+    cluster = Cluster(4, node_capacity=256 << 10, page_size=1 << 14,
+                      replication_factor=0)
+    recs = _pairs(40_000, 1 << 40, seed=7)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=4, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    pressures = cluster.stats.node_pressure_map()
+    assert pressures and all(0.0 <= p <= 1.0 for p in pressures.values())
+    assert any(p > 0 for p in pressures.values())   # the pools really paged
+    cluster.shutdown()
+
+
+def test_place_reducers_penalizes_pressured_nodes():
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 16,
+                      replication_factor=0)
+    sh = ClusterShuffle(cluster, "p", num_reducers=1, dtype=PAIR)
+    probe = np.arange(50_000, dtype=np.int64)
+    keys0 = probe[sh.partition_of_keys(probe) == 0]
+    heavy = np.zeros(3_000, PAIR)
+    heavy["key"] = keys0[:1][0]
+    light = np.zeros(500, PAIR)
+    light["key"] = keys0[:1][0]
+    sh.map_batch(1, heavy, key_fn=lambda p: p["key"])
+    sh.map_batch(2, light, key_fn=lambda p: p["key"])
+    sh.finish_maps()
+    assert cluster.scheduler.place_reducers("p", 1)[0] == 1  # byte-heaviest
+    # with node 1 reported as fully pressured, its locality is worth nothing
+    cluster.stats.record_node_pressure(1, 1.0)
+    assert cluster.scheduler.place_reducers("p", 1)[0] == 2
+    cluster.shutdown()
+
+
+# -- streaming remesh (acceptance #4) -----------------------------------------
+def _remesh_cluster(recs, streaming):
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 14,
+                      replication_factor=1)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(2)
+    report = cluster.remesh_degrade(streaming=streaming)
+    return cluster, sset, report
+
+
+def test_streaming_remesh_matches_gather_with_o_page_driver_memory():
+    recs = _pairs(50_000, 3_000, seed=8)
+    gc, gs, gr = _remesh_cluster(recs, streaming=False)
+    sc, ss, sr = _remesh_cluster(recs, streaming=True)
+    assert gr.ok and sr.ok and sr.streamed
+    assert sorted(gs.shards) == sorted(ss.shards)
+    for nid in gs.shards:
+        a = gc.read_shard(gs, nid)
+        b = sc.read_shard(ss, nid)
+        assert np.array_equal(a.view(np.uint8).reshape(len(a), -1),
+                              b.view(np.uint8).reshape(len(b), -1))
+        assert gs.shards[nid].checksum == ss.shards[nid].checksum
+        assert shard_checksum(b) == ss.shards[nid].checksum
+        assert record_content_checksum(b) == ss.shards[nid].content_checksum
+    # O(page) driver staging for the stream, O(dataset) for the gather —
+    # asserted through the driver MemoryManager's reservation high-water mark
+    assert sr.driver_peak_bytes <= 2 * sc.page_size
+    assert gr.driver_peak_bytes >= recs.nbytes
+    # the streamed bytes are accounted as traffic (the gather path never
+    # charged its driver round-trip)
+    assert sr.bytes_transferred > 0
+    gc.shutdown()
+    sc.shutdown()
+
+
+def test_streaming_remesh_replicas_and_reads_survive():
+    recs = _pairs(30_000, 1_000, seed=9)
+    cluster, sset, report = _remesh_cluster(recs, streaming=True)
+    assert report.ok
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+    for nid, info in sset.shards.items():
+        assert nid in report.node_ids
+        for holder, rep_name in info.replicas:
+            rep = cluster.nodes[holder].read_records(rep_name, sset.dtype)
+            assert shard_checksum(rep) == info.checksum
+    cluster.shutdown()
+
+
+def test_streaming_remesh_under_pool_pressure():
+    """Old + staged shards coexist during the stream; with pools sized below
+    the dataset the remesh must page, not fail."""
+    recs = _pairs(50_000, 3_000, seed=10)        # 800K vs 512K pools
+    cluster = Cluster(4, node_capacity=512 << 10, page_size=1 << 14,
+                      replication_factor=1)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(1)
+    report = cluster.remesh_degrade(streaming=True)
+    assert report.ok
+    assert report.driver_peak_bytes <= 2 * cluster.page_size
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+    assert sum(node.memory.stats["spill_bytes"]
+               for node in cluster.nodes.values() if node.alive) > 0
+    cluster.shutdown()
+
+
+def test_streaming_remesh_cleans_staging_on_failure(monkeypatch):
+    """A mid-stream failure must drop the @remesh staging sets (leaving the
+    old layout intact) so a retried remesh succeeds instead of tripping over
+    stale set names."""
+    import repro.runtime.cluster as rc
+    recs = _pairs(20_000, 500, seed=20)
+    cluster = Cluster(4, node_capacity=4 << 20, page_size=1 << 14,
+                      replication_factor=1)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(3)
+    orig = rc.dispatch_plan
+    calls = {"n": 0}
+
+    def flaky(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("injected mid-stream failure")
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(rc, "dispatch_plan", flaky)
+    with pytest.raises(RuntimeError, match="injected"):
+        cluster.remesh_degrade(streaming=True)
+    monkeypatch.setattr(rc, "dispatch_plan", orig)
+    leftovers = [name for node in cluster.nodes.values() if node.pool
+                 for name in node.pool.paging.sets if "@remesh" in name]
+    assert leftovers == []
+    report = cluster.remesh_degrade(streaming=True)
+    assert report.ok and report.resharded == ["t"]
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(np.sort(back["key"]), np.sort(recs["key"]))
+    cluster.shutdown()
+
+
+# -- recovery source costing (satellite) --------------------------------------
+def test_recovery_prefers_least_pressured_replica_holder():
+    cluster = Cluster(4, node_capacity=1 << 20, page_size=1 << 14,
+                      replication_factor=2)
+    recs = _pairs(5_000, 300, seed=11)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    holders = [h for h, _ in sset.shards[1].replicas]
+    assert sorted(holders) == [2, 3]
+    # push holder 2 over its watermark so its live pressure is nonzero
+    filler = _pairs(58_000, 100, seed=12)        # ~928K of a 1M pool
+    cluster.nodes[2].write_records("filler", filler, PAIR, 1 << 14)
+    assert cluster.nodes[2].memory.pressure_score() > 0
+    assert cluster.nodes[3].memory.pressure_score() == 0
+    cluster.kill_node(1)
+    plan = cluster.scheduler.recovery_plan(sset, 1, 1)
+    # both replica copies cost the same bytes; the tie breaks on pressure
+    assert [s.holder for s in plan[:2]] == [3, 2]
+    report = cluster.recover_node(1)
+    assert report.ok
+    assert report.sources["t:1"] == "replica@3"
+    cluster.shutdown()
+
+
+def test_recovery_rebuilds_from_co_partitioned_replica():
+    """No chain replica survives, but a heterogeneously partitioned replica
+    of the same logical data does: the scheduler costs the rebuild
+    (core/replication.recover_target_shard) and recovery executes it,
+    verified by the order-independent content checksum."""
+    rng = np.random.default_rng(13)
+    n = 20_000
+    recs = np.zeros(n, REC2)
+    recs["key"] = rng.integers(0, 2_000, n)
+    recs["key2"] = rng.integers(0, 2_000, n)
+    recs["val"] = rng.random(n)
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 14,
+                      replication_factor=0)
+    a = cluster.create_sharded_set("a", recs, key_fn=lambda r: r["key"],
+                                   partition_key="key", replication_factor=0)
+    b = cluster.create_sharded_set("b", recs, key_fn=lambda r: r["key2"],
+                                   partition_key="key2", replication_factor=1)
+    cluster.register_replica_set("a", b)
+    order = ["key", "key2", "val"]
+    lost = np.sort(cluster.read_shard(a, 1), order=order).copy()
+    cluster.kill_node(1)
+    report = cluster.recover_node(1)
+    assert report.ok
+    assert report.sources["a:1"] == "rebuild<-b"     # only viable source
+    assert report.sources["b:1"].startswith("replica@")
+    rebuilt = cluster.read_shard(a, 1)
+    assert np.array_equal(np.sort(rebuilt, order=order), lost)
+    # rebuilt order becomes the canonical layout: catalog CRC re-keyed
+    assert shard_checksum(rebuilt) == a.shards[1].checksum
+    assert record_content_checksum(rebuilt) == a.shards[1].content_checksum
+    cluster.shutdown()
+
+
+def test_recovery_plan_orders_by_cost():
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 14,
+                      replication_factor=1)
+    recs = _pairs(10_000, 500, seed=14)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    # recovering shard 1 onto its own replica holder is free; onto any other
+    # node it costs the shard's bytes
+    holder = sset.shards[1].replicas[0][0]
+    plan_home = cluster.scheduler.recovery_plan(sset, 1, target_node=1)
+    plan_onto_holder = cluster.scheduler.recovery_plan(sset, 1,
+                                                       target_node=holder)
+    shard_bytes = sset.shards[1].num_records * sset.dtype.itemsize
+    assert plan_home[0].cost_bytes in (0, shard_bytes)  # primary alive: free
+    rep = next(s for s in plan_onto_holder if s.kind == "replica")
+    assert rep.cost_bytes == 0                   # bytes already on the target
+    cluster.shutdown()
+
+
+# -- spill/fault under concurrency (satellite) --------------------------------
+THREADS = 6
+ROUNDS = 60
+
+
+def test_concurrent_pin_spill_fault_preserves_crc():
+    """Threads pin, rewrite, and fault pages of the same locality set while
+    an undersized pool forces constant eviction; every page's content must
+    match the CRC its owner recorded, at every read and at the end."""
+    pool = BufferPool(1 << 18)                   # 256K
+    ls = pool.create_set("shared", 1 << 14)      # 16K pages
+    n_pages = 24                                 # 384K: never all resident
+    pages = []
+    crcs = {}
+    rng = np.random.default_rng(0)
+    for i in range(n_pages):
+        p = pool.new_page(ls)
+        data = rng.integers(0, 256, p.size, dtype=np.uint8)
+        pool.view(p)[:] = data
+        crcs[p.page_id] = zlib.crc32(data.tobytes())
+        pool.unpin(p, dirty=True)
+        pages.append(p)
+    errors = []
+    barrier = threading.Barrier(THREADS)
+
+    def worker(tid):
+        trng = np.random.default_rng(100 + tid)
+        mine = pages[tid::THREADS]               # disjoint ownership
+        barrier.wait()
+        try:
+            for r in range(ROUNDS):
+                p = mine[int(trng.integers(0, len(mine)))]
+                view = pool.pin(p)
+                try:
+                    got = zlib.crc32(view.tobytes())
+                    if got != crcs[p.page_id]:
+                        errors.append(
+                            f"page {p.page_id}: crc {got:#x} != "
+                            f"{crcs[p.page_id]:#x} (round {r})")
+                        return
+                    fresh = trng.integers(0, 256, p.size, dtype=np.uint8)
+                    view[:] = fresh
+                    crcs[p.page_id] = zlib.crc32(fresh.tobytes())
+                finally:
+                    pool.unpin(p, dirty=True)
+        except Exception as e:  # noqa: BLE001 - surface any thread crash
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    assert pool.stats["spill_bytes"] > 0         # eviction really ran
+    assert pool.stats["fetch_bytes"] > 0         # pages really faulted
+    for p in pages:                              # final sweep
+        view = pool.pin(p)
+        try:
+            assert zlib.crc32(view.tobytes()) == crcs[p.page_id]
+        finally:
+            pool.unpin(p)
+    assert pool.memory.pinned_bytes == 0
+
+
+def test_concurrent_shuffle_pull_with_spill():
+    """Async reducer pulls against spilled map output: the engine's workers
+    fault pages back through multiple pools concurrently."""
+    cluster = Cluster(4, node_capacity=384 << 10, page_size=1 << 14,
+                      replication_factor=0)
+    recs = _pairs(50_000, 1 << 40, seed=15)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=8, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    sh.place_reducers_locally()
+    futs = [sh.pull_async(r) for r in range(8)]
+    pulled = [f.result(timeout=60) for f in futs]
+    allk = np.concatenate([p["key"] for p in pulled])
+    assert len(allk) == len(recs)
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+    for r in range(8):
+        sh.release_reducer(r)
+    cluster.shutdown()
