@@ -1,0 +1,131 @@
+"""Paper §9.2.2: the distributed equi-join under the three scheduler plans —
+co-partitioned (shuffle elided outright, net_bytes == 0), one side shuffled
+(only the non-co side moves, routed by the co side's storage scheme), and
+both sides shuffled (the layered-stack worst case the monolithic design
+avoids). Keys are zipf-skewed, which is what makes the byte accounting
+interesting: hot keys concentrate matching rows, so "which side moves"
+dominates the wire cost.
+
+Runnable standalone (the CI docs job does)::
+
+    PYTHONPATH=src python -m benchmarks.bench_join --smoke
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.pipeline import cluster_join
+from repro.runtime.cluster import Cluster
+
+from .common import record, scaled, timeit
+
+BUILD = np.dtype([("key", np.int64), ("rid", np.int64), ("bval", np.float64)])
+PROBE = np.dtype([("key", np.int64), ("rid", np.int64), ("pval", np.float64)])
+NODES = 4
+
+# mode -> the partition field each side is staged on ("key" = co-partitioned)
+MODES = {
+    "copartitioned": ("key", "key"),
+    "one_side_shuffled": ("key", "rid"),
+    "both_shuffled": ("rid", "rid"),
+}
+
+
+def _sides(nb: int, np_: int, seed: int = 0):
+    """Star-join shape: the build side is a dimension table (unique keys),
+    the probe side a zipf-skewed fact table over twice that key range (half
+    the probes miss), so output size stays O(probe) while the hot keys still
+    concentrate bytes on single nodes."""
+    rng = np.random.default_rng(seed)
+    key_range = nb * 2
+    build = np.zeros(nb, BUILD)
+    build["key"] = rng.permutation(key_range)[:nb]
+    build["rid"] = np.arange(nb)
+    build["bval"] = rng.random(nb)
+    probe = np.zeros(np_, PROBE)
+    probe["key"] = rng.zipf(1.3, np_).astype(np.int64) % key_range
+    probe["rid"] = np.arange(np_)
+    probe["pval"] = rng.random(np_)
+    return build, probe
+
+
+def _run_mode(mode: str, build: np.ndarray, probe: np.ndarray):
+    bfield, pfield = MODES[mode]
+    cluster = Cluster(NODES, node_capacity=64 << 20, page_size=1 << 17,
+                      replication_factor=0)
+    out, report = cluster_join(
+        cluster, f"bench.{mode}", build, probe, "key",
+        build_partition_field=bfield, probe_partition_field=pfield)
+    cluster.shutdown()
+    return {"net_bytes": report.net_bytes,
+            "shuffled_bytes": sum(report.shuffled_bytes.values()),
+            "output_rows": len(out),
+            "shuffle_sides": len(report.plan.shuffle_sides)}
+
+
+def run() -> None:
+    for np_ in (scaled(60_000), scaled(240_000)):
+        nb = np_ // 4
+        build, probe = _sides(nb, np_)
+        n = nb + np_
+        stats = {}
+        for mode in MODES:
+            last = []
+            t = timeit(lambda: last.append(_run_mode(mode, build, probe)))
+            s = last[-1]
+            stats[mode] = (t, s)
+            record(f"join/cluster{NODES}node/{mode}/n{n}", t * 1e6,
+                   f"recs_per_s={n/t:.0f};net_mb={s['net_bytes']/1e6:.2f};"
+                   f"rows={s['output_rows']}",
+                   recs_per_s=n / t, mode=mode, **s)
+        (tc, sc) = stats["copartitioned"]
+        (t1, s1) = stats["one_side_shuffled"]
+        (t2, s2) = stats["both_shuffled"]
+        record(f"join/cluster{NODES}node/movement_gain/n{n}", 0.0,
+               f"co_net={sc['net_bytes']};"
+               f"one_side_ratio={s1['net_bytes']/max(1, s2['net_bytes']):.3f}",
+               net_bytes_copartitioned=sc["net_bytes"],
+               net_bytes_one_side=s1["net_bytes"],
+               net_bytes_both=s2["net_bytes"],
+               copartitioned_is_free=bool(sc["net_bytes"] == 0),
+               seconds_copartitioned=tc, seconds_one_side=t1,
+               seconds_both=t2)
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+    import os
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="shrink problem sizes (same as BENCH_SMOKE=1)")
+    parser.add_argument("--json-out", default="BENCH_cluster.json",
+                        help="cluster artifact to refresh the join rows in")
+    args = parser.parse_args(argv)
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
+    from .common import ROWS, SCHEMA_VERSION, smoke_mode
+    print("name,us_per_call,derived")
+    run()
+    # refresh ONLY the join rows inside the shared cluster artifact — the
+    # shuffle/recovery trajectory other suites accumulated must survive a
+    # standalone join run (the CI docs job runs exactly this)
+    doc = {"schema_version": SCHEMA_VERSION,
+           "generated_by": "benchmarks/run.py", "smoke": smoke_mode(),
+           "results": []}
+    if os.path.exists(args.json_out):
+        with open(args.json_out) as f:
+            old = json.load(f)
+        doc["smoke"] = old.get("smoke", doc["smoke"])
+        doc["results"] = [r for r in old.get("results", [])
+                          if not r["name"].startswith("join/cluster")]
+    doc["results"] += [r for r in ROWS
+                       if r["name"].startswith("join/cluster")]
+    with open(args.json_out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# refreshed join rows in {args.json_out} "
+          f"({len(doc['results'])} rows, schema v{SCHEMA_VERSION})")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,9 @@ from typing import Callable, Dict, List, Optional
 
 # v2: overcap shuffle rows (spill_bytes / fetch_bytes / faults / overcommit
 # / data_aware_wins) joined the cluster artifact
-SCHEMA_VERSION = 2
+# v3: distributed-join rows (join/cluster*: net_bytes per scheduler plan,
+# copartitioned_is_free, movement_gain) joined the cluster artifact
+SCHEMA_VERSION = 3
 
 ROWS: List[dict] = []
 

@@ -16,7 +16,8 @@ import argparse
 import os
 import sys
 
-CLUSTER_PREFIXES = ["shuffle/cluster", "recovery/cluster", "recovery/degrade"]
+CLUSTER_PREFIXES = ["shuffle/cluster", "recovery/cluster", "recovery/degrade",
+                    "join/cluster"]
 
 
 def main(argv=None) -> None:
@@ -32,7 +33,7 @@ def main(argv=None) -> None:
     if args.smoke:
         os.environ["BENCH_SMOKE"] = "1"
 
-    from . import bench_recovery, bench_shuffle
+    from . import bench_join, bench_recovery, bench_shuffle
     from .common import write_results_json
 
     print("name,us_per_call,derived")
@@ -44,6 +45,7 @@ def main(argv=None) -> None:
         bench_seqrw.run()         # Fig. 6 / 7
         bench_shuffle.run()       # Table 4 + scheduler placement
         bench_hashagg.run()       # Table 5
+        bench_join.run()          # §9.2.2 distributed join plans
         bench_kmeans.run()        # Fig. 2
         bench_replicas.run()      # Fig. 4
         bench_recovery.run()      # Fig. 5 + elastic degrade
@@ -52,6 +54,7 @@ def main(argv=None) -> None:
         roofline.run(write_csv=True)
     else:
         bench_shuffle.run()
+        bench_join.run()
         bench_recovery.run()
     write_results_json(args.json_out, prefixes=CLUSTER_PREFIXES)
 

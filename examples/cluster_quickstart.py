@@ -1,18 +1,23 @@
-"""Cluster quickstart: the paper's system in ~60 lines.
+"""Cluster quickstart: the paper's system in ~90 lines.
 
-Builds a 4-node cluster (one unified buffer pool per node), stages a dataset
-as a sharded locality set with chain replicas, runs a distributed
-hash-aggregation (shuffle by key hash -> per-node hash service), then kills a
-node and recovers its shards from replicas with checksum verification.
+Builds a 4-node cluster — one unified buffer pool per node, each owned by a
+per-node ``MemoryManager`` (``node.memory``: eviction policy, spill store,
+resident/pinned/spilled/reserved accounting and the ``reserve()`` /
+``pressure_score()`` backpressure API). Stages a dataset as a sharded
+locality set with chain replicas, runs a distributed hash-aggregation, joins
+a co-partitioned replica pair with ZERO network bytes (the scheduler proves
+nothing needs to move — paper §9.2.2), then kills a node and recovers its
+shards from replicas with checksum verification.
 
 Run: PYTHONPATH=src python examples/cluster_quickstart.py
 """
 import numpy as np
 
-from repro.data.pipeline import cluster_aggregate
+from repro.data.pipeline import cluster_aggregate, cluster_join
 from repro.runtime.cluster import Cluster
 
 REC = np.dtype([("key", np.int64), ("val", np.float64)])
+ITEM = np.dtype([("key", np.int64), ("rid", np.int64), ("qty", np.float64)])
 
 
 def main() -> None:
@@ -35,12 +40,38 @@ def main() -> None:
     print(f"group-by produced {len(keys)} groups; "
           f"shuffle moved {cluster.net_bytes / 1e6:.2f} MB across nodes")
 
+    # --- co-partitioned join: the scheduler moves NOTHING ------------------
+    # Both sides stage partitioned on the join key, so the statistics DB can
+    # prove every matching key pair already shares a node: the shuffle is
+    # elided outright and the join streams shard-locally through each pool.
+    customers = np.zeros(5_000, REC)
+    customers["key"] = np.arange(5_000)
+    customers["val"] = rng.random(5_000)
+    orders = np.zeros(60_000, ITEM)
+    orders["key"] = rng.integers(0, 5_000, len(orders))
+    orders["rid"] = np.arange(len(orders))
+    orders["qty"] = rng.random(len(orders))
+    base_net = cluster.net_bytes
+    joined, report = cluster_join(cluster, "cust_orders",
+                                  customers, orders, "key",
+                                  replication_factor=0)
+    assert report.shuffle_free and report.net_bytes == 0
+    assert cluster.net_bytes == base_net           # zero bytes crossed nodes
+    print(f"co-partitioned join matched {len(joined)} rows moving "
+          f"{report.net_bytes} network bytes (plan: shuffle "
+          f"{list(report.plan.shuffle_sides) or 'nothing'})")
+
+    # each node's MemoryManager saw the join's build tables as reservations
+    hwm = max(node.memory.pressure_report()["reserved_hwm"]
+              for node in cluster.nodes.values())
+    print(f"peak per-node staging during the join: {hwm / 1e3:.0f} KB "
+          f"(reserve-charged, spills instead of OOM-ing when over budget)")
+
     # --- kill a node, recover from replicas --------------------------------
     cluster.kill_node(2)
-    try:
-        cluster.read_sharded(sset)
-    except Exception as e:
-        print(f"read with node 2 down fails as expected: {e}")
+    survived = cluster.read_sharded(sset)  # scheduler reroutes dead-owner
+    assert np.array_equal(np.sort(survived["key"]), np.sort(records["key"]))
+    print("reads with node 2 down served from CRC-verified replicas")
     report = cluster.recover_node(2)
     assert report.ok, report.checksum_failures
     print(f"recovered node 2: {report.shards_recovered} shards, "

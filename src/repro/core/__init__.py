@@ -16,10 +16,11 @@ from .replication import (DistributedSet, PartitionScheme, ReplicaRegistration,
                           record_content_checksum, recover_source_shard,
                           recover_target_shard, register_replica,
                           replica_nodes, shard_checksum)
-from .services import (HashService, PageIterator, SequentialWriter,
-                       ShuffleService, VirtualShuffleBuffer, as_record_bytes,
-                       from_record_bytes, get_page_iterators, job_data_attrs,
-                       join_service, read_all)
+from .services import (HashService, JoinService, PageIterator,
+                       SequentialWriter, ShuffleService, VirtualShuffleBuffer,
+                       as_record_bytes, canonical_join_sort, from_record_bytes,
+                       get_page_iterators, job_data_attrs, join_output_dtype,
+                       join_records, join_service, read_all)
 from .statistics import ReplicaInfo, StatisticsDB
 from .tlsf import TLSF
 
@@ -33,7 +34,8 @@ __all__ = [
     "ShuffleService", "SpillStore", "StatisticsDB", "TLSF",
     "VirtualShuffleBuffer", "WritingPattern", "eviction_overhead",
     "eviction_ratio", "expected_conflicts", "fail_node", "get_page_iterators",
-    "as_record_bytes", "from_record_bytes", "job_data_attrs",
+    "as_record_bytes", "from_record_bytes", "job_data_attrs", "JoinService",
+    "canonical_join_sort", "join_output_dtype", "join_records",
     "join_service", "partition_set", "random_dispatch", "read_all",
     "replica_nodes", "shard_checksum", "record_content_checksum",
     "combine_content_checksums",

@@ -103,10 +103,20 @@ class PartitionScheme:
     num_partitions: int
     num_nodes: int
 
-    def partition_of(self, records: np.ndarray) -> np.ndarray:
-        keys = self.key_fn(records).astype(np.uint64)
-        h = keys * np.uint64(0x9E3779B97F4A7C15)
+    def partition_of_keys(self, keys: np.ndarray) -> np.ndarray:
+        """Partition id from bare int64 keys — the join path routes a
+        shuffled side by the *other* side's scheme, whose key field may have
+        a different name, so the hash must be reachable without records."""
+        h = np.asarray(keys).astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
         return (h % np.uint64(self.num_partitions)).astype(np.int64)
+
+    def partition_of(self, records: np.ndarray) -> np.ndarray:
+        return self.partition_of_keys(self.key_fn(records))
+
+    def slot_of_keys(self, keys: np.ndarray) -> np.ndarray:
+        """Scheme slot (index into a sharded set's ``node_ids``) per key."""
+        return _node_of(self.partition_of_keys(keys), self.num_partitions,
+                        self.num_nodes)
 
     def node_of_records(self, records: np.ndarray) -> np.ndarray:
         return _node_of(self.partition_of(records), self.num_partitions,

@@ -521,28 +521,199 @@ class HashService:
 
 
 # ---------------------------------------------------------------------------
-# Join service (paper §8, sketched there; full implementation here)
+# Join service (paper §8): partitioned hash join through the buffer pool
 # ---------------------------------------------------------------------------
+def join_output_dtype(build_dtype: np.dtype, probe_dtype: np.dtype,
+                      build_key: str, probe_key: str) -> np.dtype:
+    """Output record layout for a materialized equi-join: the join key first,
+    then the build side's non-key fields (prefixed ``b_``), then the probe
+    side's (prefixed ``p_``). Scalar fields only — the canonical output order
+    is a lexicographic sort over every field."""
+    build_dtype = np.dtype(build_dtype)
+    probe_dtype = np.dtype(probe_dtype)
+    fields = [("key", build_dtype.fields[build_key][0])]
+    fields += [(f"b_{n}", build_dtype.fields[n][0])
+               for n in build_dtype.names if n != build_key]
+    fields += [(f"p_{n}", probe_dtype.fields[n][0])
+               for n in probe_dtype.names if n != probe_key]
+    return np.dtype(fields)
+
+
+def canonical_join_sort(out: np.ndarray) -> np.ndarray:
+    """Sort joined records into their canonical total order (every field,
+    first field most significant). A hash join emits matches in probe order,
+    which differs between a single-pool run and a distributed one — after this
+    sort the two are byte-identical, which is how equivalence is asserted."""
+    if len(out) <= 1:
+        return out
+    order = np.lexsort(tuple(out[f] for f in reversed(out.dtype.names)))
+    return out[order]
+
+
+class JoinService:
+    """Partitioned hash join over buffer-pool pages (paper §8).
+
+    Build-side records are appended page by page into a locality set, so an
+    over-capacity build *spills through the pool's eviction policy* instead of
+    growing an unbounded heap table; only the join keys stay resident, as a
+    sorted row index. Probing is vectorized (binary search over the sorted
+    keys) and matched build rows are fetched back one page at a time —
+    faulting any spilled build pages in transparently, the same
+    monolithic-pool story as the hash service's partial-aggregate pages.
+    """
+
+    def __init__(self, pool: BufferPool, name: str,
+                 build_dtype: np.dtype, probe_dtype: np.dtype,
+                 build_key: str, probe_key: str,
+                 page_size: int = 1 << 16,
+                 attrs_factory: Optional[Callable[[], AttributeSet]] = job_data_attrs):
+        self.pool = pool
+        self.build_dtype = np.dtype(build_dtype)
+        self.probe_dtype = np.dtype(probe_dtype)
+        self.build_key = build_key
+        self.probe_key = probe_key
+        self.out_dtype = join_output_dtype(self.build_dtype, self.probe_dtype,
+                                           build_key, probe_key)
+        attrs = attrs_factory() if attrs_factory else None
+        self.ls = pool.create_set(name, page_size, attrs)
+        self._writer = SequentialWriter(pool, self.ls, self.build_dtype)
+        self.per_page = self._writer.per_page
+        self._key_chunks: List[np.ndarray] = []
+        self.build_rows = 0
+        self._skeys: Optional[np.ndarray] = None   # build keys, sorted
+        self._srows: Optional[np.ndarray] = None   # row id of each sorted key
+        self._pids: List[int] = []
+
+    # -- build side ------------------------------------------------------------
+    def build_batch(self, records: np.ndarray) -> None:
+        if len(records) == 0:
+            return
+        self._key_chunks.append(
+            np.asarray(records[self.build_key], np.int64).copy())
+        self._writer.append_batch(records)
+        self.build_rows += len(records)
+
+    def finish_build(self) -> None:
+        """Seal the build side: close the writer (its pages become evictable)
+        and sort the resident key index for binary-search probing."""
+        self._writer.close()
+        self._pids = sorted(self.ls.pages)
+        keys = (np.concatenate(self._key_chunks) if self._key_chunks
+                else np.empty(0, np.int64))
+        self._key_chunks = []
+        order = np.argsort(keys, kind="stable")
+        self._skeys = keys[order]
+        self._srows = order
+
+    def _fetch_build_rows(self, row_ids: np.ndarray) -> np.ndarray:
+        """Gather build records by row id, pinning each touched page once
+        (row ids are page-grouped first, so a spilled page faults in at most
+        once per probe batch)."""
+        out = np.empty(len(row_ids), self.build_dtype)
+        if len(row_ids) == 0:
+            return out
+        order = np.argsort(row_ids, kind="stable")
+        rs = row_ids[order]
+        pg = rs // self.per_page
+        bounds = np.flatnonzero(np.diff(pg)) + 1
+        for a, b in zip(np.concatenate([[0], bounds]),
+                        np.concatenate([bounds, [len(rs)]])):
+            page = self.ls.pages[self._pids[int(pg[a])]]
+            view = self.pool.pin(page)
+            try:
+                n = int(view[:_HEADER].view(np.int64)[0])
+                recs = from_record_bytes(view[_HEADER:], self.build_dtype, n)
+                out[order[a:b]] = recs[rs[a:b] % self.per_page]
+            finally:
+                self.pool.unpin(page)
+        return out
+
+    # -- probe side ------------------------------------------------------------
+    def _match_positions(self, probe_keys: np.ndarray):
+        """(probe_row_idx, build_row_id) for every match of a probe batch."""
+        pk = np.asarray(probe_keys, np.int64)
+        left = np.searchsorted(self._skeys, pk, "left")
+        counts = np.searchsorted(self._skeys, pk, "right") - left
+        m = counts > 0
+        cm, lm = counts[m], left[m]
+        offs = np.concatenate([[0], np.cumsum(cm)])
+        total = int(offs[-1])
+        pos = np.repeat(lm, cm) + (np.arange(total) - np.repeat(offs[:-1], cm))
+        return np.repeat(np.flatnonzero(m), cm), self._srows[pos]
+
+    def probe_count(self, records: np.ndarray) -> int:
+        """Match count for a probe batch without materializing the output."""
+        if len(records) == 0 or self.build_rows == 0:
+            return 0
+        pk = np.asarray(records[self.probe_key], np.int64)
+        return int((np.searchsorted(self._skeys, pk, "right")
+                    - np.searchsorted(self._skeys, pk, "left")).sum())
+
+    def probe_batch(self, records: np.ndarray) -> np.ndarray:
+        """Probe the build table with one batch; returns the matched joined
+        records (un-ordered — callers canonical-sort the final concat)."""
+        if len(records) == 0 or self.build_rows == 0:
+            return np.empty(0, self.out_dtype)
+        probe_idx, build_rows = self._match_positions(records[self.probe_key])
+        if len(probe_idx) == 0:
+            return np.empty(0, self.out_dtype)
+        brecs = self._fetch_build_rows(build_rows)
+        precs = records[probe_idx]
+        out = np.empty(len(probe_idx), self.out_dtype)
+        out["key"] = precs[self.probe_key]
+        for f in self.build_dtype.names:
+            if f != self.build_key:
+                out[f"b_{f}"] = brecs[f]
+        for f in self.probe_dtype.names:
+            if f != self.probe_key:
+                out[f"p_{f}"] = precs[f]
+        return out
+
+    def close(self) -> None:
+        """End the build table's job-data lifetime and return its pages."""
+        self.ls.end_lifetime(self.pool.clock)
+        self.pool.drop_set(self.ls)
+
+
+def join_records(pool: BufferPool, build_ls: LocalitySet,
+                 probe_ls: LocalitySet, build_dtype: np.dtype,
+                 probe_dtype: np.dtype, build_key: str, probe_key: str,
+                 out_name: str = "join_out",
+                 page_size: int = 1 << 16) -> np.ndarray:
+    """Single-pool materialized equi-join — the reference the distributed
+    ``runtime/join.ClusterJoin`` must match byte-for-byte (after the shared
+    canonical sort). Streams both sides through the sequential read service;
+    the build table lives in pool pages via ``JoinService``."""
+    js = JoinService(pool, f"{out_name}.build", build_dtype, probe_dtype,
+                     build_key, probe_key, page_size=page_size)
+    for recs in PageIterator(pool, build_ls, build_dtype,
+                             sorted(build_ls.pages)):
+        js.build_batch(recs)
+    js.finish_build()
+    outs = [js.probe_batch(recs)
+            for recs in PageIterator(pool, probe_ls, probe_dtype,
+                                     sorted(probe_ls.pages))]
+    js.close()
+    out = (np.concatenate(outs) if outs
+           else np.empty(0, js.out_dtype))
+    return canonical_join_sort(out)
+
+
 def join_service(pool: BufferPool, build_ls: LocalitySet, probe_ls: LocalitySet,
                  build_dtype: np.dtype, probe_dtype: np.dtype,
                  build_key: str, probe_key: str,
                  out_name: str = "join_out") -> np.ndarray:
-    """Hash join: build a map from ``build_ls`` records, probe with
-    ``probe_ls`` records, return matched (probe, build) pairs' keys.
-
-    Uses the sequential read service on both sides; the build map is an
-    ordinary dict here (its pages are what the hash service manages when the
-    build side exceeds memory — benchmarks use HashService for that case).
-    """
-    table: Dict[int, List[int]] = {}
-    for recs in PageIterator(pool, build_ls, build_dtype, sorted(build_ls.pages)):
-        keys = recs[build_key]
-        for idx, k in enumerate(keys.tolist()):
-            table.setdefault(k, []).append(idx)
-    matches = 0
-    for recs in PageIterator(pool, probe_ls, probe_dtype, sorted(probe_ls.pages)):
-        keys = recs[probe_key]
-        for k in keys.tolist():
-            if k in table:
-                matches += len(table[k])
+    """Hash join match count: build a table from ``build_ls``, probe with
+    ``probe_ls``. Kept as the count-only entry point (``join_records``
+    materializes the joined rows) — both run on ``JoinService``."""
+    js = JoinService(pool, f"{out_name}.tbl", build_dtype, probe_dtype,
+                     build_key, probe_key)
+    for recs in PageIterator(pool, build_ls, build_dtype,
+                             sorted(build_ls.pages)):
+        js.build_batch(recs)
+    js.finish_build()
+    matches = sum(js.probe_count(recs)
+                  for recs in PageIterator(pool, probe_ls, probe_dtype,
+                                           sorted(probe_ls.pages)))
+    js.close()
     return np.array([matches], dtype=np.int64)

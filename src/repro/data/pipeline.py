@@ -320,3 +320,53 @@ def cluster_aggregate(cluster, name: str, records: np.ndarray,
     finally:
         if not keep_dataset:
             cluster.drop_sharded_set(sset)
+
+
+def cluster_join(cluster, name: str, build_records: np.ndarray,
+                 probe_records: np.ndarray, key_field: str,
+                 build_partition_field: Optional[str] = None,
+                 probe_partition_field: Optional[str] = None,
+                 page_size: int = 1 << 18,
+                 replication_factor: Optional[int] = None,
+                 keep_datasets: bool = False,
+                 num_reducers: Optional[int] = None,
+                 step_timer=None):
+    """The end-to-end distributed equi-join (paper §9.2.2), driven through
+    the cluster scheduler: stage both sides as sharded locality sets, then
+    join on ``key_field`` moving only what the scheduler cannot prove is
+    already in place.
+
+    Both sides default to partitioning on the join key — the storage layer
+    sees the query, stages the data co-partitioned, and the scheduler elides
+    the shuffle entirely (``report.net_bytes == 0``, the paper's flagship
+    result). Pass a different ``build_partition_field`` /
+    ``probe_partition_field`` to stage a side non-co-partitioned: one
+    non-co side shuffles *only that side* (routed by the co side's own
+    scheme); both non-co shuffles both with byte-weighted, pressure-aware
+    reducer placement. Straggler re-execution rides along via
+    ``step_timer``, exactly as the aggregation path.
+
+    Returns ``(records, report)``: the canonical-sorted joined records
+    (byte-identical to the single-pool ``core.services.join_records``
+    reference) and the ``runtime.join.JoinReport``."""
+    from ..runtime.join import ClusterJoin
+
+    def _staged(tag: str, records: np.ndarray, partition_field: str):
+        return cluster.create_sharded_set(
+            f"{name}.{tag}", records,
+            key_fn=lambda r, f=partition_field: np.asarray(r[f]).astype(np.int64),
+            page_size=page_size, replication_factor=replication_factor,
+            partition_key=partition_field)
+
+    build = _staged("build", build_records,
+                    build_partition_field or key_field)
+    probe = _staged("probe", probe_records,
+                    probe_partition_field or key_field)
+    try:
+        return ClusterJoin(cluster, build, probe, key_field,
+                           num_reducers=num_reducers,
+                           step_timer=step_timer).execute()
+    finally:
+        if not keep_datasets:
+            cluster.drop_sharded_set(build)
+            cluster.drop_sharded_set(probe)

@@ -1,15 +1,17 @@
 from .watchdog import CollectiveWatchdog, HostMonitor, StepTimer
 from .elastic import plan_remesh, surviving_mesh_shape, surviving_node_ids
-from .scheduler import AggregationPlan, ClusterScheduler
+from .scheduler import AggregationPlan, ClusterScheduler, JoinPlan
 from .transfer import TransferEngine, TransferError, TransferFuture, copy_set
 from .cluster import (Cluster, ClusterShuffle, DeadNodeError, RecoveryReport,
                       RemeshReport, ShardInfo, ShardedSet, StorageNode,
                       cluster_hash_aggregate, dispatch_plan)
+from .join import ClusterJoin, JoinReport, scheme_slot_of_keys
 
 __all__ = ["CollectiveWatchdog", "HostMonitor", "StepTimer", "plan_remesh",
            "surviving_mesh_shape", "surviving_node_ids", "AggregationPlan",
-           "ClusterScheduler", "TransferEngine", "TransferError",
+           "ClusterScheduler", "JoinPlan", "TransferEngine", "TransferError",
            "TransferFuture", "copy_set", "Cluster", "ClusterShuffle",
            "DeadNodeError", "RecoveryReport", "RemeshReport", "ShardInfo",
            "ShardedSet", "StorageNode", "cluster_hash_aggregate",
-           "dispatch_plan"]
+           "dispatch_plan", "ClusterJoin", "JoinReport",
+           "scheme_slot_of_keys"]

@@ -37,7 +37,7 @@ import threading
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -846,13 +846,18 @@ class ClusterShuffle:
 
     def __init__(self, cluster: Cluster, name: str, num_reducers: int,
                  dtype: np.dtype, page_size: Optional[int] = None,
-                 scheduler: Optional[ClusterScheduler] = None):
+                 scheduler: Optional[ClusterScheduler] = None,
+                 partition_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None):
         self.cluster = cluster
         self.name = name
         self.num_reducers = num_reducers
         self.dtype = np.dtype(dtype)
         self.page_size = page_size or cluster.page_size
         self.scheduler = scheduler or cluster.scheduler
+        # keys -> reducer partition override; the join path routes a shuffled
+        # side by the *stationary* side's storage scheme so matching keys
+        # land on the nodes whose build shards already sit there
+        self.partition_fn = partition_fn
         self.placement: Optional[Dict[int, int]] = None
         self._services: Dict[int, ShuffleService] = {}
         self._pulled: Dict[int, Tuple[str, int]] = {}  # reducer -> (set, node)
@@ -886,12 +891,15 @@ class ClusterShuffle:
         return self._services[node_id]
 
     def partition_of_keys(self, keys: np.ndarray) -> np.ndarray:
+        if self.partition_fn is not None:
+            return self.partition_fn(keys)
         # deliberately NOT the storage-placement hash (PartitionScheme's
         # golden-ratio multiplier): reusing it
         # would silently co-locate every record with its reducer and the
         # shuffle would never exercise the transfer path. Shuffle-free
-        # execution is an explicit scheduler decision (plan_aggregation), not
-        # a hash collision.
+        # execution is an explicit scheduler decision (plan_aggregation /
+        # plan_join), not a hash collision; the join path opts in to scheme
+        # routing explicitly via ``partition_fn``.
         h = keys.astype(np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)
         h ^= h >> np.uint64(29)
         return (h % np.uint64(self.num_reducers)).astype(np.int64)
@@ -1055,6 +1063,29 @@ class ClusterShuffle:
         writer.close()
         self._pulled[reducer] = (reduce_set, dst)
         return dst_node.read_records(reduce_set, self.dtype)
+
+    def stream_partition(self, reducer: int,
+                         dst_node: int) -> Iterator[np.ndarray]:
+        """Stream partition ``reducer`` straight off every map node's shuffle
+        service, small-page by small-page, with byte accounting against
+        ``dst_node`` as the consumer — no reducer-set staging at all. This is
+        the join path's probe feed: chunks go directly into the join tables.
+        Yielded arrays are views valid only until the next iteration (copy to
+        retain); call ``release_partition`` once the consumer is done."""
+        for node_id, svc in sorted(self._services.items()):
+            for chunk in svc.iter_partition(reducer):
+                if node_id == dst_node:
+                    self.cluster.add_local_bytes(chunk.nbytes)
+                else:
+                    self.cluster.add_net_bytes(chunk.nbytes)
+                yield chunk
+
+    def release_partition(self, reducer: int) -> None:
+        """End the map-side lifetime of one partition on every map node
+        (what ``pull`` does implicitly; ``stream_partition`` consumers call
+        it explicitly once their join/aggregate has drained the chunks)."""
+        for svc in self._services.values():
+            svc.release_partition(reducer)
 
     def pull_async(self, reducer: int, after: Sequence = ()):
         """Submit ``pull(reducer)`` to the transfer engine; returns its

@@ -18,6 +18,12 @@ asks the scheduler where to put things:
   already partitioned on the aggregation key (``stats.best_replica`` finds a
   co-partitioned replica), the shuffle is skipped outright: every node
   aggregates its own shard and the merge is disjoint. net_bytes == 0.
+* **Join planning** (``plan_join``) — the §9.2.2 flagship: an equi-join
+  shuffles *only the non-co-partitioned side* (or neither, when a
+  co-partitioned replica pair is registered), routing the moving side by the
+  stationary side's own storage scheme; when both sides must move, reducer
+  placement follows the combined byte statistics with the same pressure
+  discount as aggregation.
 * **Read-source selection** (``read_sources``) — reads of a dead owner's
   shard are routed to a surviving CRC-verified replica holder rather than
   failing.
@@ -73,6 +79,34 @@ class AggregationPlan:
         return self.co_partitioned
 
 
+@dataclass
+class JoinPlan:
+    """How a two-sided equi-join should execute (paper §9.2.2).
+
+    ``build_name``/``probe_name`` are the sharded sets to actually read —
+    possibly co-partitioned replicas of the handles the query came in with
+    (``stats.best_replica`` routing, same as ``plan_aggregation``).
+    ``shuffle_sides`` lists which sides must move: empty when both sides are
+    co-partitioned *and aligned* (same partition count, same placement
+    domain), one side when the other can anchor the join in place, both only
+    when neither side is partitioned on the key. ``anchor`` names the
+    stationary side (``"build"``/``"probe"``) for the one-side case — the
+    shuffled side is routed by the anchor's own storage scheme, so matching
+    keys land exactly where the anchor's shards already sit."""
+
+    key_field: str
+    build_name: str
+    probe_name: str
+    shuffle_sides: Tuple[str, ...]      # () | 1 side | ("build", "probe")
+    anchor: Optional[str] = None        # stationary side for one-side shuffles
+    build_bytes: int = 0
+    probe_bytes: int = 0
+
+    @property
+    def shuffle_free(self) -> bool:
+        return not self.shuffle_sides
+
+
 class ClusterScheduler:
     """Placement decisions over a ``Cluster`` (duck-typed: anything with
     ``nodes``, ``alive_node_ids()`` and ``stats``)."""
@@ -85,6 +119,30 @@ class ClusterScheduler:
         """The PR-1 policy: round-robin over the alive membership."""
         alive = self.cluster.alive_node_ids()
         return {r: alive[r % len(alive)] for r in range(num_reducers)}
+
+    def _place_by_bytes(self, shuffle_names: Sequence[str],
+                        num_reducers: int) -> Dict[int, int]:
+        """The placement core shared by aggregation and join shuffles:
+        reducer ``r`` goes to the alive node holding the most map-output
+        bytes for partition ``r``, summed over every named shuffle,
+        pressure-discounted; ties fall back to the baseline node."""
+        stats = self.cluster.stats
+        placement = self.baseline_placement(num_reducers)
+        for r in range(num_reducers):
+            base = placement[r]
+            by_node: Dict[int, int] = {}
+            for name in shuffle_names:
+                for n, b in stats.shuffle_partition_bytes(name, r).items():
+                    if self.cluster.nodes[n].alive:
+                        by_node[n] = by_node.get(n, 0) + b
+            if not by_node:
+                continue
+            score = {n: b * (1.0 - stats.node_pressure(n))
+                     for n, b in by_node.items()}
+            placement[r] = max(
+                score,
+                key=lambda n: (score[n], n == base, -n))
+        return placement
 
     def place_reducers(self, shuffle_name: str,
                        num_reducers: int) -> Dict[int, int]:
@@ -103,21 +161,7 @@ class ClusterScheduler:
         That is a deliberate trade of network bytes for fault avoidance, so
         under pressure the plan may ship more bytes than round-robin
         would."""
-        stats = self.cluster.stats
-        placement = self.baseline_placement(num_reducers)
-        for r in range(num_reducers):
-            base = placement[r]
-            by_node = {n: b for n, b
-                       in stats.shuffle_partition_bytes(shuffle_name, r).items()
-                       if self.cluster.nodes[n].alive}
-            if not by_node:
-                continue
-            score = {n: b * (1.0 - stats.node_pressure(n))
-                     for n, b in by_node.items()}
-            placement[r] = max(
-                score,
-                key=lambda n: (score[n], n == base, -n))
-        return placement
+        return self._place_by_bytes([shuffle_name], num_reducers)
 
     def placement_net_bytes(self, shuffle_name: str,
                             placement: Dict[int, int]) -> int:
@@ -141,6 +185,17 @@ class ClusterScheduler:
         ``key_field``, registered via ``Cluster.register_replica_set``) makes
         the query shuffle-free even when the set handed in is not — the
         paper's "select a Pangea replica that is the best for the query"."""
+        target, co, replica = self._resolve_side(sset, key_field)
+        return AggregationPlan(co_partitioned=co, replica=replica,
+                               target_name=target.name)
+
+    # -- join planning (paper §9.2.2: shuffle only the non-co side) ------------
+    def _resolve_side(self, sset, key_field: str):
+        """Route one query input through the replica catalog: prefer a
+        co-partitioned replica of the same logical dataset (the paper's
+        "select a Pangea replica that is the best for the query"). Shared by
+        aggregation and join planning; returns ``(target_set, co,
+        replica_info)``."""
         replica = self.cluster.stats.best_replica(sset.name, key_field)
         target = sset
         if (replica is not None and replica.partition_key == key_field
@@ -150,8 +205,68 @@ class ClusterScheduler:
                 target = alt
         co = (replica is not None and replica.partition_key == key_field
               and target.partition_key == key_field)
-        return AggregationPlan(co_partitioned=co, replica=replica,
-                               target_name=target.name)
+        return target, co, replica
+
+    def set_bytes(self, sset) -> int:
+        """Catalog-metadata size of a sharded set (what join planning costs
+        sides by — no data is read to make the plan)."""
+        return sum(info.num_records for info in sset.shards.values()) \
+            * sset.dtype.itemsize
+
+    @staticmethod
+    def _aligned(a, b) -> bool:
+        """Two sets partitioned on the same key route every key to the same
+        node iff they share the partition count and the placement domain (the
+        hash is deterministic, so that is the whole condition)."""
+        return (a.scheme.num_partitions == b.scheme.num_partitions
+                and list(a.node_ids) == list(b.node_ids))
+
+    def plan_join(self, build_sset, probe_sset, key_field: str) -> JoinPlan:
+        """Decide placement and movement for an equi-join on ``key_field``:
+
+        * both sides co-partitioned and aligned → shuffle *neither*; every
+          node joins its own build/probe shard pair (net_bytes == 0);
+        * exactly one side co-partitioned → it anchors the join; only the
+          non-co side is shuffled, routed by the anchor's storage scheme;
+        * both co-partitioned but misaligned (different partition counts or
+          placement domains) → the byte-heavier side anchors and only the
+          *smaller* side moves;
+        * neither co-partitioned → both sides shuffle to a common hash
+          layout; reducer placement then follows the combined byte statistics
+          with the usual memory-pressure discount
+          (``place_join_reducers``)."""
+        bt, bco, _ = self._resolve_side(build_sset, key_field)
+        pt, pco, _ = self._resolve_side(probe_sset, key_field)
+        bb, pb = self.set_bytes(bt), self.set_bytes(pt)
+        plan = JoinPlan(key_field=key_field, build_name=bt.name,
+                        probe_name=pt.name, shuffle_sides=(),
+                        build_bytes=bb, probe_bytes=pb)
+        if bco and pco and self._aligned(bt, pt):
+            return plan
+        if bco and pco:
+            # both partitioned on the key, but not onto the same layout:
+            # anchor the heavier side, move only the smaller one
+            anchor = "build" if bb >= pb else "probe"
+        elif bco:
+            anchor = "build"
+        elif pco:
+            anchor = "probe"
+        else:
+            plan.shuffle_sides = ("build", "probe")
+            return plan
+        plan.anchor = anchor
+        plan.shuffle_sides = ("probe",) if anchor == "build" else ("build",)
+        return plan
+
+    def place_join_reducers(self, build_shuffle: str, probe_shuffle: str,
+                            num_reducers: int) -> Dict[int, int]:
+        """Reducer placement for a both-sides-shuffled join: reducer ``r``
+        lands on the alive node holding the most *combined* build+probe
+        map-output bytes for partition ``r``, discounted by published memory
+        pressure — ``place_reducers`` over two byte maps that must
+        co-locate."""
+        return self._place_by_bytes([build_shuffle, probe_shuffle],
+                                    num_reducers)
 
     # -- read-source selection -------------------------------------------------
     def _holds(self, node_id: int, set_name: str) -> bool:

@@ -1,0 +1,54 @@
+"""Docs link check: every relative markdown link/image in the given files
+must resolve to a real file or directory (external http(s)/mailto links are
+skipped — CI must not depend on the network). Exits non-zero listing every
+broken link.
+
+Usage::
+
+    python tools/check_docs.py README.md docs/ARCHITECTURE.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target), ![alt](target) — target up to an optional #fragment;
+# inline code spans are stripped first so `[x](y)` examples don't count
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+CODE = re.compile(r"`[^`]*`|```.*?```", re.S)
+
+
+def broken_links(path: str) -> list:
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = CODE.sub("", f.read())
+    bad = []
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            bad.append(target)
+    return bad
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or ["README.md"]
+    failed = False
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"MISSING FILE: {path}")
+            failed = True
+            continue
+        bad = broken_links(path)
+        for target in bad:
+            print(f"{path}: broken link -> {target}")
+        failed = failed or bool(bad)
+        if not bad:
+            print(f"{path}: links OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
