@@ -75,6 +75,32 @@ def _run_kmeans_storage(policy: str) -> dict:
     return pool.stats
 
 
+def _run_refresh_memo(num_sets: int, full_refresh: bool):
+    """PR-5 eviction-decision cost: churn ``num_sets`` locality sets through
+    a 4x-overcommitted pool. ``full_refresh=True`` simulates the pre-PR-5
+    behavior (every registered set re-keyed on every ``pick_victims``);
+    the memoized heap re-keys only dirtied sets, so decision cost stops
+    scaling with the number of registered sets."""
+    from repro.core.paging import PagingSystem
+    orig_pick = PagingSystem.pick_victims
+    if full_refresh:
+        def old_pick(self, clock):
+            self.refresh(clock)
+            return orig_pick(self, clock)
+        PagingSystem.pick_victims = old_pick
+    try:
+        pool = BufferPool(1 << 20)
+        sets = [pool.create_set(f"s{i}", 1 << 12) for i in range(num_sets)]
+        for _ in range(4):
+            for ls in sets:
+                p = pool.new_page(ls)
+                pool.unpin(p, dirty=True)
+        return {"evictions": pool.stats["evictions"],
+                "rekeys": pool.paging.rekeys}
+    finally:
+        PagingSystem.pick_victims = orig_pick
+
+
 def run() -> None:
     for workload, fn in (("seq_wb", lambda p: _run_seq(p, False)),
                          ("seq_wt", lambda p: _run_seq(p, True)),
@@ -91,6 +117,28 @@ def run() -> None:
                      + stats.get("fetch_bytes", 0)) / 2**20
             record(f"paging/{workload}/{policy}", t * 1e6,
                    f"io_mb={moved:.1f}")
+
+    # PR-5 heap memoization: the ROADMAP's data-aware wall-clock loss was
+    # the full Eq.-1 re-key per eviction decision; show decision cost no
+    # longer scaling with registered-set count
+    for num_sets in (64, 256):
+        runs = {}
+        for mode in ("memoized", "full_refresh"):
+            stats = {}
+
+            def go(mode=mode, num_sets=num_sets):
+                stats.update(_run_refresh_memo(num_sets,
+                                               mode == "full_refresh"))
+
+            runs[mode] = (timeit(go, repeats=3), dict(stats))
+        (tm, sm), (tf, sf) = runs["memoized"], runs["full_refresh"]
+        record(f"paging/refresh_memo/sets{num_sets}", tm * 1e6,
+               f"speedup={tf/tm:.2f}x;rekeys={sm['rekeys']}"
+               f";rekeys_full={sf['rekeys']}",
+               seconds_memoized=tm, seconds_full_refresh=tf,
+               rekeys_memoized=sm["rekeys"],
+               rekeys_full_refresh=sf["rekeys"],
+               evictions=sm["evictions"])
 
 
 if __name__ == "__main__":

@@ -11,6 +11,8 @@ paper's data-aware eviction against global LRU (spill bytes, page faults,
 wall time)."""
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core import BufferPool
@@ -123,10 +125,78 @@ def _over_capacity_shuffle(n: int, policy: str):
     fetch = sum(node.memory.stats["fetch_bytes"]
                 for node in cluster.nodes.values())
     faults = sum(node.pool.spill.read_ops for node in cluster.nodes.values())
+    # eviction-decision cost: heap re-keys (memoized since PR 5 — only
+    # attribute-dirtied sets, not a full Eq.-1 refresh per decision)
+    rekeys = sum(node.pool.paging.rekeys for node in cluster.nodes.values())
     cluster.shutdown()
     return {"spill_bytes": spill, "fetch_bytes": fetch, "faults": faults,
-            "net_bytes": cluster.net_bytes, "node_capacity": cap,
-            "overcommit": total_bytes / cap}
+            "rekeys": rekeys, "net_bytes": cluster.net_bytes,
+            "node_capacity": cap, "overcommit": total_bytes / cap}
+
+
+def _admission_shuffle(n: int, admission: bool):
+    """PR-5 acceptance workload: one node is short on headroom (cold resident
+    ballast) while zipf-skewed keys concentrate the shuffle's byte-locality
+    there. Always-grant placement pins reducers to the byte-heaviest node
+    anyway and pays in destination spill; admission-controlled placement
+    observes the refusal past the deadline and re-routes those reducers to
+    the next-best byte-locality candidates. Returns the sorted pulled keys
+    (byte-identity across modes) plus the pull-phase spill/fault deltas,
+    the diversions, and the admission counters."""
+    # the cluster as a whole has headroom (aggregate capacity >= 4x the
+    # data); only the ballasted hot node is short — over-capacity locally,
+    # not globally, which is exactly when re-routing has somewhere to go
+    cap = max(512 << 10, n * PAIR.itemsize)
+    cluster = Cluster(NODES, node_capacity=cap, page_size=1 << 14,
+                      replication_factor=0, admission=admission,
+                      admission_deadline_s=0.02)
+    rng = np.random.default_rng(0)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.zipf(1.3, n).astype(np.int64)
+    recs["val"] = rng.random(n)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=NODES, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    # ballast the byte-heaviest node past its watermark (7/8 of remaining
+    # headroom puts occupancy >= 0.875 of capacity, above the 0.85
+    # watermark): it will refuse admission of any reducer partition while
+    # staying fully functional
+    hot = max(cluster.alive_node_ids(), key=lambda nid: sum(
+        cluster.stats.shuffle_partition_bytes("sh", r).get(nid, 0)
+        for r in range(NODES)))
+    headroom = cap - cluster.nodes[hot].memory.resident_bytes
+    ballast = np.zeros(max(1, (headroom * 7 // 8) // PAIR.itemsize), PAIR)
+    cluster.nodes[hot].write_records("ballast", ballast, PAIR, 1 << 14)
+    spill0 = {nid: cluster.nodes[nid].memory.stats["spill_bytes"]
+              for nid in cluster.alive_node_ids()}
+    faults0 = sum(node.pool.spill.read_ops
+                  for node in cluster.nodes.values() if node.alive)
+    # placement timed separately: with admission on it includes deadline
+    # waits on refusing nodes, which must not masquerade as data-path cost
+    t0 = time.perf_counter()
+    sh.place_reducers_locally()
+    place_seconds = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    keys_out = []
+    for r in range(NODES):
+        keys_out.append(np.sort(sh.pull(r)["key"]).copy())
+        sh.release_reducer(r)
+    pull_seconds = time.perf_counter() - t0
+    spill = sum(cluster.nodes[nid].memory.stats["spill_bytes"] - s0
+                for nid, s0 in spill0.items())
+    faults = sum(node.pool.spill.read_ops
+                 for node in cluster.nodes.values() if node.alive) - faults0
+    refused = sum(node.memory.admission.refused
+                  for node in cluster.nodes.values() if node.alive)
+    keys = np.sort(np.concatenate(keys_out))
+    out = {"keys": keys, "spill_bytes": spill, "faults": faults,
+           "diversions": dict(sh.diversions), "refused": refused,
+           "hot_node": hot, "pull_seconds": pull_seconds,
+           "place_seconds": place_seconds,
+           "net_bytes": cluster.net_bytes, "node_capacity": cap}
+    cluster.shutdown()
+    return out
 
 
 def _co_partitioned_agg(n: int) -> Cluster:
@@ -191,6 +261,8 @@ def run() -> None:
                f"overcommit={s['overcommit']:.1f}x",
                recs_per_s=n / t, policy=policy, **s)
     (td, sd), (tl, sl) = over["data-aware"], over["lru"]
+    # with the memoized Eq.-1 heap (PR 5) the fault win should show up as a
+    # wall-clock win too, not just a fault-count win — both are recorded
     record(f"shuffle/cluster{NODES}node/overcap_gain/n{n}", 0.0,
            f"fault_ratio={sd['faults']/max(1, sl['faults']):.3f};"
            f"time_ratio={td/tl:.3f}",
@@ -198,7 +270,41 @@ def run() -> None:
            spill_bytes_data_aware=sd["spill_bytes"],
            spill_bytes_lru=sl["spill_bytes"],
            seconds_data_aware=td, seconds_lru=tl,
+           time_win=bool(td < tl),
            data_aware_wins=bool(sd["faults"] < sl["faults"] or td < tl))
+
+    # admission-controlled vs always-grant over-capacity shuffle (PR 5):
+    # same data, same cluster shape; with admission on, reducers planned
+    # onto the refusing hot node are re-routed and its spill drops
+    n = scaled(160_000)
+    adm = {flag: _admission_shuffle(n, flag) for flag in (False, True)}
+    identical = bool(np.array_equal(adm[True]["keys"], adm[False]["keys"]))
+    for flag in (False, True):
+        s = adm[flag]
+        tag = "on" if flag else "off"
+        record(f"shuffle/cluster{NODES}node/admission/{tag}/n{n}",
+               s["pull_seconds"] * 1e6,
+               f"spill_mb={s['spill_bytes']/1e6:.2f};"
+               f"diverted={len(s['diversions'])};refused={s['refused']}",
+               spill_bytes=s["spill_bytes"], faults=s["faults"],
+               diverted=len(s["diversions"]),
+               diversions={str(k): list(v)
+                           for k, v in s["diversions"].items()},
+               refused=s["refused"], hot_node=s["hot_node"],
+               place_seconds=s["place_seconds"],
+               net_bytes=s["net_bytes"], node_capacity=s["node_capacity"],
+               admission=flag)
+    son, soff = adm[True], adm[False]
+    record(f"shuffle/cluster{NODES}node/admission_gain/n{n}", 0.0,
+           f"spill_ratio={son['spill_bytes']/max(1, soff['spill_bytes']):.3f};"
+           f"diverted={len(son['diversions'])};identical={identical}",
+           spill_bytes_admission=son["spill_bytes"],
+           spill_bytes_always_grant=soff["spill_bytes"],
+           diverted=len(son["diversions"]), refused=son["refused"],
+           byte_identical=identical,
+           admission_wins=bool(
+               son["spill_bytes"] <= soff["spill_bytes"]
+               and len(son["diversions"]) > 0))
 
 
 if __name__ == "__main__":

@@ -12,7 +12,10 @@ from typing import Callable, Dict, List, Optional
 # / data_aware_wins) joined the cluster artifact
 # v3: distributed-join rows (join/cluster*: net_bytes per scheduler plan,
 # copartitioned_is_free, movement_gain) joined the cluster artifact
-SCHEMA_VERSION = 3
+# v4: admission-control rows (shuffle/cluster*/admission*: admission-on vs
+# always-grant destination spill/faults, diversions, refused/throttled
+# counters, admission_wins) joined the cluster artifact
+SCHEMA_VERSION = 4
 
 ROWS: List[dict] = []
 

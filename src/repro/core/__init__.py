@@ -8,7 +8,8 @@ from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
 from .buffer_pool import BufferPool, PoolExhaustedError, SpillStore
 from .kvcache import HBMExhaustedError, PagedKVCache
 from .locality_set import LocalitySet, Page
-from .memory_manager import MemoryManager, MemoryReservation
+from .memory_manager import (AdmissionController, MemoryManager,
+                             MemoryReservation, derive_staging_cap)
 from .paging import PagingSystem, eviction_overhead
 from .replication import (DistributedSet, PartitionScheme, ReplicaRegistration,
                           combine_content_checksums, expected_conflicts,
@@ -25,6 +26,7 @@ from .statistics import ReplicaInfo, StatisticsDB
 from .tlsf import TLSF
 
 __all__ = [
+    "AdmissionController", "derive_staging_cap",
     "AttributeSet", "BufferPool", "CurrentOperation", "DistributedSet",
     "DurabilityType", "EvictionStrategy", "HBMExhaustedError", "HashService",
     "Lifetime", "LocalitySet", "Location", "MemoryManager",

@@ -44,11 +44,14 @@ class BufferPool:
 
     def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
                  policy: str = "data-aware",
-                 memory: Optional[MemoryManager] = None):
+                 memory: Optional[MemoryManager] = None,
+                 pressure_watermark: float = 0.85):
         self.capacity = capacity
         self.arena = np.zeros(capacity, dtype=np.uint8)
         self.tlsf = TLSF(capacity)
-        self.memory = memory or MemoryManager(capacity, spill_store, policy)
+        self.memory = memory or MemoryManager(
+            capacity, spill_store, policy,
+            pressure_watermark=pressure_watermark)
         self.clock = 1  # logical time (paper: AccessRecency integers)
         self._pages: Dict[int, Page] = {}
         self._next_page_id = 0

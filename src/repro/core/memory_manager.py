@@ -14,7 +14,13 @@ The ``MemoryManager`` owns everything pressure-related for one node:
   *outside* the arena (driver-side chunks in flight, pull staging), and
   ``under_pressure()`` / ``pressure_score()`` for callers that should slow
   down or place work elsewhere. The cluster scheduler reads the score through
-  the statistics DB and penalizes nodes that are already spilling.
+  the statistics DB and penalizes nodes that are already spilling;
+* admission control (PR 5) — ``try_reserve(nbytes, urgency=...)`` and the
+  ``AdmissionController``: the pressure signal becomes a *grant*. In-flight
+  staging is capped at a watermark-derived budget, writers block (with
+  timeout) instead of stampeding a pressured node, and refusals are counted
+  so schedulers can re-route refused work instead of pushing pages at a node
+  that is already spilling.
 
 ``BufferPool`` delegates to it (``pool.paging`` / ``pool.spill`` /
 ``pool.stats`` are views into the manager), and ``StorageNode`` exposes it to
@@ -27,6 +33,18 @@ import threading
 from typing import Dict, Optional, Set
 
 from .paging import PagingSystem
+
+# smallest staging budget a node will advertise: tiny pools (unit tests,
+# smoke configs) must still admit a page-sized chunk or nothing ever moves
+STAGING_CAP_FLOOR = 256 << 10
+
+
+def derive_staging_cap(capacity: int, watermark: float) -> int:
+    """The in-flight staging budget the pressure watermark implies: the
+    headroom the watermark leaves free is what out-of-arena staging may
+    occupy at once, floored so small pools still admit one chunk."""
+    return max(min(capacity, STAGING_CAP_FLOOR),
+               int((1.0 - watermark) * capacity))
 
 
 class SpillStore:
@@ -90,8 +108,11 @@ class SpillStore:
 
 
 class MemoryReservation:
-    """A ``reserve()`` grant: bytes staged outside the arena but charged to
-    this node. Context-managed so staging buffers can't leak accounting."""
+    """A ``reserve()``/``try_reserve()`` grant: bytes staged outside the arena
+    but charged to this node. Context-managed so staging buffers can't leak
+    accounting. Release is idempotent *under the manager's lock* — two racing
+    releasers (a worker's ``finally`` and an engine-side cleanup) must not
+    decrement twice and silently drive ``reserved_bytes`` negative."""
 
     def __init__(self, manager: "MemoryManager", nbytes: int):
         self.manager = manager
@@ -99,7 +120,9 @@ class MemoryReservation:
         self._released = False
 
     def release(self) -> None:
-        if not self._released:
+        with self.manager._lock:
+            if self._released:
+                return
             self._released = True
             self.manager._release(self.nbytes)
 
@@ -108,6 +131,119 @@ class MemoryReservation:
 
     def __exit__(self, *exc) -> None:
         self.release()
+
+
+class AdmissionController:
+    """Turns one node's pressure signal into an admission decision (PR 5).
+
+    Two distinct questions, both derived from the watermark:
+
+    * **staging admission** (``try_reserve`` via the manager) — may a writer
+      put another ``nbytes`` of out-of-arena staging in flight right now?
+      Granted while ``reserved_bytes`` stays under ``cap`` (a node with no
+      staging in flight always admits one chunk, however large, so oversized
+      single requests can't starve). Writers wait on the node's condition
+      variable and are woken by releases.
+    * **placement admission** (``admit_placement``) — would ``nbytes`` of new
+      work *landing* on this node fit under the pressure watermark given
+      what is already resident and staged? The cluster scheduler probes this
+      with a deadline before pinning a reducer here and re-routes the
+      partition when the node refuses past it.
+
+    ``refused`` / ``throttled`` / ``forced`` count what the loop actually did
+    and are published through ``pressure_report`` (and from there into the
+    statistics DB alongside the pressure score).
+    """
+
+    #: bound on how long a waiting ask (``normal`` or ``required``) parks
+    #: when the caller gave no timeout — an unbounded wait could deadlock a
+    #: caller whose own earlier reservation is what holds the cap, and for
+    #: "required" it would make the promised forced grant unreachable
+    DEFAULT_WAIT_TIMEOUT_S = 1.0
+
+    def __init__(self, manager: "MemoryManager", cap: Optional[int] = None):
+        self.manager = manager
+        self.cap = (derive_staging_cap(manager.capacity,
+                                       manager.pressure_watermark)
+                    if cap is None else cap)
+        self._cv = threading.Condition(manager._lock)
+        self.refused = 0      # asks denied past their deadline
+        self.throttled = 0    # asks that waited before being granted
+        self.forced = 0       # urgency="required" grants past the deadline
+
+    # both predicates assume the manager's lock is held
+    def _staging_headroom(self, nbytes: int) -> bool:
+        m = self.manager
+        return (m.reserved_bytes == 0
+                or m.reserved_bytes + nbytes <= self.cap)
+
+    def _placement_headroom(self, nbytes: int) -> bool:
+        m = self.manager
+        occupied = m.resident_bytes + m.reserved_bytes
+        return occupied + nbytes <= m.pressure_watermark * m.capacity
+
+    def _notify(self) -> None:
+        self._cv.notify_all()
+
+    def try_reserve(self, nbytes: int, *, urgency: str = "normal",
+                    timeout: Optional[float] = None
+                    ) -> Optional[MemoryReservation]:
+        """Staging admission with blocking-with-timeout waits.
+
+        * ``urgency="low"`` — never waits; refused immediately without
+          headroom (opportunistic stagers, e.g. prefetchers).
+        * ``urgency="normal"`` — waits up to ``timeout`` for headroom, then
+          is refused (callers re-route or retry elsewhere).
+        * ``urgency="required"`` — waits up to ``timeout``, then is granted
+          anyway (correctness paths that must not drop data; the monolithic
+          pool spills rather than loses records). Counted as ``forced``.
+        """
+        if urgency not in ("low", "normal", "required"):
+            raise ValueError(f"unknown urgency {urgency!r}")
+        if timeout is None and urgency != "low":
+            # bounded by default: waiting forever could deadlock a caller
+            # whose own earlier reservation holds the cap, and for
+            # "required" it would make the promised forced grant unreachable
+            timeout = self.DEFAULT_WAIT_TIMEOUT_S
+        m = self.manager
+        with self._cv:
+            if not self._staging_headroom(nbytes):
+                granted = False
+                if urgency != "low" and timeout > 0:
+                    granted = self._cv.wait_for(
+                        lambda: self._staging_headroom(nbytes),
+                        timeout=timeout)
+                if granted:
+                    self.throttled += 1
+                else:
+                    if urgency != "required":
+                        self.refused += 1
+                        return None
+                    self.forced += 1
+            m.reserved_bytes += nbytes
+            m.reserved_hwm = max(m.reserved_hwm, m.reserved_bytes)
+        return MemoryReservation(m, nbytes)
+
+    def admit_placement(self, nbytes: int,
+                        deadline_s: Optional[float] = 0.0,
+                        count: bool = True) -> bool:
+        """Placement admission: True when ``nbytes`` of landing work fits
+        under the watermark, waiting up to ``deadline_s`` for headroom to
+        appear. A refusal past the deadline is counted — the scheduler's cue
+        to re-place the work on the next-best candidate. ``count=False``
+        marks a cheap re-probe of a node that already refused this planning
+        pass, so probe declines don't inflate the ``refused`` counter."""
+        with self._cv:
+            if self._placement_headroom(nbytes):
+                return True
+            if deadline_s and self._cv.wait_for(
+                    lambda: self._placement_headroom(nbytes),
+                    timeout=deadline_s):
+                self.throttled += 1
+                return True
+            if count:
+                self.refused += 1
+            return False
 
 
 class MemoryManager:
@@ -121,12 +257,14 @@ class MemoryManager:
 
     def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
                  policy: str = "data-aware",
-                 pressure_watermark: float = 0.85):
+                 pressure_watermark: float = 0.85,
+                 admission_cap: Optional[int] = None):
         self.capacity = capacity
         self.spill = spill_store or SpillStore()
         self.paging = PagingSystem(policy)
         self.pressure_watermark = pressure_watermark
         self._lock = threading.RLock()
+        self.admission = AdmissionController(self, admission_cap)
         # live counters
         self.resident_bytes = 0
         self.pinned_bytes = 0
@@ -154,6 +292,10 @@ class MemoryManager:
     def note_free(self, nbytes: int) -> None:
         with self._lock:
             self.resident_bytes -= nbytes
+            # freed residency is admission headroom: wake placement probes
+            # and throttled writers now instead of letting them sleep out
+            # their full deadline against a predicate that already holds
+            self.admission._notify()
 
     def note_pinned(self, nbytes: int) -> None:
         """A page's pin count went 0 -> 1: its bytes are now unevictable."""
@@ -195,19 +337,38 @@ class MemoryManager:
             if paged_out:
                 self.spilled_bytes -= nbytes
 
-    # -- backpressure ----------------------------------------------------------
+    # -- backpressure / admission ---------------------------------------------
     def reserve(self, nbytes: int) -> MemoryReservation:
         """Charge ``nbytes`` of out-of-arena staging to this node. Always
         grants (the monolithic pool spills rather than refuses) but moves the
-        pressure signal, which is what schedulers and stagers key off."""
+        pressure signal, which is what schedulers and stagers key off.
+        Paced writers use ``try_reserve`` instead and respect the grant."""
         with self._lock:
             self.reserved_bytes += nbytes
             self.reserved_hwm = max(self.reserved_hwm, self.reserved_bytes)
         return MemoryReservation(self, nbytes)
 
+    def try_reserve(self, nbytes: int, *, urgency: str = "normal",
+                    timeout: Optional[float] = None
+                    ) -> Optional[MemoryReservation]:
+        """Admission-controlled staging grant — see ``AdmissionController``.
+        Returns None when the node refuses past the timeout (the caller
+        should back off or route elsewhere); ``urgency="required"`` never
+        returns None."""
+        return self.admission.try_reserve(nbytes, urgency=urgency,
+                                          timeout=timeout)
+
     def _release(self, nbytes: int) -> None:
         with self._lock:
             self.reserved_bytes -= nbytes
+            if self.reserved_bytes < 0:
+                # explicit raise, not `assert`: accounting corruption must
+                # stay loud under `python -O` too
+                raise AssertionError(
+                    f"reserved_bytes went negative ({self.reserved_bytes}) "
+                    f"— a reservation was released more bytes than it "
+                    f"charged")
+            self.admission._notify()
 
     def reset_reserved_hwm(self) -> int:
         """Start a fresh reservation high-water window (returns the old
@@ -221,23 +382,34 @@ class MemoryManager:
 
     def under_pressure(self) -> bool:
         """True when the node is past its watermark (arena residency plus
-        out-of-arena reservations) or is carrying spilled-out bytes — i.e.
-        new work placed here will likely page."""
+        out-of-arena reservations), or is carrying more paged-out bytes than
+        its remaining watermark headroom could fault back — i.e. new work
+        placed here will likely page.
+
+        Paged-out bytes alone are NOT pressure (PR-5 bugfix): after a burst
+        is consumed and dropped, a node may hold cold data on disk while its
+        arena sits nearly empty. Those bytes fault back on demand into free
+        space, so the node should attract placement again — the old
+        ``spilled_bytes > 0`` check repelled it indefinitely. Durability
+        copies of resident pages were never counted here (they are images,
+        not page-outs) and still are not."""
         with self._lock:
             occupied = self.resident_bytes + self.reserved_bytes
-            return (occupied >= self.pressure_watermark * self.capacity
-                    or self.spilled_bytes > 0)
+            wm = self.pressure_watermark * self.capacity
+            return occupied >= wm or occupied + self.spilled_bytes > wm
 
     def pressure_score(self) -> float:
         """Scalar pressure in [0, 1] for placement penalties: how far past
-        the watermark the node sits, or how much of a capacity's worth of
-        data it has already pushed to disk — whichever is worse."""
+        the watermark the node sits, counting only the paged-out bytes that
+        could NOT fault back under the watermark (cold on-disk residue with
+        free headroom above it scores zero — see ``under_pressure``)."""
         with self._lock:
             occupied = self.resident_bytes + self.reserved_bytes
             wm = self.pressure_watermark * self.capacity
             over = max(0.0, occupied - wm) / max(1.0, self.capacity - wm)
-            spill_frac = self.spilled_bytes / max(1, self.capacity)
-            return min(1.0, max(over, spill_frac))
+            spill_over = max(0.0, occupied + self.spilled_bytes - wm) \
+                / max(1, self.capacity)
+            return min(1.0, max(over, spill_over))
 
     def pressure_report(self) -> Dict[str, float]:
         with self._lock:
@@ -252,6 +424,10 @@ class MemoryManager:
                 "reserved_hwm": self.reserved_hwm,
                 "under_pressure": self.under_pressure(),
                 "pressure_score": self.pressure_score(),
+                "admission_cap": self.admission.cap,
+                "refused": self.admission.refused,
+                "throttled": self.admission.throttled,
+                "forced": self.admission.forced,
                 **self.stats,
             }
 

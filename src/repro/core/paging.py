@@ -13,6 +13,15 @@ pages, and the CurrentOperation attribute caps how many (10% while writing).
 
 A lazy min-heap keyed on O is maintained; entries are invalidated on attribute
 updates (which are "significantly less frequent than page operations", §6).
+
+Heap keys are memoized (PR-5 perf fix): at any fixed ``t_now`` Eq. 1 orders
+ended sets by ``-1/t_r`` and alive sets by ``c * t_r`` (both classes scale
+uniformly in ``t_now``, and ended overheads are negative while alive ones are
+non-negative), so the heap is keyed on those ``t_now``-independent surrogates
+and only *dirtied* sets — ones whose attributes actually changed — are ever
+re-keyed. The old implementation re-pushed every registered set on every
+eviction decision (O(sets·log sets) per allocation retry), which is exactly
+the "full Eq.-1 heap refresh" wall-clock loss the ROADMAP flagged.
 """
 from __future__ import annotations
 
@@ -51,34 +60,49 @@ class PagingSystem:
         self._heap: List[Tuple[float, int, str]] = []
         self._entry_count = itertools.count()
         self._stale: Dict[str, int] = {}  # name -> latest entry id
+        self.rekeys = 0                   # heap pushes (memoization metric)
 
     # -- registration ----------------------------------------------------------
-    def register(self, ls: LocalitySet, clock: int) -> None:
+    def register(self, ls: LocalitySet, clock: int = 0) -> None:
+        """Register a set with the paging system. ``clock`` is vestigial
+        since the PR-5 memoization (heap keys are t_now-independent, so
+        registration time never affects priority); accepted for caller
+        compatibility."""
         self._sets[ls.name] = ls
-        ls._on_attr_update = lambda s: self._push(s, clock)
-        self._push(ls, clock)
+        # attribute updates dirty the set: it alone is re-keyed
+        ls._on_attr_update = self._push
+        self._push(ls)
 
     def unregister(self, name: str) -> None:
         self._sets.pop(name, None)
         self._stale.pop(name, None)
 
-    def _push(self, ls: LocalitySet, clock: int) -> None:
-        eid = next(self._entry_count)
-        self._stale[ls.name] = eid
+    def _heap_key(self, ls: LocalitySet) -> float:
+        """``t_now``-independent surrogate for Eq.-1 overhead: preserves the
+        Eq.-1 ordering at every clock, so entries stay valid until the set's
+        own attributes change (see module docstring)."""
+        t_r = max(1, ls.attrs.access_recency)
         if self.policy == "freq-aware":
             # Fig.-3 ablation: spilling cost replaced by access frequency
             if ls.attrs.lifetime == Lifetime.ENDED:
-                o = -1.0
-            else:
-                o = float(ls.stats.get("accesses", 0))
-        else:
-            o = eviction_overhead(ls, clock)
-        heapq.heappush(self._heap, (o, eid, ls.name))
+                return -1.0
+            return float(ls.stats.get("accesses", 0))
+        if ls.attrs.lifetime == Lifetime.ENDED:
+            return -1.0 / t_r
+        return ls.attrs.spilling_cost * t_r
+
+    def _push(self, ls: LocalitySet) -> None:
+        eid = next(self._entry_count)
+        self._stale[ls.name] = eid
+        self.rekeys += 1
+        heapq.heappush(self._heap, (self._heap_key(ls), eid, ls.name))
 
     def refresh(self, clock: int) -> None:
-        """Re-key every set at the current clock (O depends on t_now)."""
+        """Re-key every set. With memoized keys this is never needed for
+        correctness (attribute updates re-key incrementally); kept for
+        explicit rebuilds after bulk attribute surgery."""
         for ls in self._sets.values():
-            self._push(ls, clock)
+            self._push(ls)
 
     # -- Algorithm 1 -----------------------------------------------------------
     def pick_victims(self, clock: int) -> Optional[Tuple[LocalitySet, List[Page]]]:
@@ -89,7 +113,6 @@ class PagingSystem:
         """
         if self.policy in ("lru", "mru"):
             return self._pick_global_recency(self.policy)
-        self.refresh(clock)
         repush: List[LocalitySet] = []
         found = None
         while self._heap:
@@ -104,7 +127,7 @@ class PagingSystem:
                 break
             repush.append(ls)
         for ls in repush:
-            self._push(ls, clock)
+            self._push(ls)
         return found
 
     def _pick_global_recency(self, policy: str):

@@ -19,6 +19,7 @@ Page layout for record pages: ``[count:int64][record bytes...]``.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -162,7 +163,14 @@ SMALL_PAGE = 1 << 16  # 64 KiB small pages split from each large page
 
 class _SmallPageAllocator:
     """Secondary allocator that pins one large page in a partition's locality
-    set and splits it into small pages handed to concurrent writers."""
+    set and splits it into small pages handed to concurrent writers.
+
+    Thread-safe (PR 5): concurrent writers share one allocator per partition,
+    so ``alloc_small`` hands out disjoint small pages under a lock, and every
+    small page carries an *extra pin* on behalf of its writer (released via
+    ``release_small``) — otherwise a rotation triggered by one writer would
+    unpin the large page a peer is still filling, and an eviction under
+    pressure would pull the arena out from under its view."""
 
     def __init__(self, pool: BufferPool, ls: LocalitySet, small_page: int = SMALL_PAGE):
         self.pool = pool
@@ -171,14 +179,24 @@ class _SmallPageAllocator:
         self._page: Optional[Page] = None
         self._next_off = 0
         self._outstanding = 0
+        self._lock = threading.Lock()
 
     def alloc_small(self) -> Tuple[Page, int]:
-        if self._page is None or self._next_off + self.small_page > self._page.size:
-            self._rotate()
-        off = self._next_off
-        self._next_off += self.small_page
-        self._outstanding += 1
-        return self._page, off
+        """Returns ``(large_page, offset)`` with the large page pinned once
+        for the caller; pair with ``release_small`` when the small page is
+        full or the writer closes."""
+        with self._lock:
+            if self._page is None or self._next_off + self.small_page > self._page.size:
+                self._rotate()
+            off = self._next_off
+            self._next_off += self.small_page
+            self._outstanding += 1
+            self.pool.pin(self._page)
+            return self._page, off
+
+    def release_small(self, page: Page) -> None:
+        """Drop a writer's pin on its small page's large page."""
+        self.pool.unpin(page, dirty=True)
 
     def _rotate(self) -> None:
         if self._page is not None:
@@ -191,14 +209,18 @@ class _SmallPageAllocator:
             view[base:base + _HEADER].view(np.int64)[0] = 0
 
     def close(self) -> None:
-        if self._page is not None:
-            self.pool.unpin(self._page, dirty=True)
-            self._page = None
+        with self._lock:
+            if self._page is not None:
+                self.pool.unpin(self._page, dirty=True)
+                self._page = None
 
 
 class VirtualShuffleBuffer:
     """Per-(worker, partition) append handle writing into small pages
-    (paper §3.2 code example + §8)."""
+    (paper §3.2 code example + §8). Each open small page keeps its large
+    page pinned (via ``alloc_small``), so concurrent writers on the same
+    partition can't have their pages evicted mid-fill; ``close`` releases
+    the pin on a partially filled page."""
 
     def __init__(self, allocator: _SmallPageAllocator, dtype: np.dtype,
                  on_write: Optional[Callable[[int, int], None]] = None):
@@ -215,6 +237,11 @@ class VirtualShuffleBuffer:
         self._count = 0
         view = self.allocator.pool.view(self._page)
         view[self._base:self._base + _HEADER].view(np.int64)[0] = 0
+
+    def _close_small(self) -> None:
+        if self._page is not None:
+            self.allocator.release_small(self._page)
+            self._page = None
 
     def add_batch(self, records: np.ndarray) -> None:
         raw = as_record_bytes(records, self.dtype)
@@ -234,7 +261,12 @@ class VirtualShuffleBuffer:
             view[self._base:self._base + _HEADER].view(np.int64)[0] = self._count
             i += take
             if self._count == self._cap:
-                self._page = None  # small page full; next add opens another
+                self._close_small()  # small page full; next add opens another
+
+    def close(self) -> None:
+        """Release the pin on a partially filled small page (the records
+        stay; only the writer's hold on the arena is dropped)."""
+        self._close_small()
 
     def add(self, record) -> None:
         self.add_batch(np.array([record], dtype=self.dtype))
@@ -259,22 +291,29 @@ class ShuffleService:
             self.partition_sets.append(ls)
             self._allocators.append(_SmallPageAllocator(pool, ls))
         self._buffers: Dict[Tuple[int, int], VirtualShuffleBuffer] = {}
+        self._lock = threading.Lock()  # buffer map + write counters
         # per-partition write accounting: what the locality-aware scheduler
         # reads to place reducers where their input already lives
         self.partition_records: List[int] = [0] * num_partitions
         self.partition_bytes: List[int] = [0] * num_partitions
 
     def _count_write(self, partition_id: int, nrec: int, nbytes: int) -> None:
-        self.partition_records[partition_id] += nrec
-        self.partition_bytes[partition_id] += nbytes
+        with self._lock:
+            self.partition_records[partition_id] += nrec
+            self.partition_bytes[partition_id] += nbytes
 
-    def get_buffer(self, worker_id: int, partition_id: int) -> VirtualShuffleBuffer:
+    def get_buffer(self, worker_id, partition_id: int) -> VirtualShuffleBuffer:
+        """Append handle for one (worker, partition). ``worker_id`` is any
+        hashable writer identity — concurrent writer threads must use
+        distinct ids so each gets its own buffer (the partition's allocator
+        hands their small pages out disjointly)."""
         key = (worker_id, partition_id)
-        if key not in self._buffers:
-            self._buffers[key] = VirtualShuffleBuffer(
-                self._allocators[partition_id], self.dtype,
-                on_write=lambda nr, nb, p=partition_id: self._count_write(p, nr, nb))
-        return self._buffers[key]
+        with self._lock:
+            if key not in self._buffers:
+                self._buffers[key] = VirtualShuffleBuffer(
+                    self._allocators[partition_id], self.dtype,
+                    on_write=lambda nr, nb, p=partition_id: self._count_write(p, nr, nb))
+            return self._buffers[key]
 
     def shuffle_batch(self, worker_id: int, records: np.ndarray,
                       key_fn: Callable[[np.ndarray], np.ndarray]) -> None:
@@ -285,6 +324,8 @@ class ShuffleService:
             self.get_buffer(worker_id, int(p)).add_batch(records[parts == p])
 
     def finish_writes(self) -> None:
+        for buf in self._buffers.values():
+            buf.close()  # drop writer pins on partially filled small pages
         for alloc in self._allocators:
             alloc.close()
         for ls in self.partition_sets:

@@ -30,10 +30,15 @@ class StatisticsDB:
         # shuffle -> partition -> node -> bytes of map output held there
         # (the locality signal behind scheduler reducer placement)
         self._shuffle_bytes: Dict[str, Dict[int, Dict[int, int]]] = {}
-        # node -> memory pressure score in [0, 1] (published by the shuffle
-        # finalizer from each node's MemoryManager; the scheduler penalizes
-        # placement onto nodes that are already spilling)
-        self._node_pressure: Dict[int, float] = {}
+        # node -> (memory pressure score in [0, 1], event seq at recording)
+        # (published by the shuffle finalizer from each node's MemoryManager;
+        # the scheduler penalizes placement onto nodes that are already
+        # spilling). ``_event_seq`` counts topology/job boundaries — a score
+        # recorded before the latest boundary is stale and schedulers fall
+        # back to the node's live pressure (PR-5 bugfix: back-to-back jobs
+        # used to plan against the previous job's finalization snapshot).
+        self._node_pressure: Dict[int, tuple] = {}
+        self._event_seq = 0
 
     def register_replica(self, logical_name: str, info: ReplicaInfo) -> None:
         self._replicas.setdefault(logical_name, []).append(info)
@@ -67,16 +72,42 @@ class StatisticsDB:
 
     def clear_shuffle(self, shuffle: str) -> None:
         self._shuffle_bytes.pop(shuffle, None)
+        # a finished job is an event boundary: its finalization-time pressure
+        # snapshots no longer describe the cluster the next job plans against
+        self.note_event()
+
+    # -- topology/job event boundaries (pressure staleness) --------------------
+    def note_event(self) -> None:
+        """A topology or job event happened (node killed/recovered, set
+        created/re-sharded, shuffle finished): previously recorded pressure
+        snapshots are now stale."""
+        self._event_seq += 1
+
+    @property
+    def event_seq(self) -> int:
+        return self._event_seq
 
     # -- per-node memory pressure (scheduler placement penalty) ----------------
     def record_node_pressure(self, node: int, score: float) -> None:
-        self._node_pressure[node] = max(0.0, min(1.0, float(score)))
+        self._node_pressure[node] = (max(0.0, min(1.0, float(score))),
+                                     self._event_seq)
 
     def node_pressure(self, node: int) -> float:
-        return self._node_pressure.get(node, 0.0)
+        """Last recorded score regardless of age (freshness-agnostic view;
+        placement uses ``node_pressure_fresh`` + a live fallback)."""
+        return self._node_pressure.get(node, (0.0, 0))[0]
+
+    def node_pressure_fresh(self, node: int) -> Optional[float]:
+        """The recorded score, or None when it predates the last
+        topology/job event (or was never recorded) — the caller should read
+        the node's live ``MemoryManager.pressure_score()`` instead."""
+        rec = self._node_pressure.get(node)
+        if rec is None or rec[1] < self._event_seq:
+            return None
+        return rec[0]
 
     def node_pressure_map(self) -> Dict[int, float]:
-        return dict(self._node_pressure)
+        return {n: score for n, (score, _seq) in self._node_pressure.items()}
 
     def replicas_of(self, logical_name: str) -> List[ReplicaInfo]:
         return list(self._replicas.get(logical_name, []))

@@ -22,6 +22,15 @@ Since PR 2 it is split into three layers:
   is one client of it, and reducer pulls are engine jobs that overlap map
   finalization and each other.
 
+Since PR 5 the pressure signal is *enforced* as admission control: map
+writers, pull chunks, and remesh streams pace themselves against the
+destination MemoryManager's staging grant (``try_reserve``), the transfer
+engine caps in-flight bytes per destination, and reducer placement re-routes
+partitions whose planned node refuses admission past the deadline
+(``place_reducers_admitted``; diversions recorded on
+``ClusterShuffle.diversions``). ``Cluster(admission=False)`` restores the
+always-grant behavior.
+
 On unrecoverable node loss (no replacement machine), ``Cluster.remesh_degrade``
 falls through to ``elastic.plan_remesh``: the cluster shrinks to the surviving
 membership and every sharded set is re-partitioned over it from the freshest
@@ -44,7 +53,7 @@ import numpy as np
 from ..core.attributes import AttributeSet
 from ..core.buffer_pool import BufferPool, SpillStore
 from ..core.locality_set import LocalitySet
-from ..core.memory_manager import MemoryManager
+from ..core.memory_manager import MemoryManager, derive_staging_cap
 from ..core.replication import (DistributedSet, PartitionScheme,
                                 ReplicaRegistration,
                                 combine_content_checksums,
@@ -102,10 +111,13 @@ class StorageNode:
 
     def __init__(self, node_id: int, capacity: int,
                  spill_dir: Optional[str] = None,
-                 policy: str = "data-aware"):
+                 policy: str = "data-aware",
+                 pressure_watermark: float = 0.85):
         self.node_id = node_id
         self.capacity = capacity
-        self.pool = BufferPool(capacity, SpillStore(spill_dir), policy=policy)
+        self.pressure_watermark = pressure_watermark
+        self.pool = BufferPool(capacity, SpillStore(spill_dir), policy=policy,
+                               pressure_watermark=pressure_watermark)
         self.alive = True
 
     @property
@@ -239,7 +251,11 @@ class Cluster:
     def __init__(self, num_nodes: int, node_capacity: int = 32 << 20,
                  page_size: int = 1 << 18, replication_factor: int = 1,
                  spill_dir: Optional[str] = None,
-                 transfer_workers: int = 4, policy: str = "data-aware"):
+                 transfer_workers: int = 4, policy: str = "data-aware",
+                 admission: bool = True,
+                 admission_deadline_s: float = 0.05,
+                 admission_timeout_s: float = 0.2,
+                 pressure_watermark: float = 0.85):
         if num_nodes < 2:
             raise ValueError("a cluster needs at least 2 nodes")
         self.num_nodes = num_nodes
@@ -247,10 +263,21 @@ class Cluster:
         self.page_size = page_size
         self.replication_factor = replication_factor
         self.policy = policy
+        # admission knobs (PR 5): ``admission=False`` restores the PR-3
+        # always-grant behavior (writers never throttle, placement never
+        # re-routes) — the benchmark baseline. The deadline bounds how long
+        # the scheduler waits for a refusing node before diverting a
+        # reducer; the timeout bounds how long a paced writer waits for a
+        # staging grant before it is forced through.
+        self.admission = admission
+        self.admission_deadline_s = admission_deadline_s
+        self.admission_timeout_s = admission_timeout_s
+        self.pressure_watermark = pressure_watermark
         self._spill_dir = spill_dir
         self.nodes: Dict[int, StorageNode] = {
             n: StorageNode(n, node_capacity, self._node_spill_dir(n),
-                           policy=policy)
+                           policy=policy,
+                           pressure_watermark=pressure_watermark)
             for n in range(num_nodes)
         }
         # the manager/driver process's own memory authority: pure accounting
@@ -295,6 +322,8 @@ class Cluster:
         if node.pool is not None:
             node.pool.memory.close()
         node.pool = None  # drop the arena; nothing on this node survives
+        # topology event: recorded pressure snapshots are now stale
+        self.stats.note_event()
 
     # -- byte accounting (thread-safe: pulls run on engine workers) -----------
     def add_net_bytes(self, n: int) -> None:
@@ -309,10 +338,17 @@ class Cluster:
     @property
     def transfer(self) -> TransferEngine:
         """The cluster's transfer engine, spawned on first use (its workers
-        exit when idle, so short-lived clusters don't accumulate threads)."""
+        exit when idle, so short-lived clusters don't accumulate threads).
+        With admission on, the engine caps in-flight bytes per destination
+        node at the watermark-derived staging budget, so overlapped pulls
+        can't stampede one reducer node."""
         if self._transfer is None:
+            cap = (derive_staging_cap(self.node_capacity,
+                                      self.pressure_watermark)
+                   if self.admission else None)
             self._transfer = TransferEngine(self._transfer_workers,
-                                            name="transfer")
+                                            name="transfer",
+                                            dest_inflight_cap=cap)
         return self._transfer
 
     def _stream_records(self, src_id: int, src_set: str, dst_id: int,
@@ -390,6 +426,7 @@ class Cluster:
         self._place_records(sset, records)
         self.catalog[name] = sset
         self.stats.register_replica(name, self._replica_info(sset))
+        self.stats.note_event()  # job event: staging moved real bytes
         return sset
 
     def register_replica_set(self, logical_name: str,
@@ -588,8 +625,10 @@ class Cluster:
             raise ValueError(f"node {node_id} is alive; nothing to recover")
         node.pool = BufferPool(node.capacity,
                                SpillStore(self._node_spill_dir(node_id)),
-                               policy=self.policy)
+                               policy=self.policy,
+                               pressure_watermark=self.pressure_watermark)
         node.alive = True
+        self.stats.note_event()  # topology event: node re-joined
         for sset in self.catalog.values():
             info = sset.shards.get(node_id)
             if info is not None:
@@ -711,7 +750,22 @@ class Cluster:
                             sub = routed[offsets[slot]:offsets[slot + 1]]
                             if not len(sub):
                                 continue
-                            writers[nid].append_batch(sub)
+                            # pace the shard-to-shard stream against the
+                            # destination survivor's admission grant — a
+                            # pressured survivor throttles the remesh
+                            # instead of being buried by it
+                            reservation = None
+                            if self.admission:
+                                memory = self.nodes[nid].memory
+                                if memory is not None:
+                                    reservation = memory.try_reserve(
+                                        sub.nbytes, urgency="required",
+                                        timeout=self.admission_timeout_s)
+                            try:
+                                writers[nid].append_batch(sub)
+                            finally:
+                                if reservation is not None:
+                                    reservation.release()
                             crc[nid] = zlib.crc32(
                                 np.ascontiguousarray(sub).tobytes(), crc[nid])
                             content[nid] = combine_content_checksums(
@@ -802,6 +856,7 @@ class Cluster:
             else:
                 report.lost.append(name)
         report.driver_peak_bytes = self.driver_memory.reserved_hwm
+        self.stats.note_event()  # topology event: membership + layout changed
         report.seconds = time.perf_counter() - t0
         return report
 
@@ -847,7 +902,8 @@ class ClusterShuffle:
     def __init__(self, cluster: Cluster, name: str, num_reducers: int,
                  dtype: np.dtype, page_size: Optional[int] = None,
                  scheduler: Optional[ClusterScheduler] = None,
-                 partition_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None):
+                 partition_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+                 admission: Optional[bool] = None):
         self.cluster = cluster
         self.name = name
         self.num_reducers = num_reducers
@@ -858,8 +914,18 @@ class ClusterShuffle:
         # side by the *stationary* side's storage scheme so matching keys
         # land on the nodes whose build shards already sit there
         self.partition_fn = partition_fn
+        # admission control (PR 5): map writers pace their job-data page
+        # writes against the worker node's staging grant, reducer pulls pace
+        # each staged chunk against the destination's grant, and placement
+        # re-routes reducers whose planned node refuses admission past the
+        # deadline. Defaults to the cluster-wide knob.
+        self.admission = (cluster.admission if admission is None
+                          else admission)
         self.placement: Optional[Dict[int, int]] = None
+        # reducer -> (refused_node, placed_node) when admission diverted it
+        self.diversions: Dict[int, Tuple[int, int]] = {}
         self._services: Dict[int, ShuffleService] = {}
+        self._svc_lock = threading.Lock()  # threaded mappers race creation
         self._pulled: Dict[int, Tuple[str, int]] = {}  # reducer -> (set, node)
         # worker node -> shard-map work items it performed, for straggler
         # re-execution: (sset, shard_id, key_fn, transform, batch)
@@ -876,19 +942,31 @@ class ClusterShuffle:
 
     def place_reducers_locally(self) -> Dict[int, int]:
         """Adopt the scheduler's locality-aware placement (call after
-        ``finish_maps`` — it needs the published byte statistics)."""
-        placement = self.scheduler.place_reducers(self.name, self.num_reducers)
-        self.assign_placement(placement)
-        return placement
+        ``finish_maps`` — it needs the published byte statistics). With
+        admission on, each reducer's chosen node must also admit the
+        partition's landing bytes within the cluster's deadline; refused
+        reducers are diverted to the next-best byte-locality candidate and
+        the diversions recorded on ``self.diversions``."""
+        if self.admission:
+            plan = self.scheduler.place_reducers_admitted(
+                self.name, self.num_reducers,
+                deadline_s=self.cluster.admission_deadline_s)
+            self.diversions = dict(plan.diversions)
+            self.assign_placement(plan.placement)
+        else:
+            self.assign_placement(self.scheduler.place_reducers(
+                self.name, self.num_reducers))
+        return self.placement
 
     def _service(self, node_id: int) -> ShuffleService:
-        if node_id not in self._services:
-            self._services[node_id] = ShuffleService(
-                self.cluster.node(node_id).pool,
-                f"{self.name}/map{node_id}", self.num_reducers, self.dtype,
-                page_size=self.page_size,
-                attrs_factory=job_data_attrs)
-        return self._services[node_id]
+        with self._svc_lock:
+            if node_id not in self._services:
+                self._services[node_id] = ShuffleService(
+                    self.cluster.node(node_id).pool,
+                    f"{self.name}/map{node_id}", self.num_reducers, self.dtype,
+                    page_size=self.page_size,
+                    attrs_factory=job_data_attrs)
+            return self._services[node_id]
 
     def partition_of_keys(self, keys: np.ndarray) -> np.ndarray:
         if self.partition_fn is not None:
@@ -904,20 +982,48 @@ class ClusterShuffle:
         h ^= h >> np.uint64(29)
         return (h % np.uint64(self.num_reducers)).astype(np.int64)
 
+    def _paced_reservation(self, node_id: int, nbytes: int):
+        """Admission-paced staging grant against ``node_id`` (None when
+        admission is off or the node has no manager). Writers holding a
+        grant proceed; writers without headroom block until peers release
+        or the timeout forces them through — bounded in-flight bytes,
+        never dropped records."""
+        if not self.admission:
+            return None
+        node = self.cluster.nodes.get(node_id)
+        memory = node.memory if node is not None else None
+        if memory is None:
+            return None
+        return memory.try_reserve(
+            nbytes, urgency="required",
+            timeout=self.cluster.admission_timeout_s)
+
     def map_batch(self, node_id: int, records: np.ndarray,
                   key_fn: Callable[[np.ndarray], np.ndarray]) -> None:
         """Partition ``records`` on node ``node_id`` into its local virtual
-        shuffle buffers, one contiguous slice per reducer (dispatch plan)."""
+        shuffle buffers, one contiguous slice per reducer (dispatch plan).
+        The write is paced against the node's admission grant: concurrent
+        mappers feeding one pressured node throttle instead of stampeding
+        its pool."""
         if len(records) == 0:
             return
         parts = self.partition_of_keys(key_fn(records))
         order, counts, offsets = dispatch_plan(parts, self.num_reducers)
         routed = records[order]
         svc = self._service(node_id)
-        for r in range(self.num_reducers):
-            chunk = routed[offsets[r]:offsets[r + 1]]
-            if len(chunk):
-                svc.get_buffer(node_id, r).add_batch(chunk)
+        # writer identity = (node, thread): concurrent mapper threads feeding
+        # one node each get their own virtual shuffle buffers (the service
+        # hands out disjoint small pages), so threaded map writers are safe
+        worker = (node_id, threading.get_ident())
+        reservation = self._paced_reservation(node_id, routed.nbytes)
+        try:
+            for r in range(self.num_reducers):
+                chunk = routed[offsets[r]:offsets[r + 1]]
+                if len(chunk):
+                    svc.get_buffer(worker, r).add_batch(chunk)
+        finally:
+            if reservation is not None:
+                reservation.release()
 
     def map_shard(self, sset: ShardedSet, shard_id: int,
                   key_fn: Callable[[np.ndarray], np.ndarray],
@@ -1053,8 +1159,15 @@ class ClusterShuffle:
         writer = SequentialWriter(dst_pool, ls, self.dtype)
         for node_id, svc in sorted(self._services.items()):
             for chunk in svc.iter_partition(reducer):
-                with dst_node.memory.reserve(chunk.nbytes):
+                # paced against the destination's grant (concurrent pulls
+                # into one reducer node throttle each other); falls back to
+                # the always-grant charge with admission off
+                reservation = (self._paced_reservation(dst, chunk.nbytes)
+                               or dst_node.memory.reserve(chunk.nbytes))
+                try:
                     writer.append_batch(chunk)
+                finally:
+                    reservation.release()
                 if node_id == dst:
                     self.cluster.add_local_bytes(chunk.nbytes)
                 else:
@@ -1090,9 +1203,16 @@ class ClusterShuffle:
     def pull_async(self, reducer: int, after: Sequence = ()):
         """Submit ``pull(reducer)`` to the transfer engine; returns its
         future. Safe to run concurrently with other pulls: the buffer pools
-        are internally locked and each pull touches its own partition."""
+        are internally locked and each pull touches its own partition.
+        The job declares its destination node and landing bytes (resolved
+        lazily — placement may itself be a pending engine job), so the
+        engine's per-destination cap keeps overlapped pulls from stampeding
+        one reducer node."""
         return self.cluster.transfer.submit(
-            self.pull, reducer, after=after, label=f"{self.name}/pull{reducer}")
+            self.pull, reducer, after=after, label=f"{self.name}/pull{reducer}",
+            dest=lambda: self.reducer_node(reducer),
+            nbytes=lambda: sum(self.cluster.stats.shuffle_partition_bytes(
+                self.name, reducer).values()))
 
     def release_reducer(self, reducer: int) -> None:
         """Drop a pulled reduce partition once the reducer has consumed it."""

@@ -61,6 +61,9 @@ class JoinReport:
     probe_rows: int = 0
     output_rows: int = 0
     stragglers_redone: List[Tuple[int, int]] = field(default_factory=list)
+    # reducer -> (refused_node, placed_node): partitions whose byte-locality
+    # node refused admission past the deadline and were re-routed (PR 5)
+    diversions: Dict[int, Tuple[int, int]] = field(default_factory=dict)
     seconds: float = 0.0
 
     @property
@@ -211,7 +214,15 @@ class ClusterJoin:
             self.cluster.stats.total_shuffle_bytes(shb.name)
         report.shuffled_bytes["probe"] = \
             self.cluster.stats.total_shuffle_bytes(shp.name)
-        placement = self.scheduler.place_join_reducers(shb.name, shp.name, R)
+        if self.cluster.admission:
+            pplan = self.scheduler.place_join_reducers_admitted(
+                shb.name, shp.name, R,
+                deadline_s=self.cluster.admission_deadline_s)
+            placement = pplan.placement
+            report.diversions = dict(pplan.diversions)
+        else:
+            placement = self.scheduler.place_join_reducers(shb.name,
+                                                           shp.name, R)
         shb.assign_placement(placement)
         shp.assign_placement(placement)
         outs = []

@@ -24,6 +24,15 @@ asks the scheduler where to put things:
   stationary side's own storage scheme; when both sides must move, reducer
   placement follows the combined byte statistics with the same pressure
   discount as aggregation.
+* **Admission-checked placement** (``place_reducers_admitted`` /
+  ``place_join_reducers_admitted``, PR 5) — before a reducer is pinned, the
+  chosen node's ``MemoryManager`` must *admit* the partition's landing bytes
+  (``AdmissionController.admit_placement``); a node that refuses past the
+  deadline loses the partition to the next-best byte-locality candidate, and
+  the diversion is recorded in the returned ``PlacementPlan``. Placement
+  also reads pressure through ``node_pressure_current`` — the recorded
+  snapshot while fresh, the node's live score once any topology/job event
+  has made the snapshot stale.
 * **Read-source selection** (``read_sources``) — reads of a dead owner's
   shard are routed to a surviving CRC-verified replica holder rather than
   failing.
@@ -64,6 +73,24 @@ class RecoverySource:
         return (self.cost_bytes, self.pressure,
                 {"primary": 0, "replica": 1, "rebuild": 2}[self.kind],
                 -1 if self.holder is None else self.holder)
+
+
+@dataclass
+class PlacementPlan:
+    """An admission-checked reducer placement (PR 5): the final assignment
+    plus every diversion the admission loop made — ``diversions[r]`` is
+    ``(refused_node, placed_node)`` for a reducer whose byte-locality choice
+    refused admission past the deadline and was re-placed on the next-best
+    candidate. ``refusals`` counts every candidate that refused along the
+    way (a reducer may be refused by several nodes before landing)."""
+
+    placement: Dict[int, int]
+    diversions: Dict[int, Tuple[int, int]]
+    refusals: int = 0
+
+    @property
+    def diverted(self) -> int:
+        return len(self.diversions)
 
 
 @dataclass
@@ -120,29 +147,104 @@ class ClusterScheduler:
         alive = self.cluster.alive_node_ids()
         return {r: alive[r % len(alive)] for r in range(num_reducers)}
 
+    def node_pressure_current(self, node_id: int) -> float:
+        """The pressure score placement should trust *now*: the recorded
+        snapshot while it is fresh, else the node's live
+        ``MemoryManager.pressure_score()`` (PR-5 bugfix — pressure is
+        published at shuffle finalization, so back-to-back jobs used to plan
+        against the previous job's snapshot; any topology/job event since
+        the recording invalidates it)."""
+        fresh = self.cluster.stats.node_pressure_fresh(node_id)
+        if fresh is not None:
+            return fresh
+        return self.node_pressure_live(node_id)
+
+    def _rank_candidates(self, shuffle_names: Sequence[str], r: int,
+                         base: int) -> Tuple[List[int], int]:
+        """Alive candidate nodes for reducer ``r``, best byte-locality first
+        (pressure-discounted), plus the partition's total map-output bytes.
+        Falls back to ``[base]`` when no byte statistics exist."""
+        stats = self.cluster.stats
+        by_node: Dict[int, int] = {}
+        for name in shuffle_names:
+            for n, b in stats.shuffle_partition_bytes(name, r).items():
+                if self.cluster.nodes[n].alive:
+                    by_node[n] = by_node.get(n, 0) + b
+        total = sum(by_node.values())
+        if not by_node:
+            return [base], total
+        score = {n: b * (1.0 - self.node_pressure_current(n))
+                 for n, b in by_node.items()}
+        ranked = sorted(score, key=lambda n: (score[n], n == base, -n),
+                        reverse=True)
+        return ranked, total
+
     def _place_by_bytes(self, shuffle_names: Sequence[str],
                         num_reducers: int) -> Dict[int, int]:
         """The placement core shared by aggregation and join shuffles:
         reducer ``r`` goes to the alive node holding the most map-output
         bytes for partition ``r``, summed over every named shuffle,
         pressure-discounted; ties fall back to the baseline node."""
-        stats = self.cluster.stats
         placement = self.baseline_placement(num_reducers)
         for r in range(num_reducers):
-            base = placement[r]
-            by_node: Dict[int, int] = {}
-            for name in shuffle_names:
-                for n, b in stats.shuffle_partition_bytes(name, r).items():
-                    if self.cluster.nodes[n].alive:
-                        by_node[n] = by_node.get(n, 0) + b
-            if not by_node:
-                continue
-            score = {n: b * (1.0 - stats.node_pressure(n))
-                     for n, b in by_node.items()}
-            placement[r] = max(
-                score,
-                key=lambda n: (score[n], n == base, -n))
+            ranked, _total = self._rank_candidates(shuffle_names, r,
+                                                   placement[r])
+            placement[r] = ranked[0]
         return placement
+
+    def _place_admitted(self, shuffle_names: Sequence[str],
+                        num_reducers: int,
+                        deadline_s: float) -> PlacementPlan:
+        """Admission-checked placement (the PR-5 control loop's re-route
+        step): walk each reducer's byte-locality ranking and pin it to the
+        first candidate whose MemoryManager admits the partition's landing
+        bytes within ``deadline_s``. A refusal past the deadline diverts the
+        partition to the next-best candidate and is recorded in the plan;
+        when every candidate refuses, the byte-heaviest keeps the reducer
+        (someone must run it — the pool spills rather than fails).
+
+        Candidates beyond the byte holders count too: a node holding zero
+        map output but with admission headroom is a better home than a full
+        byte-local node — it pays the partition's bytes on the wire once
+        instead of spilling them through a saturated pool — so the ranking
+        is extended with the remaining alive nodes, least-pressured first."""
+        placement = self.baseline_placement(num_reducers)
+        plan = PlacementPlan(placement=placement, diversions={})
+        # a node that already refused during THIS planning pass gets only a
+        # non-blocking probe for later reducers — without the memo, one
+        # persistently pressured byte-heavy node would cost the full
+        # deadline serially for every reducer planned onto it
+        refused_once: set = set()
+        # bytes this pass has already planned onto each node: admission is
+        # probed against live occupancy, so without this a node with
+        # headroom for ONE partition would be granted all of them and the
+        # pulls would spill exactly the way always-grant does
+        planned: Dict[int, int] = {}
+        for r in range(num_reducers):
+            ranked, total = self._rank_candidates(shuffle_names, r,
+                                                  placement[r])
+            ranked = ranked + sorted(
+                (n for n in self.cluster.alive_node_ids()
+                 if n not in ranked),
+                key=lambda n: (self.node_pressure_live(n), n))
+            chosen = ranked[0]
+            for candidate in ranked:
+                node = self.cluster.nodes[candidate]
+                memory = node.memory if node.alive else None
+                first_probe = candidate not in refused_once
+                ask = total + planned.get(candidate, 0)
+                if memory is None or memory.admission.admit_placement(
+                        ask, deadline_s=deadline_s if first_probe else 0.0,
+                        count=first_probe):
+                    chosen = candidate
+                    break
+                refused_once.add(candidate)
+                plan.refusals += 1
+            placement[r] = chosen
+            planned[chosen] = planned.get(chosen, 0) + total
+            if chosen != ranked[0]:
+                plan.diversions[r] = (ranked[0], chosen)
+        return plan
 
     def place_reducers(self, shuffle_name: str,
                        num_reducers: int) -> Dict[int, int]:
@@ -162,6 +264,15 @@ class ClusterScheduler:
         under pressure the plan may ship more bytes than round-robin
         would."""
         return self._place_by_bytes([shuffle_name], num_reducers)
+
+    def place_reducers_admitted(self, shuffle_name: str, num_reducers: int,
+                                deadline_s: float = 0.05) -> PlacementPlan:
+        """``place_reducers`` plus admission: each reducer's chosen node must
+        admit the partition's landing bytes (``AdmissionController
+        .admit_placement``) within ``deadline_s``, else the partition is
+        diverted to the next-best byte-locality candidate and the diversion
+        recorded in the returned plan."""
+        return self._place_admitted([shuffle_name], num_reducers, deadline_s)
 
     def placement_net_bytes(self, shuffle_name: str,
                             placement: Dict[int, int]) -> int:
@@ -267,6 +378,16 @@ class ClusterScheduler:
         co-locate."""
         return self._place_by_bytes([build_shuffle, probe_shuffle],
                                     num_reducers)
+
+    def place_join_reducers_admitted(self, build_shuffle: str,
+                                     probe_shuffle: str, num_reducers: int,
+                                     deadline_s: float = 0.05
+                                     ) -> PlacementPlan:
+        """``place_join_reducers`` with the same admission check and
+        re-routing as ``place_reducers_admitted`` (the landing ask is the
+        combined build+probe partition bytes)."""
+        return self._place_admitted([build_shuffle, probe_shuffle],
+                                    num_reducers, deadline_s)
 
     # -- read-source selection -------------------------------------------------
     def _holds(self, node_id: int, set_name: str) -> bool:

@@ -13,6 +13,17 @@ each other. This module extracts the two halves:
   engine orders them. Workers exit after an idle timeout and are respawned on
   the next submit, so short-lived clusters in tests don't accumulate threads.
 
+Since PR 5 the engine also enforces **per-destination in-flight byte caps**
+(the wire half of admission control): jobs may declare the node their bytes
+land on (``dest=``) and how many (``nbytes=``), and the engine holds a job
+back while that destination already has a cap's worth of transfer bytes in
+flight — so overlapped reducer pulls can't stampede one reducer node even
+before its MemoryManager starts refusing staging. ``dest``/``nbytes`` may be
+callables, resolved once the job's dependencies finish (a pull submitted
+before placement doesn't know its reducer node yet). A destination with
+nothing in flight always admits one job, so an oversized transfer can't
+starve.
+
 The buffer pool is internally locked (pin/unpin/new_page take the pool's
 RLock), which is what makes concurrent pulls through shared source pools safe.
 """
@@ -92,14 +103,29 @@ class TransferFuture:
 
 
 class _Job:
-    __slots__ = ("fn", "args", "kwargs", "future", "deps")
+    __slots__ = ("fn", "args", "kwargs", "future", "deps",
+                 "dest", "nbytes", "charged", "held")
 
-    def __init__(self, fn, args, kwargs, future, deps):
+    def __init__(self, fn, args, kwargs, future, deps,
+                 dest=None, nbytes=0):
         self.fn = fn
         self.args = args
         self.kwargs = kwargs
         self.future = future
         self.deps: List[TransferFuture] = deps
+        self.dest = dest        # destination key (or callable resolving one)
+        self.nbytes = nbytes    # landing bytes (or callable resolving them)
+        self.charged = 0        # bytes charged against dest while in flight
+        self.held = False       # already counted in dest_holds
+
+    def resolve(self) -> None:
+        """Late-bind dest/nbytes (callables become values once deps are
+        done — e.g. a reducer pull learns its node from the placement
+        job)."""
+        if callable(self.dest):
+            self.dest = self.dest()
+        if callable(self.nbytes):
+            self.nbytes = int(self.nbytes())
 
 
 class TransferEngine:
@@ -115,13 +141,17 @@ class TransferEngine:
 
     IDLE_EXIT_S = 5.0  # workers exit after this much idleness; respawned lazily
 
-    def __init__(self, num_workers: int = 4, name: str = "transfer"):
+    def __init__(self, num_workers: int = 4, name: str = "transfer",
+                 dest_inflight_cap: Optional[int] = None):
         self.num_workers = num_workers
         self.name = name
+        self.dest_inflight_cap = dest_inflight_cap
         self._ready: "queue.Queue[Optional[_Job]]" = queue.Queue()
         self._lock = threading.Lock()
-        self._pending: List[_Job] = []      # jobs waiting on dependencies
+        self._pending: List[_Job] = []      # waiting on deps or dest headroom
         self._inflight = 0                  # submitted but not finished
+        self._dest_bytes: dict = {}         # dest -> bytes currently in flight
+        self.dest_holds = 0                 # jobs held back for dest headroom
         self._workers: List[threading.Thread] = []
         self._idle = threading.Condition(self._lock)
         self._closed = False
@@ -169,33 +199,108 @@ class TransferEngine:
             job.future._finish(exc=exc)
         else:
             job.future._finish(result=result)
-        self._on_done()
+        self._on_done(job)
 
-    def _on_done(self) -> None:
+    def _dest_admits(self, job: _Job) -> bool:
+        """Per-destination in-flight cap (lock held, deps already done): a
+        destination with nothing in flight always admits, otherwise the
+        job's bytes must fit under the cap on top of what is in flight."""
+        if self.dest_inflight_cap is None:
+            return True
+        job.resolve()
+        if job.dest is None or job.nbytes <= 0:
+            return True
+        inflight = self._dest_bytes.get(job.dest, 0)
+        return inflight == 0 or inflight + job.nbytes <= self.dest_inflight_cap
+
+    def _charge(self, job: _Job) -> None:
+        if self.dest_inflight_cap is not None and job.dest is not None \
+                and not callable(job.dest) and job.nbytes:
+            job.charged = job.nbytes
+            self._dest_bytes[job.dest] = \
+                self._dest_bytes.get(job.dest, 0) + job.charged
+
+    def _try_admit(self, job: _Job) -> Optional[bool]:
+        """Admission check with exception isolation (lock held): True =
+        admit, False = hold for headroom, None = the job's user-supplied
+        dest/nbytes callable raised — its future is failed and the job is
+        terminally done (a raising callable must not kill a worker thread
+        or hang ``drain`` on a leaked inflight count)."""
+        try:
+            return self._dest_admits(job)
+        except BaseException as exc:  # noqa: BLE001 - delivered via future
+            job.future._finish(exc=exc)
+            return None
+
+    def _promote_ready(self) -> None:
+        """Move every pending job whose deps are done AND whose destination
+        has headroom onto the ready queue (lock held). Charges destination
+        bytes as jobs are admitted, so one scan can't over-admit. Admission
+        per destination is FIFO: once a job for destination D is held, later
+        jobs for D stay held too — otherwise a stream of small jobs could
+        starve a large held one by forever eating D's headroom."""
+        still_pending: List[_Job] = []
+        blocked_dests = set()
+        for j in self._pending:
+            if not all(d.done() for d in j.deps):
+                still_pending.append(j)
+                continue
+            admit = self._try_admit(j)
+            if admit is None:
+                self._inflight -= 1      # failed without running
+                continue
+            if admit and j.dest is not None and j.dest in blocked_dests:
+                admit = False            # FIFO: an earlier job for this
+                                         # dest is already held
+            if not admit:
+                if not j.held:           # count each held job once
+                    j.held = True
+                    self.dest_holds += 1
+                if j.dest is not None and not callable(j.dest):
+                    blocked_dests.add(j.dest)
+                still_pending.append(j)
+            else:
+                self._charge(j)
+                self._ready.put(j)
+        self._pending = still_pending
+
+    def _on_done(self, job: _Job) -> None:
         with self._lock:
             self._inflight -= 1
-            newly_ready = [j for j in self._pending
-                           if all(d.done() for d in j.deps)]
-            for j in newly_ready:
-                self._pending.remove(j)
-                self._ready.put(j)
+            if job.charged:
+                left = self._dest_bytes.get(job.dest, 0) - job.charged
+                if left > 0:
+                    self._dest_bytes[job.dest] = left
+                else:
+                    self._dest_bytes.pop(job.dest, None)
+            self._promote_ready()
             self._idle.notify_all()
 
     # -- public API ------------------------------------------------------------
     def submit(self, fn: Callable, *args,
                after: Sequence[TransferFuture] = (),
-               label: str = "", **kwargs) -> TransferFuture:
+               label: str = "", dest=None, nbytes=0,
+               **kwargs) -> TransferFuture:
+        """Enqueue a job. ``dest``/``nbytes`` (values or callables resolved
+        once deps finish) declare where the job's bytes land and how many,
+        for the per-destination in-flight cap; jobs without them are
+        unmetered."""
         if self._closed:
             raise RuntimeError("engine is shut down")
         future = TransferFuture(next(self._ids), label or getattr(fn, "__name__", ""))
-        job = _Job(fn, args, kwargs, future, list(after))
+        job = _Job(fn, args, kwargs, future, list(after),
+                   dest=dest, nbytes=nbytes)
         with self._lock:
             self._inflight += 1
             self._ensure_workers()
-            if all(d.done() for d in job.deps):
-                self._ready.put(job)
-            else:
-                self._pending.append(job)
+            # one admission path for every job: append in submission order
+            # and let the scan admit — it enforces deps, dest headroom, and
+            # per-destination FIFO in one place (a fast path here would let
+            # a newcomer slip past an earlier job the scan hasn't marked
+            # held yet)
+            self._pending.append(job)
+            self._promote_ready()
+            self._idle.notify_all()
         return future
 
     def map(self, fn: Callable, items: Sequence,

@@ -1,0 +1,489 @@
+"""Backpressure-driven admission (ISSUE 5): the pressure signal becomes a
+grant. ``MemoryManager.try_reserve`` / ``AdmissionController`` cap in-flight
+staging per node, writers block-with-timeout instead of stampeding, the
+scheduler re-routes reducers whose planned node refuses admission past the
+deadline, and the transfer engine bounds in-flight bytes per destination.
+
+Acceptance scenario (tentpole): an over-capacity shuffle with admission
+enabled completes byte-identically to always-grant while reducing destination
+spill bytes, and a refused-past-deadline reducer is observably re-routed in
+the plan. Plus the PR-5 accounting bugfixes: pressure clears after a burst,
+reservation release is idempotent under races, stale recorded pressure falls
+back to the live score.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BufferPool, MemoryManager, derive_staging_cap)
+from repro.core.memory_manager import STAGING_CAP_FLOOR
+from repro.runtime.cluster import Cluster, ClusterShuffle
+from repro.runtime.transfer import TransferEngine
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def _pairs(n, key_range, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, key_range, n)
+    recs["val"] = rng.random(n)
+    return recs
+
+
+# -- staging admission: try_reserve ------------------------------------------
+def test_derive_staging_cap_watermark_and_floor():
+    assert derive_staging_cap(100 << 20, 0.85) == int(0.15 * (100 << 20))
+    # tiny pools advertise at least one chunk's worth (capped at capacity)
+    assert derive_staging_cap(64 << 10, 0.85) == 64 << 10
+    assert derive_staging_cap(1 << 20, 0.9) == STAGING_CAP_FLOOR
+
+
+def test_try_reserve_grants_within_cap_and_counts_refusals():
+    mm = MemoryManager(1 << 20, admission_cap=256 << 10)
+    held = mm.try_reserve(200 << 10)
+    assert held is not None and mm.reserved_bytes == 200 << 10
+    # no headroom: "low" refuses immediately, "normal" refuses past timeout
+    assert mm.try_reserve(100 << 10, urgency="low") is None
+    assert mm.try_reserve(100 << 10, timeout=0.01) is None
+    assert mm.admission.refused == 2
+    # "required" is forced through rather than refused
+    forced = mm.try_reserve(100 << 10, urgency="required", timeout=0.01)
+    assert forced is not None
+    assert mm.admission.forced == 1
+    forced.release()
+    held.release()
+    assert mm.reserved_bytes == 0
+    # with headroom back, a normal ask grants without waiting
+    with mm.try_reserve(100 << 10) as r:
+        assert r is not None
+
+
+def test_try_reserve_oversized_request_admits_when_idle():
+    """A single request larger than the cap must not starve: a node with no
+    staging in flight admits it (the pool spills rather than refuses)."""
+    mm = MemoryManager(1 << 20, admission_cap=64 << 10)
+    big = mm.try_reserve(512 << 10, urgency="low")
+    assert big is not None
+    # but piling more on top is refused until it drains
+    assert mm.try_reserve(8 << 10, urgency="low") is None
+    big.release()
+    assert mm.try_reserve(8 << 10, urgency="low") is not None
+
+
+def test_try_reserve_unblocks_when_peer_releases():
+    """Blocking-with-timeout wait: a writer without headroom is woken by a
+    peer's release, not the timeout (no deadlock on refusal either way)."""
+    mm = MemoryManager(1 << 20, admission_cap=128 << 10)
+    held = mm.try_reserve(100 << 10)
+    t = threading.Timer(0.05, held.release)
+    t.start()
+    t0 = time.perf_counter()
+    res = mm.try_reserve(100 << 10, timeout=10.0)
+    waited = time.perf_counter() - t0
+    assert res is not None
+    assert waited < 5.0                      # woken by the release
+    assert mm.admission.throttled >= 1
+    res.release()
+    assert mm.reserved_bytes == 0
+
+
+# -- reservation release: idempotent + non-negative (satellite) ---------------
+def test_release_is_idempotent_under_racing_releasers():
+    mm = MemoryManager(1 << 20)
+    res = mm.reserve(64 << 10)
+    threads = [threading.Thread(target=res.release) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert mm.reserved_bytes == 0            # released exactly once
+    res.release()                            # and still a no-op afterwards
+    assert mm.reserved_bytes == 0
+
+
+def test_over_release_asserts_instead_of_going_negative():
+    """Accounting corruption must be loud: driving reserved_bytes negative
+    (which silently corrupted pressure_score) now trips the lock-held
+    assertion."""
+    mm = MemoryManager(1 << 20)
+    mm.reserve(8 << 10).release()
+    with pytest.raises(AssertionError, match="negative"):
+        mm._release(1)
+
+
+# -- pressure accounting bugfix (satellite) -----------------------------------
+def test_pressure_clears_after_burst_without_faulting_back():
+    """Regression: a node that paged cold data out during a burst used to
+    read as under_pressure() forever (spilled_bytes > 0), repelling placement
+    even with a nearly empty arena. Paged-out bytes that could fault back
+    under the watermark are not pressure."""
+    pool = BufferPool(1 << 20)
+    mm = pool.memory
+    cold = pool.create_set("cold", 1 << 14)
+    cold_pages = []
+    for i in range(25):                      # 400K of cold data
+        p = pool.new_page(cold)
+        pool.view(p)[:] = i
+        pool.unpin(p, dirty=True)
+        cold_pages.append(p)
+    burst = pool.create_set("burst", 1 << 14)
+    for i in range(80):                      # 1.25M burst pages everything
+        p = pool.new_page(burst)
+        pool.view(p)[:] = i
+        pool.unpin(p, dirty=True)
+    assert mm.under_pressure()               # genuinely over capacity
+    burst.end_lifetime(pool.clock)
+    pool.drop_set(burst)
+    # arena nearly empty, cold residue on disk: NOT pressure any more
+    assert mm.spilled_bytes > 0
+    assert not mm.under_pressure()
+    assert mm.pressure_score() == 0.0
+    # faulting everything back still balances the books
+    for p in cold_pages:
+        pool.pin(p)
+        pool.unpin(p)
+    assert mm.spilled_bytes == 0
+    assert not mm.under_pressure()
+
+
+def test_paged_out_bytes_beyond_headroom_still_pressure():
+    """The other side of the fix: when the paged-out bytes could NOT fault
+    back under the watermark, the node is still pressured."""
+    mm = MemoryManager(1 << 20, pressure_watermark=0.5)
+    mm.note_alloc(400 << 10)                 # resident near the watermark
+    mm.note_paged_out(300 << 10)             # and a lot paged out
+    assert mm.under_pressure()
+    assert mm.pressure_score() > 0.0
+
+
+# -- placement admission + re-route (tentpole) --------------------------------
+def test_admit_placement_refuses_full_node_and_waits_for_headroom():
+    mm = MemoryManager(1 << 20, pressure_watermark=0.5)
+    assert mm.admission.admit_placement(100 << 10)
+    mm.note_alloc(600 << 10)                 # past the watermark
+    assert not mm.admission.admit_placement(100 << 10, deadline_s=0.01)
+    assert mm.admission.refused == 1
+    # headroom appearing during the deadline grants the wait
+    t = threading.Timer(0.05, lambda: mm.note_free(500 << 10))
+    t.start()
+    assert mm.admission.admit_placement(100 << 10, deadline_s=10.0)
+
+
+def _shuffle_two_nodes(cluster, heavy_node=1, light_node=2):
+    """One-reducer shuffle whose bytes are mostly on ``heavy_node``."""
+    sh = ClusterShuffle(cluster, "p", num_reducers=1, dtype=PAIR)
+    probe = np.arange(50_000, dtype=np.int64)
+    key0 = probe[sh.partition_of_keys(probe) == 0][0]
+    heavy = np.zeros(3_000, PAIR)
+    heavy["key"] = key0
+    light = np.zeros(500, PAIR)
+    light["key"] = key0
+    sh.map_batch(heavy_node, heavy, key_fn=lambda p: p["key"])
+    sh.map_batch(light_node, light, key_fn=lambda p: p["key"])
+    sh.finish_maps()
+    return sh
+
+
+def test_refused_reducer_is_rerouted_and_diversion_recorded():
+    cluster = Cluster(4, node_capacity=1 << 20, page_size=1 << 14,
+                      replication_factor=0, admission_deadline_s=0.01)
+    sh = _shuffle_two_nodes(cluster)
+    # byte-locality alone picks node 1
+    assert cluster.scheduler.place_reducers("p", 1)[0] == 1
+    # node 1 refuses: resident ballast past its watermark
+    ballast = _pairs(58_000, 100, seed=1)    # ~928K of a 1M pool
+    cluster.nodes[1].write_records("ballast", ballast, PAIR, 1 << 14)
+    plan = cluster.scheduler.place_reducers_admitted("p", 1,
+                                                     deadline_s=0.01)
+    assert plan.placement[0] == 2            # next-best byte candidate
+    assert plan.diversions == {0: (1, 2)}    # the diversion is recorded
+    assert plan.refusals >= 1
+    assert cluster.nodes[1].memory.admission.refused >= 1
+    # the shuffle adopts the diverted plan end to end
+    sh.place_reducers_locally()
+    assert sh.placement[0] == 2
+    assert sh.diversions == {0: (1, 2)}
+    pulled = sh.pull(0)
+    assert len(pulled) == 3_500
+    sh.release_reducer(0)
+    cluster.shutdown()
+
+
+def test_all_nodes_refusing_keeps_byte_heaviest_plan():
+    """When every candidate refuses past the deadline, someone must still
+    run the reducer: the byte-heaviest node keeps it (spill, don't fail)."""
+    cluster = Cluster(4, node_capacity=1 << 20, page_size=1 << 14,
+                      replication_factor=0)
+    sh = _shuffle_two_nodes(cluster)
+    ballast = _pairs(58_000, 100, seed=2)
+    for nid in cluster.alive_node_ids():
+        cluster.nodes[nid].write_records(f"ballast{nid}", ballast, PAIR,
+                                         1 << 14)
+    plan = cluster.scheduler.place_reducers_admitted("p", 1,
+                                                     deadline_s=0.01)
+    assert plan.placement[0] == 1            # nobody admitted; locality wins
+    assert plan.diversions == {}
+    assert plan.refusals >= 2                # but the refusals were counted
+    sh.place_reducers_locally()
+    assert len(sh.pull(0)) == 3_500
+    sh.release_reducer(0)
+    cluster.shutdown()
+
+
+# -- stale pressure fallback (satellite) --------------------------------------
+def test_stale_recorded_pressure_falls_back_to_live_score():
+    """Regression: pressure is published at shuffle finalization, so a
+    back-to-back job used to plan against the previous job's snapshot. Any
+    topology/job event since the recording invalidates it and placement
+    reads the node's live MemoryManager score instead."""
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 16,
+                      replication_factor=0)
+    sh = _shuffle_two_nodes(cluster)
+    assert cluster.scheduler.place_reducers("p", 1)[0] == 1
+    # a recorded snapshot says node 1 is saturated -> placement avoids it
+    cluster.stats.record_node_pressure(1, 1.0)
+    assert cluster.scheduler.place_reducers("p", 1)[0] == 2
+    # a job boundary makes that snapshot stale; node 1's live score is 0,
+    # so its byte locality wins again
+    cluster.stats.note_event()
+    assert cluster.stats.node_pressure_fresh(1) is None
+    assert cluster.stats.node_pressure(1) == 1.0   # raw view keeps history
+    assert cluster.scheduler.place_reducers("p", 1)[0] == 1
+    sh.place_reducers_locally()
+    sh.release_partition(0)
+    cluster.shutdown()
+
+
+def test_clear_shuffle_is_a_job_event():
+    cluster = Cluster(2, node_capacity=1 << 20, replication_factor=0)
+    cluster.stats.record_node_pressure(0, 0.9)
+    assert cluster.stats.node_pressure_fresh(0) == 0.9
+    cluster.stats.clear_shuffle("whatever")
+    assert cluster.stats.node_pressure_fresh(0) is None
+    cluster.shutdown()
+
+
+# -- transfer engine per-destination caps (tentpole) --------------------------
+def test_transfer_engine_caps_inflight_bytes_per_destination():
+    engine = TransferEngine(4, name="adm-test", dest_inflight_cap=100)
+    lock = threading.Lock()
+    state = {"now": 0, "peak": 0}
+
+    def job():
+        with lock:
+            state["now"] += 1
+            state["peak"] = max(state["peak"], state["now"])
+        time.sleep(0.02)
+        with lock:
+            state["now"] -= 1
+
+    futs = [engine.submit(job, dest="n0", nbytes=60) for _ in range(6)]
+    for f in futs:
+        f.result(timeout=30)
+    assert state["peak"] == 1                # 60+60 > 100: one at a time
+    assert engine.dest_holds > 0
+    # different destinations are independent
+    state["now"] = state["peak"] = 0
+    futs = [engine.submit(job, dest=f"n{i}", nbytes=60) for i in range(4)]
+    for f in futs:
+        f.result(timeout=30)
+    assert state["peak"] > 1
+    # oversized single jobs still run (admit-when-idle), unmetered jobs too
+    engine.submit(job, dest="n9", nbytes=500).result(timeout=30)
+    engine.submit(job).result(timeout=30)
+    engine.shutdown()
+
+
+def test_transfer_engine_raising_callable_fails_job_not_engine():
+    """A raising dest/nbytes callable must fail that job's future — not
+    leak the inflight count (hanging drain/shutdown) or kill a worker."""
+    engine = TransferEngine(2, name="adm-test3", dest_inflight_cap=100)
+    # raise on the submit path (deps already done)
+    f = engine.submit(lambda: 1, dest=lambda: {}["missing"], nbytes=10)
+    with pytest.raises(KeyError):
+        f.result(timeout=5)
+    # raise on the deferred path (resolved in _promote_ready after deps)
+    dep = engine.submit(time.sleep, 0.02)
+    f2 = engine.submit(lambda: 1, after=[dep],
+                       dest=lambda: {}["missing"], nbytes=10)
+    with pytest.raises(KeyError):
+        f2.result(timeout=5)
+    # the engine still runs work and drains cleanly
+    assert engine.submit(lambda: 42).result(timeout=5) == 42
+    engine.drain(timeout=5)
+    engine.shutdown()
+
+
+def test_transfer_engine_resolves_callable_dest_after_deps():
+    """A pull submitted before placement declares dest/nbytes as callables;
+    they must resolve only once the placement dependency finished."""
+    engine = TransferEngine(2, name="adm-test2", dest_inflight_cap=1000)
+    placed = {}
+
+    def place():
+        time.sleep(0.02)
+        placed["node"] = "n7"
+
+    def pull():
+        return placed["node"]
+
+    f_place = engine.submit(place)
+    f_pull = engine.submit(pull, after=[f_place],
+                           dest=lambda: placed["node"], nbytes=lambda: 10)
+    assert f_pull.result(timeout=30) == "n7"
+    engine.shutdown()
+
+
+# -- threaded writers against one pressured node (satellite) ------------------
+def test_threaded_map_writers_bounded_inflight_no_deadlock_identical():
+    """Concurrent map writers feeding one node throttle against its staging
+    cap: the node's reservation HWM stays bounded, nothing deadlocks, and
+    the shuffle output is byte-identical to the always-grant run."""
+    batches = [_pairs(2_000, 1 << 40, seed=100 + i) for i in range(12)]
+
+    def run(admission):
+        cluster = Cluster(4, node_capacity=8 << 20, page_size=1 << 14,
+                          replication_factor=0, admission=admission,
+                          admission_timeout_s=30.0)
+        mm = cluster.nodes[0].memory
+        cap = 40 << 10                       # tight: one 32K batch at a time
+        mm.admission.cap = cap
+        mm.reset_reserved_hwm()
+        sh = ClusterShuffle(cluster, "t", num_reducers=4, dtype=PAIR)
+        errors = []
+        barrier = threading.Barrier(len(batches))
+
+        def writer(idx):
+            try:
+                barrier.wait()               # all writers hit the node at once
+                sh.map_batch(0, batches[idx], key_fn=lambda p: p["key"])
+            except Exception as e:  # noqa: BLE001 - surface thread crashes
+                errors.append(repr(e))
+
+        threads = [threading.Thread(target=writer, args=(i,))
+                   for i in range(len(batches))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        hwm = mm.reserved_hwm
+        assert mm.reserved_bytes == 0        # every grant released
+        sh.finish_maps()
+        out = []
+        for r in range(4):
+            out.append(np.sort(sh.pull(r), order=["key", "val"]).copy())
+            sh.release_reducer(r)
+        cluster.shutdown()
+        return hwm, out, mm.admission
+
+    hwm_on, out_on, adm = run(admission=True)
+    hwm_off, out_off, _ = run(admission=False)
+    # bounded in-flight: the reservation HWM proves grants were serialized
+    # under the cap, and no forced grants happened with the generous timeout
+    # (admission-off writers never reserve — they stampede the pool raw)
+    assert 0 < hwm_on <= (40 << 10)
+    assert adm.forced == 0
+    assert adm.throttled > 0                 # writers really took turns
+    assert hwm_off == 0
+    for a, b in zip(out_on, out_off):
+        assert np.array_equal(a.view(np.uint8).reshape(len(a), -1),
+                              b.view(np.uint8).reshape(len(b), -1))
+
+
+# -- over-capacity shuffle: admission vs always-grant (acceptance) ------------
+def _admission_run(recs, admission):
+    """Mini version of the bench workload: ballast the byte-heaviest node so
+    it refuses, then place + pull; returns keys, pull-phase spill delta on
+    the hot node, and the diversions."""
+    cap = 1 << 20
+    cluster = Cluster(4, node_capacity=cap, page_size=1 << 14,
+                      replication_factor=0, admission=admission,
+                      admission_deadline_s=0.01)
+    sset = cluster.create_sharded_set("src", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "sh", num_reducers=4, dtype=PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    hot = max(cluster.alive_node_ids(), key=lambda nid: sum(
+        cluster.stats.shuffle_partition_bytes("sh", r).get(nid, 0)
+        for r in range(4)))
+    headroom = cap - cluster.nodes[hot].memory.resident_bytes
+    ballast = np.zeros(max(1, (headroom * 3 // 4) // PAIR.itemsize), PAIR)
+    cluster.nodes[hot].write_records("ballast", ballast, PAIR, 1 << 14)
+    spill0 = sum(node.memory.stats["spill_bytes"]
+                 for node in cluster.nodes.values())
+    sh.place_reducers_locally()
+    placement = dict(sh.placement)
+    keys = []
+    for r in range(4):
+        keys.append(sh.pull(r)["key"].copy())
+        sh.release_reducer(r)
+    spill = sum(node.memory.stats["spill_bytes"]
+                for node in cluster.nodes.values()) - spill0
+    out = (np.sort(np.concatenate(keys)), spill, dict(sh.diversions),
+           placement, hot)
+    cluster.shutdown()
+    return out
+
+
+def test_both_shuffled_join_diverts_and_stays_byte_identical():
+    """place_join_reducers_admitted: a both-sides-shuffled join re-routes
+    reducers away from pressured nodes (JoinReport.diversions) and its
+    output is byte-identical to the always-grant run."""
+    from repro.runtime.join import ClusterJoin
+
+    def run(admission):
+        cluster = Cluster(4, node_capacity=1 << 20, page_size=1 << 14,
+                          replication_factor=0, admission=admission,
+                          admission_deadline_s=0.01)
+        # both sides live on nodes 0-2 only and are NOT partitioned on
+        # "key" -> both sides shuffle, all map output sits on nodes 0-2
+        build = cluster.create_sharded_set(
+            "b", _pairs(30_000, 400, seed=5), key_fn=lambda r: r["key"],
+            node_ids=[0, 1, 2])
+        probe = cluster.create_sharded_set(
+            "p", _pairs(30_000, 400, seed=6), key_fn=lambda r: r["key"],
+            node_ids=[0, 1, 2])
+        out, report = ClusterJoin(cluster, build, probe, "key",
+                                  num_reducers=4).execute()
+        cluster.shutdown()
+        return out, report
+
+    out_on, rep_on = run(True)
+    out_off, rep_off = run(False)
+    assert rep_on.plan.shuffle_sides == ("build", "probe")
+    assert np.array_equal(out_on.view(np.uint8).reshape(len(out_on), -1),
+                          out_off.view(np.uint8).reshape(len(out_off), -1))
+    assert rep_off.diversions == {}
+    # nodes 0-2 hold ~1M of shards + map output each (past the watermark);
+    # idle node 3 holds zero bytes but admission headroom: refused
+    # partitions divert there instead of spilling through a full pool
+    assert rep_on.diversions
+    assert all(to == 3 for _refused, to in rep_on.diversions.values())
+
+
+def test_admission_reduces_destination_spill_byte_identical():
+    # ~960K of pairs through 1M pools: the cluster as a whole has headroom,
+    # but the ballasted byte-heaviest node does not — the always-grant plan
+    # pins reducers there anyway and pays in destination spill
+    rng = np.random.default_rng(3)
+    recs = np.zeros(60_000, PAIR)
+    recs["key"] = rng.zipf(1.3, len(recs)).astype(np.int64)
+    recs["val"] = rng.random(len(recs))
+    k_on, spill_on, div_on, placement_on, hot = _admission_run(recs, True)
+    k_off, spill_off, div_off, placement_off, _ = _admission_run(recs, False)
+    # byte-identical shuffle output
+    assert np.array_equal(k_on, k_off)
+    assert len(k_on) == len(recs)
+    # always-grant pinned reducers to the refusing hot node; admission
+    # observably re-routed at least one of them and recorded the diversion
+    assert div_off == {}
+    assert div_on
+    assert all(refused == hot for refused, _to in div_on.values())
+    assert all(placement_on[r] != hot for r in div_on)
+    assert hot in placement_off.values()
+    # and the diverted reducers stopped paying destination spill
+    assert spill_on < spill_off
