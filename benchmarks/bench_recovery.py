@@ -2,8 +2,18 @@
 replication, for 10/20/30 worker nodes, plus the conflicting-object ratio
 (expected N/K) — and the same scenario through the real cluster backend:
 kill one node's entire buffer pool and re-materialize its shards from chain
-replicas with checksum verification."""
+replicas with checksum verification.
+
+PR 6 adds the durable-tier rows: warm recovery (the revived node replays its
+local page log — zero network bytes) against the cold baseline (its disk
+died too, every byte pulled from replicas), and an aggregate-RAM-exceeding
+scan that completes byte-identically because write-through sets page against
+the log instead of failing."""
 from __future__ import annotations
+
+import os
+import shutil
+import tempfile
 
 import numpy as np
 
@@ -17,6 +27,8 @@ from .common import record, scaled, timeit
 REC = np.dtype([("okey", np.int64), ("pkey", np.int64)])
 N = 600_000
 CLUSTER_N = 200_000
+WARM_N = 150_000
+OVERCAP_N = 400_000
 
 
 def run() -> None:
@@ -46,6 +58,8 @@ def run() -> None:
                conflict_ratio=ratio, expected_ratio=1 / nodes)
     run_cluster()
     run_degrade()
+    run_warm_recovery()
+    run_overcap_scan()
 
 
 def run_cluster() -> None:
@@ -102,6 +116,128 @@ def run_degrade() -> None:
                bytes_transferred=report.bytes_transferred,
                surviving_nodes=len(report.node_ids))
         cluster.shutdown()
+
+
+def _records(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, REC)
+    recs["okey"] = rng.permutation(n)
+    recs["pkey"] = rng.integers(0, 10_000, n)
+    return recs
+
+
+def _pagelog_root() -> str:
+    """CI sets BENCH_PAGELOG_DIR so the logs survive the run and the fsck
+    report can be uploaded as an artifact; otherwise use a temp dir."""
+    root = os.environ.get("BENCH_PAGELOG_DIR")
+    if root:
+        os.makedirs(root, exist_ok=True)
+        return root
+    return tempfile.mkdtemp(prefix="bench-pagelog-")
+
+
+def run_warm_recovery() -> None:
+    """PR 6 headline: recover the same killed node twice — once *warm* (its
+    page log survived, shards adopt from local disk and only CRC-verify) and
+    once *cold* (the disk died with the machine: log wiped, every byte pulled
+    from replica holders). Warm must move zero network bytes and finish
+    faster than cold."""
+    # keep a meaningful floor in smoke mode: the warm-vs-cold margin is the
+    # per-byte difference (local disk replay vs wire copy), so too-small
+    # shards would drown it in fixed revive/engine overheads; recovery
+    # itself is milliseconds, so each mode runs 3 times and the median
+    # counts — a single kill/recover pair is scheduler-noise territory
+    recs = _records(scaled(WARM_N, floor=60_000), 11)
+    root = _pagelog_root()
+    results = {}
+    for mode in ("cold", "warm"):
+        reports, nets = [], []
+        for rep in range(3):
+            cluster = Cluster(
+                4, node_capacity=64 << 20, page_size=1 << 16,
+                replication_factor=1,
+                pagelog_dir=os.path.join(root, f"warmbench-{mode}{rep}"))
+            sset = cluster.create_sharded_set("lineitem", recs,
+                                              key_fn=lambda r: r["okey"])
+            expect = np.sort(cluster.read_sharded(sset),
+                             order=["okey", "pkey"])
+            victim = 2
+            cluster.kill_node(victim)
+            if mode == "cold":
+                # the machine's disk is gone too: wipe the log first
+                shutil.rmtree(cluster._node_pagelog_dir(victim),
+                              ignore_errors=True)
+            base_net = cluster.net_bytes
+            report = cluster.recover_node(victim)
+            assert report.ok, report.checksum_failures
+            back = np.sort(cluster.read_sharded(sset),
+                           order=["okey", "pkey"])
+            assert np.array_equal(
+                expect.view(np.uint8).reshape(len(expect), -1),
+                back.view(np.uint8).reshape(len(back), -1))
+            reports.append(report)
+            nets.append(cluster.net_bytes - base_net)
+            cluster.shutdown()
+        reports.sort(key=lambda r: r.seconds)
+        results[mode] = (reports[1], nets[0])  # median time; nets identical
+    cold, warm = results["cold"], results["warm"]
+    assert warm[1] == 0, f"warm recovery moved {warm[1]} net bytes"
+    assert warm[0].warm_shards >= 1
+    assert warm[0].seconds < cold[0].seconds, \
+        f"warm {warm[0].seconds:.4f}s not faster than cold {cold[0].seconds:.4f}s"
+    for mode, (report, net) in results.items():
+        record(f"recovery/warm_vs_cold/{mode}", report.seconds * 1e6,
+               f"net_mb={net/1e6:.2f};warm_shards={report.warm_shards};"
+               f"warm_replicas={report.warm_replicas}",
+               recovery_s=report.seconds, net_bytes=net,
+               warm_shards=report.warm_shards,
+               warm_replicas=report.warm_replicas,
+               byte_identical=True)
+    gain = cold[0].seconds / max(warm[0].seconds, 1e-9)
+    record("recovery/warm_vs_cold/gain", warm[0].seconds * 1e6,
+           f"cold_over_warm={gain:.2f}x;warm_net_bytes={warm[1]}",
+           cold_over_warm=gain, warm_wins=bool(gain > 1.0))
+
+
+def run_overcap_scan() -> None:
+    """A dataset larger than the cluster's aggregate pool RAM written as a
+    write-through sharded set: its pages overflow into the durable page logs
+    (the long-lived tier, deliberately not pressure), and a full scan reads
+    back byte-identically — the monolithic pool degrades to disk instead of
+    failing."""
+    recs = _records(scaled(OVERCAP_N, floor=40_000), 13)
+    data_bytes = recs.nbytes
+    nodes = 4
+    # primaries + factor-1 replicas = 2x data across 4 nodes; cap each node
+    # well below its 2x-data/4 share so the aggregate arena cannot hold it
+    # (floor: a few pages of workspace so streaming writers can still pin)
+    capacity = max(4 << 16, data_bytes // 8)
+    cluster = Cluster(nodes, node_capacity=capacity, page_size=1 << 16,
+                      replication_factor=1,
+                      pagelog_dir=os.path.join(_pagelog_root(), "overcap"))
+    sset = cluster.create_sharded_set("lineitem", recs,
+                                      key_fn=lambda r: r["okey"])
+    import time
+    t0 = time.perf_counter()
+    back = cluster.read_sharded(sset)
+    scan_s = time.perf_counter() - t0
+    identical = bool(np.array_equal(
+        np.sort(recs, order=["okey", "pkey"])
+        .view(np.uint8).reshape(len(recs), -1),
+        np.sort(back, order=["okey", "pkey"])
+        .view(np.uint8).reshape(len(back), -1)))
+    assert identical
+    log_bytes = sum(node.memory.stats["log_bytes"]
+                    for node in cluster.nodes.values())
+    overcommit = (2 * data_bytes) / (nodes * capacity)
+    record("recovery/overcap_scan", scan_s * 1e6,
+           f"data_mb={data_bytes/1e6:.1f};overcommit={overcommit:.1f}x;"
+           f"log_mb={log_bytes/1e6:.1f};byte_identical={identical}",
+           scan_s=scan_s, data_bytes=data_bytes,
+           aggregate_capacity=nodes * capacity,
+           overcommit=overcommit, log_bytes=log_bytes,
+           byte_identical=identical)
+    cluster.shutdown()
 
 
 if __name__ == "__main__":

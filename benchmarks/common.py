@@ -15,7 +15,11 @@ from typing import Callable, Dict, List, Optional
 # v4: admission-control rows (shuffle/cluster*/admission*: admission-on vs
 # always-grant destination spill/faults, diversions, refused/throttled
 # counters, admission_wins) joined the cluster artifact
-SCHEMA_VERSION = 4
+# v5: durable-tier rows (recovery/warm_vs_cold/*: warm page-log recovery vs
+# cold replica pulls, recovery/overcap_scan: a scan over a set larger than
+# aggregate pool RAM completing byte-identically through the page log)
+# joined the cluster artifact
+SCHEMA_VERSION = 5
 
 ROWS: List[dict] = []
 

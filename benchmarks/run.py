@@ -17,6 +17,7 @@ import os
 import sys
 
 CLUSTER_PREFIXES = ["shuffle/cluster", "recovery/cluster", "recovery/degrade",
+                    "recovery/warm_vs_cold", "recovery/overcap_scan",
                     "join/cluster"]
 
 

@@ -10,11 +10,22 @@ double duty:
   single lost shard — or any set of shards from one layout — is recoverable
   without a full second copy of the same partitioning).
 
-Format: ``<dir>/step_<n>/<layout>/shard_<i>.npz`` + ``manifest.json`` with
-shapes/dtypes/crc32 per shard, plus a ``latest`` pointer written atomically.
+Two backends share the encode/verify/recover logic:
+
+* **File mode** (``CheckpointManager(directory)``): the original format —
+  ``<dir>/step_<n>/<layout>/shard_<i>.npz`` + ``manifest.json`` with
+  shapes/dtypes/crc32 per shard, plus a ``latest`` pointer written
+  atomically.
+* **Pool mode** (``CheckpointManager(cluster=...)``, PR 6): every blob is a
+  write-through locality set streamed through a node's buffer pool, so the
+  bytes land in that node's durable page log — checkpoints ride the same
+  storage tier as user data, survive a node restart, and warm-restore from
+  the replayed log without touching the network. Blob placement is recorded
+  in ``Cluster.durable_blobs`` so the revival fence keeps them.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
@@ -24,6 +35,8 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from ..core.services import user_data_attrs
 
 Pytree = Any
 
@@ -101,14 +114,31 @@ def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
+def _npz_bytes(tensors: Dict[str, np.ndarray]) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **tensors)
+    return buf.getvalue()
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, layouts: Sequence[str] = ("row",),
-                 num_shards: int = 4, keep: int = 3):
+    def __init__(self, directory: Optional[str] = None,
+                 layouts: Sequence[str] = ("row",),
+                 num_shards: int = 4, keep: int = 3,
+                 cluster=None, page_size: int = 1 << 16,
+                 prefix: str = "ckpt"):
+        if (directory is None) == (cluster is None):
+            raise ValueError(
+                "exactly one of directory= (file mode) or cluster= "
+                "(pool mode) must be given")
         self.dir = directory
+        self.cluster = cluster
+        self.page_size = page_size
+        self.prefix = prefix
         self.layouts = [LAYOUTS[l] for l in layouts]
         self.num_shards = num_shards
         self.keep = keep
-        os.makedirs(directory, exist_ok=True)
+        if directory is not None:
+            os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -136,19 +166,17 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
+    def _encode(self, step: int,
+                flat: Dict[str, np.ndarray]) -> Dict[str, bytes]:
+        """Shard the flattened state under every layout. Returns relative
+        blob name -> bytes, with ``manifest.json`` describing every shard's
+        shape/dtype/crc32 (both backends publish exactly these blobs)."""
         manifest: Dict[str, Any] = {"step": step, "layouts": {},
                                     "tensors": {k: {"shape": list(v.shape),
                                                     "dtype": str(v.dtype)}
                                                 for k, v in flat.items()}}
+        blobs: Dict[str, bytes] = {}
         for layout in self.layouts:
-            ldir = os.path.join(tmp, layout.name)
-            os.makedirs(ldir)
             shards: Dict[int, Dict[str, np.ndarray]] = {
                 i: {} for i in range(self.num_shards)}
             meta: Dict[str, Any] = {}
@@ -168,27 +196,126 @@ class CheckpointManager:
                     meta[key] = {"axis": placements[0][1][0], "crc": crcs,
                                  "bounds": [list(p[1][1:]) for p in placements]}
             for i, tensors in shards.items():
-                np.savez(os.path.join(ldir, f"shard_{i}.npz"), **tensors)
+                blobs[f"{layout.name}/shard_{i}.npz"] = _npz_bytes(tensors)
             manifest["layouts"][layout.name] = meta
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        blobs["manifest.json"] = json.dumps(manifest).encode()
+        return blobs
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        step_name = f"step_{step:08d}"
+        blobs = self._encode(step, flat)
+        if self.cluster is not None:
+            self._publish_pool(step_name, blobs)
+        else:
+            self._publish_files(step_name, blobs)
+        self._gc()
+
+    def _publish_files(self, step_name: str, blobs: Dict[str, bytes]) -> None:
+        final = os.path.join(self.dir, step_name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for rel, data in blobs.items():
+            path = os.path.join(tmp, rel)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "wb") as f:
+                f.write(data)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
         with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
-            f.write(os.path.basename(final))
+            f.write(step_name)
         os.replace(os.path.join(self.dir, "latest.tmp"),
                    os.path.join(self.dir, "latest"))
-        self._gc()
+
+    def _publish_pool(self, step_name: str, blobs: Dict[str, bytes]) -> None:
+        """Stream every blob through a node's buffer pool as a write-through
+        set (its pages persist into the node's durable page log on unpin —
+        paper §4's write-through, PR 6's tier). The manifest lands last as
+        the commit point; the latest pointer flips after it."""
+        shard_blobs = sorted(r for r in blobs if r != "manifest.json")
+        for rel in shard_blobs + ["manifest.json"]:
+            self._put_blob(f"{self.prefix}/{step_name}/{rel}", blobs[rel])
+        self._put_blob(f"{self.prefix}/latest", step_name.encode())
 
     def _gc(self) -> None:
-        steps = sorted(d for d in os.listdir(self.dir)
-                       if d.startswith("step_") and not d.endswith(".tmp"))
-        for d in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+        for name in self._list_steps()[:-self.keep]:
+            self._delete_step(name)
+
+    # ------------------------------------------------------- blob primitives
+    def _blob_names(self) -> List[str]:
+        return [n for n in self.cluster.durable_blobs
+                if n.startswith(f"{self.prefix}/")]
+
+    def _put_blob(self, name: str, data: bytes) -> None:
+        cluster = self.cluster
+        if name in cluster.durable_blobs:
+            self._del_blob(name)
+        alive = cluster.alive_node_ids()
+        node_id = alive[zlib.crc32(name.encode()) % len(alive)]
+        records = np.frombuffer(data, dtype=np.uint8)
+        cluster.nodes[node_id].write_records(
+            name, records, np.dtype(np.uint8), self.page_size,
+            user_data_attrs())
+        cluster.register_durable_blob(name, node_id)
+
+    def _get_blob(self, name: str) -> bytes:
+        loc = self.cluster.durable_blobs.get(name)
+        if loc is None:
+            raise FileNotFoundError(f"no blob {name!r}")
+        node = self.cluster.node(loc[0])  # DeadNodeError while it is down
+        pool = node.pool
+        if name not in pool.paging.sets:
+            # warm restore: the set is not registered in the fresh pool but
+            # its page images survive in the replayed durable log
+            log = pool.memory.pagelog
+            if log is None or not log.entries_for(name):
+                raise IOError(f"blob {name!r} lost with node {loc[0]}")
+            pool.adopt_durable_set(name, self.page_size, user_data_attrs())
+        return node.read_records(name, np.dtype(np.uint8)).tobytes()
+
+    def _del_blob(self, name: str) -> None:
+        loc = self.cluster.durable_blobs.get(name)
+        self.cluster.unregister_durable_blob(name)
+        if loc is None:
+            return
+        node = self.cluster.nodes[loc[0]]
+        if (node.alive and node.pool is not None
+                and name in node.pool.paging.sets):
+            node.pool.drop_set(node.pool.get_set(name))
+
+    def _read_rel(self, step_name: str, rel: str) -> bytes:
+        if self.cluster is not None:
+            return self._get_blob(f"{self.prefix}/{step_name}/{rel}")
+        with open(os.path.join(self.dir, step_name, rel), "rb") as f:
+            return f.read()
+
+    def _list_steps(self) -> List[str]:
+        if self.cluster is not None:
+            pre = f"{self.prefix}/"
+            return sorted({n[len(pre):].split("/")[0]
+                           for n in self._blob_names()
+                           if n[len(pre):].startswith("step_")})
+        return sorted(d for d in os.listdir(self.dir)
+                      if d.startswith("step_") and not d.endswith(".tmp"))
+
+    def _delete_step(self, step_name: str) -> None:
+        if self.cluster is not None:
+            pre = f"{self.prefix}/{step_name}/"
+            for name in [n for n in self._blob_names()
+                         if n.startswith(pre)]:
+                self._del_blob(name)
+            return
+        shutil.rmtree(os.path.join(self.dir, step_name), ignore_errors=True)
 
     # --------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
+        if self.cluster is not None:
+            if f"{self.prefix}/latest" not in self.cluster.durable_blobs:
+                return None
+            pointer = self._get_blob(f"{self.prefix}/latest").decode()
+            return int(pointer.strip().split("_")[1])
         p = os.path.join(self.dir, "latest")
         if not os.path.exists(p):
             return None
@@ -200,33 +327,34 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no checkpoint found")
-        cdir = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(cdir, "manifest.json")) as f:
-            manifest = json.load(f)
+        step_name = f"step_{step:08d}"
+        manifest = json.loads(self._read_rel(step_name, "manifest.json"))
         names = ([layout] if layout else list(manifest["layouts"]))
         last_err: Optional[BaseException] = None
         for name in names:
             try:
-                flat = self._read_layout(cdir, manifest, name)
+                flat = self._read_layout(step_name, manifest, name)
                 return _unflatten_into(template, flat)
             except Exception as e:  # noqa: BLE001 — fall through to next layout
                 last_err = e
         # single layouts failed wholesale; try cross-layout recovery
-        flat = self.recover(cdir, manifest)
+        flat = self.recover(step_name, manifest)
         if flat is not None:
             return _unflatten_into(template, flat)
         raise IOError(
             f"checkpoint step {step} unrecoverable from any layout "
             f"(last error: {last_err!r})")
 
-    def _read_layout(self, cdir: str, manifest: Dict, name: str,
+    def _load_shard(self, step_name: str, layout: str,
+                    shard: int) -> Dict[str, np.ndarray]:
+        data = self._read_rel(step_name, f"{layout}/shard_{shard}.npz")
+        return dict(np.load(io.BytesIO(data)))
+
+    def _read_layout(self, step_name: str, manifest: Dict, name: str,
                      verify: bool = True) -> Dict[str, np.ndarray]:
-        ldir = os.path.join(cdir, name)
         meta = manifest["layouts"][name]
-        shard_data = []
-        for i in range(self.num_shards):
-            shard_data.append(dict(np.load(
-                os.path.join(ldir, f"shard_{i}.npz"))))
+        shard_data = [self._load_shard(step_name, name, i)
+                      for i in range(self.num_shards)]
         out: Dict[str, np.ndarray] = {}
         for key, info in meta.items():
             if info.get("replicated"):
@@ -245,14 +373,15 @@ class CheckpointManager:
         return out
 
     # -------------------------------------------------------------- recovery
-    def recover(self, cdir: str, manifest: Dict) -> Optional[Dict[str, np.ndarray]]:
+    def recover(self, step_name: str,
+                manifest: Dict) -> Optional[Dict[str, np.ndarray]]:
         """Rebuild tensors, taking each one from whichever layout still has a
         valid copy (paper-§7 recovery across heterogeneous replicas: a lost
         row-shard is reassembled from the column-partitioned replica)."""
         flats = {}
         for name in manifest["layouts"]:
             try:
-                flats[name] = self._read_layout(cdir, manifest, name)
+                flats[name] = self._read_layout(step_name, manifest, name)
             except Exception:  # noqa: BLE001
                 flats[name] = None
         good = [f for f in flats.values() if f is not None]
@@ -264,7 +393,7 @@ class CheckpointManager:
             rebuilt = None
             for name in manifest["layouts"]:
                 try:
-                    part = self._read_single(cdir, manifest, name, key)
+                    part = self._read_single(step_name, manifest, name, key)
                     rebuilt = part
                     break
                 except Exception:  # noqa: BLE001
@@ -274,25 +403,30 @@ class CheckpointManager:
             out[key] = rebuilt
         return out
 
-    def _read_single(self, cdir: str, manifest: Dict, name: str,
+    def _read_single(self, step_name: str, manifest: Dict, name: str,
                      key: str) -> np.ndarray:
         meta = manifest["layouts"][name][key]
-        ldir = os.path.join(cdir, name)
         if meta.get("replicated"):
-            arr = dict(np.load(os.path.join(ldir, "shard_0.npz")))[key]
+            arr = self._load_shard(step_name, name, 0)[key]
             if _crc(arr) != meta["crc"][0]:
                 raise IOError("crc")
             return arr
         pieces = []
         for i in range(self.num_shards):
-            piece = dict(np.load(os.path.join(ldir, f"shard_{i}.npz")))[key]
+            piece = self._load_shard(step_name, name, i)[key]
             if _crc(piece) != meta["crc"][i]:
                 raise IOError("crc")
             pieces.append(piece)
         return np.concatenate(pieces, axis=meta["axis"])
 
     def damage_shard(self, step: int, layout: str, shard: int) -> None:
-        """Test hook: simulate a lost/corrupt shard file."""
+        """Test hook: simulate a lost/corrupt shard (file or blob)."""
+        if self.cluster is not None:
+            name = (f"{self.prefix}/step_{step:08d}/{layout}/"
+                    f"shard_{shard}.npz")
+            self._del_blob(name)
+            self._put_blob(name, b"corrupt")
+            return
         p = os.path.join(self.dir, f"step_{step:08d}", layout,
                          f"shard_{shard}.npz")
         with open(p, "wb") as f:

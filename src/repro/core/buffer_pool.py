@@ -45,13 +45,14 @@ class BufferPool:
     def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
                  policy: str = "data-aware",
                  memory: Optional[MemoryManager] = None,
-                 pressure_watermark: float = 0.85):
+                 pressure_watermark: float = 0.85,
+                 pagelog=None):
         self.capacity = capacity
         self.arena = np.zeros(capacity, dtype=np.uint8)
         self.tlsf = TLSF(capacity)
         self.memory = memory or MemoryManager(
             capacity, spill_store, policy,
-            pressure_watermark=pressure_watermark)
+            pressure_watermark=pressure_watermark, pagelog=pagelog)
         self.clock = 1  # logical time (paper: AccessRecency integers)
         self._pages: Dict[int, Page] = {}
         self._next_page_id = 0
@@ -93,9 +94,15 @@ class BufferPool:
             if new_name in self.paging.sets:
                 raise ValueError(f"locality set {new_name!r} already exists")
             self.paging.unregister(ls.name)
+            old_name = ls.name
             ls.name = new_name
             for page in ls.pages.values():
                 page.set_name = new_name
+            if (self.memory.pagelog is not None
+                    and any(p.durable for p in ls.pages.values())):
+                # re-key the durable images too (O(1) rename record): replay
+                # must find them under the name the catalog will ask for
+                self.memory.pagelog.rename_set(old_name, new_name)
             self.paging.register(ls, self.clock)
             return ls
 
@@ -103,6 +110,7 @@ class BufferPool:
         """Free every page (lifetime over, data discarded) — including any
         spill images, which otherwise leak in the spill store."""
         with self._lock:
+            any_durable = False
             for page in list(ls.pages.values()):
                 if page.pinned:  # dropped out from under a holder
                     self.memory.note_unpinned(page.size)
@@ -113,12 +121,68 @@ class BufferPool:
                     self.memory.note_free(page.size)
                     page.offset = None
                 if page.spilled:
-                    self.memory.discard_spilled(page.page_id, page.size,
-                                                paged_out)
+                    if page.durable:
+                        any_durable = True
+                        self.memory.discard_durable(page.size, paged_out)
+                    else:
+                        self.memory.discard_spilled(page.page_id, page.size,
+                                                    paged_out)
                     page.spilled = False
                 self._pages.pop(page.page_id, None)
             ls.pages.clear()
             self.paging.unregister(ls.name)
+            if any_durable:
+                # one set-level tombstone cuts every log entry (append-only
+                # log: per-page deletes don't exist); replay will not
+                # resurrect the dropped set
+                self.memory.pagelog.drop_set(ls.name)
+
+    # -- warm start from the durable tier -----------------------------------------
+    def adopt_durable_set(self, name: str, page_size: int,
+                          attrs: Optional[AttributeSet] = None) -> LocalitySet:
+        """Re-register a set whose page images live in the durable log (the
+        warm-start path): every live log entry becomes a non-resident page
+        that faults back in on first pin. No bytes are read here — adoption
+        is O(index), which is what makes a warm restart cheap."""
+        with self._lock:
+            log = self.memory.pagelog
+            if log is None:
+                raise ValueError("pool has no durable page log to adopt from")
+            entries = log.entries_for(name)
+            if not entries:
+                raise KeyError(f"page log holds no entries for {name!r}")
+            if attrs is None:
+                attrs = AttributeSet(durability=DurabilityType.WRITE_THROUGH)
+            ls = self.create_set(name, page_size, attrs)
+            for e in entries:
+                page = Page(page_id=self._next_page_id, set_name=name,
+                            size=e.length, offset=None, pin_count=0,
+                            dirty=False, spilled=True,
+                            last_access=self._tick(),
+                            durable=True, log_seq=e.seq)
+                self._next_page_id += 1
+                ls.pages[page.page_id] = page
+                self._pages[page.page_id] = page
+                self.memory.note_durable_out(e.length)
+            return ls
+
+    def warm_start(self, page_size: int,
+                   attrs_factory=None) -> List[str]:
+        """Adopt every set the durable log replayed (standalone-pool warm
+        restart, e.g. a pool-backed checkpoint store; the cluster path
+        adopts per shard after epoch fencing instead). Returns the adopted
+        set names."""
+        adopted: List[str] = []
+        log = self.memory.pagelog
+        if log is None:
+            return adopted
+        for name in log.set_names():
+            if name in self.paging.sets:
+                continue
+            attrs = attrs_factory() if attrs_factory is not None else None
+            self.adopt_durable_set(name, page_size, attrs)
+            adopted.append(name)
+        return adopted
 
     # -- page operations ----------------------------------------------------------
     def _tick(self) -> int:
@@ -156,11 +220,17 @@ class BufferPool:
                 page.offset = offset
                 self.memory.note_alloc(page.size)
                 if page.spilled:
-                    data = np.frombuffer(self.spill.read(page.page_id), dtype=np.uint8)
+                    raw = (self.memory.pagelog_read(ls.name, page.log_seq)
+                           if page.durable
+                           else self.spill.read(page.page_id))
+                    data = np.frombuffer(raw, dtype=np.uint8)
                     self.arena[offset:offset + page.size] = data
                     ls.stats["fetch_bytes"] += page.size
                     self.memory.note_fetched(page.size)
-                    self.memory.note_paged_in(page.size)
+                    if page.durable:
+                        self.memory.note_durable_in(page.size)
+                    else:
+                        self.memory.note_paged_in(page.size)
                 page.dirty = False
             if page.pin_count == 0:
                 self.memory.note_pinned(page.size)
@@ -207,7 +277,13 @@ class BufferPool:
 
     def _spill_page(self, ls: LocalitySet, page: Page) -> None:
         data = self.arena[page.offset:page.offset + page.size].tobytes()
-        self.spill.write(page.page_id, data)
+        if self.memory.durable_route(ls):
+            # write-through sets persist into the durable page log, the tier
+            # below scratch spill: the image survives node death and a
+            # restarted node warm-starts from it
+            self.memory.pagelog_write(ls.name, page, data)
+        else:
+            self.spill.write(page.page_id, data)
         page.spilled = True
         ls.stats["spill_bytes"] += page.size
         self.memory.note_spilled(page.size)
@@ -225,13 +301,17 @@ class BufferPool:
         if ls.attrs.lifetime == Lifetime.ENDED:
             # data will never be read again; drop any spill image too (it
             # was a copy of a resident page, so it never counted as paged out)
-            if page.spilled:
+            if page.spilled and not page.durable:
                 self.memory.discard_spilled(page.page_id, page.size,
                                             paged_out=False)
                 page.spilled = False
         elif page.spilled:
-            # the page's only live copy is now on "disk": that is pressure
-            self.memory.note_paged_out(page.size)
+            if page.durable:
+                # only copy is the durable log — its home tier, not pressure
+                self.memory.note_durable_out(page.size)
+            else:
+                # the page's only live copy is now on "disk": that is pressure
+                self.memory.note_paged_out(page.size)
 
     # -- iteration helper (sequential-read service uses this) ----------------------
     def iter_pages(self, ls: LocalitySet) -> Iterator[Page]:

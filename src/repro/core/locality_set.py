@@ -33,6 +33,8 @@ class Page:
     dirty: bool = False
     spilled: bool = False               # has an image in the spill store
     last_access: int = 0                # logical clock of last pin
+    durable: bool = False               # backing image lives in the page log
+    log_seq: int = -1                   # page-log sequence within its set
 
     @property
     def resident(self) -> bool:

@@ -32,6 +32,8 @@ import os
 import threading
 from typing import Dict, Optional, Set
 
+from .attributes import DurabilityType
+from .pagelog import PageLog
 from .paging import PagingSystem
 
 # smallest staging budget a node will advertise: tiny pools (unit tests,
@@ -170,6 +172,7 @@ class AdmissionController:
         self.refused = 0      # asks denied past their deadline
         self.throttled = 0    # asks that waited before being granted
         self.forced = 0       # urgency="required" grants past the deadline
+        self.waiting = 0      # asks currently parked on the condition var
 
     # both predicates assume the manager's lock is held
     def _staging_headroom(self, nbytes: int) -> bool:
@@ -210,9 +213,13 @@ class AdmissionController:
             if not self._staging_headroom(nbytes):
                 granted = False
                 if urgency != "low" and timeout > 0:
-                    granted = self._cv.wait_for(
-                        lambda: self._staging_headroom(nbytes),
-                        timeout=timeout)
+                    self.waiting += 1
+                    try:
+                        granted = self._cv.wait_for(
+                            lambda: self._staging_headroom(nbytes),
+                            timeout=timeout)
+                    finally:
+                        self.waiting -= 1
                 if granted:
                     self.throttled += 1
                 else:
@@ -258,9 +265,13 @@ class MemoryManager:
     def __init__(self, capacity: int, spill_store: Optional[SpillStore] = None,
                  policy: str = "data-aware",
                  pressure_watermark: float = 0.85,
-                 admission_cap: Optional[int] = None):
+                 admission_cap: Optional[int] = None,
+                 pagelog: Optional[PageLog] = None):
         self.capacity = capacity
         self.spill = spill_store or SpillStore()
+        # the durable tier beneath the scratch spill store: write-through
+        # sets page against it instead, and it survives node death
+        self.pagelog = pagelog
         self.paging = PagingSystem(policy)
         self.pressure_watermark = pressure_watermark
         self._lock = threading.RLock()
@@ -271,13 +282,19 @@ class MemoryManager:
         # bytes paged OUT: spilled AND not resident (a write-through
         # durability copy of a resident page is not pressure)
         self.spilled_bytes = 0
+        # bytes whose only live copy is the durable page log. NOT pressure:
+        # the log is long-lived data's home tier, not an eviction overflow —
+        # a node serving a larger-than-RAM set from its log must keep
+        # attracting placement, which ``spilled_bytes`` would repel
+        self.durable_bytes = 0
         self.reserved_bytes = 0    # out-of-arena staging charged via reserve()
         # high-water marks
         self.resident_hwm = 0
         self.pinned_hwm = 0
         self.reserved_hwm = 0
         self.stats: Dict[str, int] = {"evictions": 0, "spill_bytes": 0,
-                                      "fetch_bytes": 0, "alloc_retries": 0}
+                                      "fetch_bytes": 0, "alloc_retries": 0,
+                                      "log_bytes": 0, "log_fetch_bytes": 0}
 
     @property
     def policy(self) -> str:
@@ -336,6 +353,50 @@ class MemoryManager:
             self.spill.delete(page_id)
             if paged_out:
                 self.spilled_bytes -= nbytes
+
+    # -- durable tier (page log) ----------------------------------------------
+    def durable_route(self, ls) -> bool:
+        """Whether a set's persisted images belong in the page log instead of
+        the scratch spill store: write-through durability (long-lived user
+        data, paper §4) on a node that has a durable tier configured."""
+        return (self.pagelog is not None
+                and ls.attrs.durability == DurabilityType.WRITE_THROUGH)
+
+    def pagelog_write(self, set_name: str, page, data: bytes) -> None:
+        """Persist one page image into the durable log, keyed
+        ``(set, page.log_seq)``; first write allocates the set's next
+        sequence number, rewrites supersede in place (append-only)."""
+        with self._lock:
+            entry = self.pagelog.append(
+                set_name, data, seq=page.log_seq if page.log_seq >= 0 else None)
+            page.log_seq = entry.seq
+            page.durable = True
+            self.stats["log_bytes"] += len(data)
+
+    def pagelog_read(self, set_name: str, seq: int) -> bytes:
+        data = self.pagelog.read(set_name, seq)
+        with self._lock:
+            self.stats["log_fetch_bytes"] += len(data)
+        return data
+
+    def note_durable_out(self, nbytes: int) -> None:
+        """A page's only live copy is now the durable log (evicted clean, or
+        adopted non-resident at warm start)."""
+        with self._lock:
+            self.durable_bytes += nbytes
+
+    def note_durable_in(self, nbytes: int) -> None:
+        """A log-backed page was faulted back into the arena."""
+        with self._lock:
+            self.durable_bytes -= nbytes
+            self.admission._notify()
+
+    def discard_durable(self, nbytes: int, paged_out: bool) -> None:
+        """Account a dropped durable page; the log itself is append-only, so
+        the set-level tombstone (``PageLog.drop_set``) is the actual cut."""
+        with self._lock:
+            if paged_out:
+                self.durable_bytes -= nbytes
 
     # -- backpressure / admission ---------------------------------------------
     def reserve(self, nbytes: int) -> MemoryReservation:
@@ -418,6 +479,7 @@ class MemoryManager:
                 "resident": self.resident_bytes,
                 "pinned": self.pinned_bytes,
                 "spilled": self.spilled_bytes,
+                "durable": self.durable_bytes,
                 "reserved": self.reserved_bytes,
                 "resident_hwm": self.resident_hwm,
                 "pinned_hwm": self.pinned_hwm,
@@ -428,13 +490,21 @@ class MemoryManager:
                 "refused": self.admission.refused,
                 "throttled": self.admission.throttled,
                 "forced": self.admission.forced,
+                "waiting": self.admission.waiting,
                 **self.stats,
             }
 
     def close(self) -> None:
-        """Tear the node's secondary storage down with it (a dead machine's
-        local disk is gone): every spill image this manager wrote is deleted,
-        so killed/replaced nodes don't leak spill files."""
+        """Tear the node's SCRATCH storage down with it: every spill image
+        this manager wrote is deleted, so killed/replaced nodes don't leak
+        spill files. The durable page log is deliberately NOT wiped — its
+        files surviving the process is the entire point of the tier; only
+        its handles are closed. (A cold restart that really lost the disk is
+        modeled by ``Cluster.revive_node(warm=False)``, which removes the
+        log directory before reopening.)"""
         with self._lock:
             self.spill.clear()
             self.spilled_bytes = 0
+            self.durable_bytes = 0
+            if self.pagelog is not None:
+                self.pagelog.close()

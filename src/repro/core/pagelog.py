@@ -1,0 +1,357 @@
+"""Durable per-node page tier — append-only page log + consistent-hash index.
+
+The ``SpillStore`` is scratch: it exists to absorb eviction bursts and dies
+with its node. This module adds the tier *below* it, the one Pangea's
+"monolithic storage for all data" thesis actually needs for long-lived sets:
+
+* an **append-only page log** (``pages.log`` in the node's durable
+  directory) — every write-through page image is appended as a checksummed
+  record ``[magic | crc32 | epoch | seq | name_len | payload_len | flags |
+  set name | payload]``. Appends never seek; a page rewritten later simply
+  appends a superseding record for the same ``(set, seq)`` key;
+* a **consistent-hash page index** — live entries are bucketed by hashing
+  the owning set's name onto a virtual-node ring, so the index can grow its
+  bucket count (or, later, split across index files) while relocating only
+  the sets whose ring interval moved. Lookup is ``(set name, page seq) ->
+  (file offset, length, epoch, payload crc)``;
+* **epoch stamping** — every record carries the cluster's topology/job event
+  counter (``StatisticsDB.event_seq`` via ``epoch_fn``) at append time.
+  Replay after a restart compares a set's newest log epoch against the
+  catalog's shard epoch and *fences* stale state: entries logged before a
+  shard was dropped or rebuilt elsewhere must not resurrect;
+* **torn-tail truncation** — replay walks the log verifying each record's
+  CRC32; the first short or corrupt record marks a tail torn by a crash
+  mid-append, and the file is truncated back to the last good record.
+
+A restarted ``StorageNode`` warm-starts by replaying its local index
+(``PageLog.__init__`` does the replay; ``BufferPool.adopt_durable_set``
+turns live entries back into non-resident pages that fault in on demand),
+and ``scheduler.recovery_plan`` costs "read the local page log" against
+"pull replica bytes over the wire".
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import os
+import struct
+import threading
+import zlib
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+MAGIC = 0x50474C31  # "PGL1"
+# magic u32 | crc u32 | epoch i64 | seq i64 | name_len u16 | payload_len u32
+# | flags u8 — crc covers everything after itself (tail + name + payload)
+_HEADER = struct.Struct("<IIqqHIB")
+_TAIL = struct.Struct("<qqHIB")
+
+FLAG_DATA = 0
+FLAG_TOMBSTONE = 1   # drops every prior entry of the named set
+FLAG_RENAME = 2      # payload = old set name; entries move to the new name
+
+LOG_FILENAME = "pages.log"
+
+
+def _hash64(key: str) -> int:
+    return int.from_bytes(
+        hashlib.blake2b(key.encode("utf-8"), digest_size=8).digest(), "little")
+
+
+@dataclass
+class PageLogEntry:
+    """One live page image in the log: where it sits and how to verify it."""
+
+    name: str
+    seq: int
+    epoch: int
+    offset: int          # file offset of the payload bytes
+    length: int
+    payload_crc: int
+
+
+class ConsistentHashIndex:
+    """The page index: live entries bucketed by consistent-hashing the set
+    name onto a virtual-node ring. All of one set's pages share a bucket, so
+    set-granular operations (drop, rename, epoch query) touch one bucket,
+    and growing the bucket count relocates only the sets whose ring interval
+    moved — the property a future multi-file index needs."""
+
+    def __init__(self, num_buckets: int = 16, vnodes: int = 8):
+        self.num_buckets = num_buckets
+        ring: List[Tuple[int, int]] = []
+        for b in range(num_buckets):
+            for v in range(vnodes):
+                ring.append((_hash64(f"bucket{b}#vnode{v}"), b))
+        ring.sort()
+        self._points = [p for p, _ in ring]
+        self._owners = [b for _, b in ring]
+        self._buckets: List[Dict[Tuple[str, int], PageLogEntry]] = [
+            {} for _ in range(num_buckets)]
+
+    def bucket_of(self, name: str) -> int:
+        i = bisect.bisect_right(self._points, _hash64(name))
+        return self._owners[i % len(self._owners)]
+
+    def put(self, entry: PageLogEntry) -> None:
+        bucket = self._buckets[self.bucket_of(entry.name)]
+        bucket[(entry.name, entry.seq)] = entry
+
+    def get(self, name: str, seq: int) -> Optional[PageLogEntry]:
+        return self._buckets[self.bucket_of(name)].get((name, seq))
+
+    def entries_for(self, name: str) -> List[PageLogEntry]:
+        bucket = self._buckets[self.bucket_of(name)]
+        return sorted((e for (n, _), e in bucket.items() if n == name),
+                      key=lambda e: e.seq)
+
+    def drop_set(self, name: str) -> int:
+        bucket = self._buckets[self.bucket_of(name)]
+        victims = [k for k in bucket if k[0] == name]
+        for k in victims:
+            del bucket[k]
+        return len(victims)
+
+    def rename_set(self, old: str, new: str) -> int:
+        entries = self.entries_for(old)
+        self.drop_set(old)
+        for e in entries:
+            e.name = new
+            self.put(e)
+        return len(entries)
+
+    def set_names(self) -> List[str]:
+        names = {n for bucket in self._buckets for (n, _) in bucket}
+        return sorted(names)
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._buckets)
+
+
+class PageLog:
+    """One node's durable page tier. Thread-safe (engine workers append
+    concurrently with pool faults). Construction replays the on-disk log
+    into the index, truncating any torn tail, so a freshly opened PageLog
+    *is* the warm-start state."""
+
+    def __init__(self, directory: str,
+                 epoch_fn: Optional[Callable[[], int]] = None,
+                 index_buckets: int = 16):
+        self.directory = directory
+        self.epoch_fn = epoch_fn
+        os.makedirs(directory, exist_ok=True)
+        self.path = os.path.join(directory, LOG_FILENAME)
+        self.index = ConsistentHashIndex(index_buckets)
+        self._lock = threading.RLock()
+        self._append_fh = None
+        self._read_fh = None
+        self._next_seq: Dict[str, int] = {}
+        self.bytes_appended = 0
+        self.report: Dict[str, int] = {}
+        self._replay()
+
+    # -- replay / torn-tail truncation ----------------------------------------
+    def _replay(self) -> None:
+        report = {"records": 0, "data": 0, "tombstones": 0, "renames": 0,
+                  "truncated_bytes": 0, "crc_failures": 0}
+        if os.path.exists(self.path):
+            good_end, records = scan_log(self.path, self.index, report)
+            file_len = os.path.getsize(self.path)
+            if good_end < file_len:
+                # torn tail: a crash mid-append left a short or corrupt
+                # record; everything before it is intact, so cut there
+                report["truncated_bytes"] = file_len - good_end
+                with open(self.path, "r+b") as f:
+                    f.truncate(good_end)
+            for name in self.index.set_names():
+                entries = self.index.entries_for(name)
+                self._next_seq[name] = entries[-1].seq + 1 if entries else 0
+        report["live_entries"] = len(self.index)
+        report["live_sets"] = len(self.index.set_names())
+        self.report = report
+
+    # -- write path ------------------------------------------------------------
+    def _epoch(self) -> int:
+        return self.epoch_fn() if self.epoch_fn is not None else 0
+
+    def _append_record(self, name: str, payload: bytes, seq: int,
+                       flags: int) -> int:
+        """Append one record; returns the payload's file offset."""
+        nb = name.encode("utf-8")
+        epoch = self._epoch()
+        tail = _TAIL.pack(epoch, seq, len(nb), len(payload), flags)
+        crc = zlib.crc32(tail)
+        crc = zlib.crc32(nb, crc)
+        crc = zlib.crc32(payload, crc) & 0xFFFFFFFF
+        header = struct.pack("<II", MAGIC, crc) + tail
+        if self._append_fh is None:
+            self._append_fh = open(self.path, "ab")
+        fh = self._append_fh
+        start = fh.tell()
+        fh.write(header)
+        fh.write(nb)
+        fh.write(payload)
+        fh.flush()
+        self.bytes_appended += _HEADER.size + len(nb) + len(payload)
+        return start + _HEADER.size + len(nb), epoch
+
+    def next_seq(self, name: str) -> int:
+        with self._lock:
+            return self._next_seq.get(name, 0)
+
+    def append(self, name: str, payload: bytes,
+               seq: Optional[int] = None) -> PageLogEntry:
+        """Append one page image for ``(name, seq)``. Re-appending an
+        existing seq supersedes the prior image (the index keeps only the
+        newest); seq=None allocates the set's next sequence number."""
+        with self._lock:
+            if seq is None:
+                seq = self._next_seq.get(name, 0)
+            offset, epoch = self._append_record(name, payload, seq, FLAG_DATA)
+            self._next_seq[name] = max(self._next_seq.get(name, 0), seq + 1)
+            entry = PageLogEntry(name=name, seq=seq, epoch=epoch,
+                                 offset=offset, length=len(payload),
+                                 payload_crc=zlib.crc32(payload) & 0xFFFFFFFF)
+            self.index.put(entry)
+            return entry
+
+    def drop_set(self, name: str) -> None:
+        """Tombstone a set: replay will not resurrect its entries."""
+        with self._lock:
+            if not self.index.entries_for(name):
+                return  # never logged (or already tombstoned): nothing to cut
+            self._append_record(name, b"", 0, FLAG_TOMBSTONE)
+            self.index.drop_set(name)
+            self._next_seq.pop(name, None)
+
+    def rename_set(self, old: str, new: str) -> None:
+        """Re-key a set's entries in O(1) log bytes: a rename record whose
+        payload is the old name; data records are not rewritten."""
+        with self._lock:
+            if not self.index.entries_for(old):
+                return
+            self._append_record(new, old.encode("utf-8"), 0, FLAG_RENAME)
+            self.index.rename_set(old, new)
+            self._next_seq[new] = self._next_seq.pop(old, 0)
+
+    # -- read path ---------------------------------------------------------------
+    def read(self, name: str, seq: int) -> bytes:
+        """Read and CRC-verify one live page image."""
+        with self._lock:
+            entry = self.index.get(name, seq)
+            if entry is None:
+                raise KeyError(f"page log has no entry for {name!r} seq {seq}")
+            if self._read_fh is None:
+                self._read_fh = open(self.path, "rb")
+            self._read_fh.seek(entry.offset)
+            payload = self._read_fh.read(entry.length)
+        if (len(payload) != entry.length
+                or zlib.crc32(payload) & 0xFFFFFFFF != entry.payload_crc):
+            raise IOError(
+                f"page log corruption: {name!r} seq {seq} failed CRC")
+        return payload
+
+    def entries_for(self, name: str) -> List[PageLogEntry]:
+        with self._lock:
+            return self.index.entries_for(name)
+
+    def set_names(self) -> List[str]:
+        with self._lock:
+            return self.index.set_names()
+
+    def set_epoch(self, name: str) -> int:
+        """Newest epoch across a set's live entries (-1 when absent) — what
+        replay fencing compares against the catalog's shard epoch."""
+        with self._lock:
+            entries = self.index.entries_for(name)
+            return max((e.epoch for e in entries), default=-1)
+
+    def set_bytes(self, name: str) -> int:
+        with self._lock:
+            return sum(e.length for e in self.index.entries_for(name))
+
+    def close(self) -> None:
+        """Close file handles; the log FILES stay — that is the point of the
+        durable tier (``SpillStore.clear`` has no analogue here)."""
+        with self._lock:
+            if self._append_fh is not None:
+                self._append_fh.close()
+                self._append_fh = None
+            if self._read_fh is not None:
+                self._read_fh.close()
+                self._read_fh = None
+
+
+def scan_log(path: str, index: Optional[ConsistentHashIndex],
+             report: Dict[str, int]) -> Tuple[int, int]:
+    """Walk one log file record by record, CRC-verifying each; optionally
+    applying data/tombstone/rename records to ``index``. Returns
+    ``(offset_after_last_good_record, records_seen)``. Shared by replay
+    (which then truncates the torn tail) and ``fsck`` (read-only)."""
+    good_end = 0
+    records = 0
+    with open(path, "rb") as f:
+        data = f.read()
+    pos = 0
+    while pos + _HEADER.size <= len(data):
+        magic, crc, epoch, seq, name_len, payload_len, flags = \
+            _HEADER.unpack_from(data, pos)
+        if magic != MAGIC:
+            report["crc_failures"] = report.get("crc_failures", 0) + 1
+            break
+        end = pos + _HEADER.size + name_len + payload_len
+        if end > len(data):
+            break  # short record: torn tail
+        body = data[pos + 8:end]  # everything the crc covers
+        if zlib.crc32(body) & 0xFFFFFFFF != crc:
+            report["crc_failures"] = report.get("crc_failures", 0) + 1
+            break
+        name = data[pos + _HEADER.size:
+                    pos + _HEADER.size + name_len].decode("utf-8")
+        payload_off = pos + _HEADER.size + name_len
+        records += 1
+        report["records"] = report.get("records", 0) + 1
+        if flags == FLAG_TOMBSTONE:
+            report["tombstones"] = report.get("tombstones", 0) + 1
+            if index is not None:
+                index.drop_set(name)
+        elif flags == FLAG_RENAME:
+            report["renames"] = report.get("renames", 0) + 1
+            if index is not None:
+                old = data[payload_off:payload_off + payload_len].decode(
+                    "utf-8")
+                index.rename_set(old, name)
+        else:
+            report["data"] = report.get("data", 0) + 1
+            if index is not None:
+                payload = data[payload_off:payload_off + payload_len]
+                index.put(PageLogEntry(
+                    name=name, seq=seq, epoch=epoch, offset=payload_off,
+                    length=payload_len,
+                    payload_crc=zlib.crc32(payload) & 0xFFFFFFFF))
+        pos = end
+        good_end = pos
+    return good_end, records
+
+
+def fsck(directory: str) -> Dict[str, object]:
+    """Read-only health check of one page-log directory (``tools/
+    pagelog_fsck.py`` is the CLI). Reports record counts, live sets after
+    applying tombstones/renames, and any torn tail — without truncating."""
+    path = os.path.join(directory, LOG_FILENAME)
+    out: Dict[str, object] = {"directory": directory, "exists": False}
+    if not os.path.exists(path):
+        return out
+    report: Dict[str, int] = {}
+    index = ConsistentHashIndex()
+    good_end, _records = scan_log(path, index, report)
+    file_len = os.path.getsize(path)
+    out.update(report)
+    out["exists"] = True
+    out["file_bytes"] = file_len
+    out["torn_tail_bytes"] = file_len - good_end
+    out["live_entries"] = len(index)
+    out["live_sets"] = index.set_names()
+    out["clean"] = (good_end == file_len
+                    and report.get("crc_failures", 0) == 0)
+    return out

@@ -41,6 +41,16 @@ def job_data_attrs() -> AttributeSet:
                         writing=WritingPattern.CONCURRENT_WRITE)
 
 
+def user_data_attrs() -> AttributeSet:
+    """Attribute preset for long-lived user data (paper §3.1/§4):
+    write-through durability — every written page is persisted at unpin, and
+    on a node with a durable page log the images land there, so the set
+    pages against disk as its working set exceeds the pool and survives a
+    node restart (warm recovery)."""
+    return AttributeSet(durability=DurabilityType.WRITE_THROUGH,
+                        writing=WritingPattern.SEQUENTIAL_WRITE)
+
+
 def as_record_bytes(records: np.ndarray, dtype: np.dtype) -> np.ndarray:
     """[N, ...] records -> [N, itemsize] uint8 rows (handles structured AND
     subarray dtypes, e.g. one token sequence per record)."""

@@ -87,6 +87,14 @@ class StatisticsDB:
     def event_seq(self) -> int:
         return self._event_seq
 
+    def current_epoch(self) -> int:
+        """Bound-method form of ``event_seq`` — handed to each node's page
+        log as its ``epoch_fn``, so every durable log record is stamped with
+        the topology/job event counter and replay can be fenced against the
+        catalog (stale entries from before a drop/rebuild must not
+        resurrect)."""
+        return self._event_seq
+
     # -- per-node memory pressure (scheduler placement penalty) ----------------
     def record_node_pressure(self, node: int, score: float) -> None:
         self._node_pressure[node] = (max(0.0, min(1.0, float(score))),

@@ -42,6 +42,8 @@ with byte accounting standing in for the wire.
 """
 from __future__ import annotations
 
+import os
+import shutil
 import threading
 import time
 import zlib
@@ -54,14 +56,16 @@ from ..core.attributes import AttributeSet
 from ..core.buffer_pool import BufferPool, SpillStore
 from ..core.locality_set import LocalitySet
 from ..core.memory_manager import MemoryManager, derive_staging_cap
+from ..core.pagelog import PageLog
 from ..core.replication import (DistributedSet, PartitionScheme,
                                 ReplicaRegistration,
                                 combine_content_checksums,
                                 record_content_checksum,
                                 recover_target_shard, replica_nodes,
                                 shard_checksum)
-from ..core.services import (HashService, PageIterator, SequentialWriter,
-                             ShuffleService, job_data_attrs, read_all)
+from ..core.services import (_HEADER, HashService, PageIterator,
+                             SequentialWriter, ShuffleService,
+                             job_data_attrs, read_all, user_data_attrs)
 from ..core.statistics import ReplicaInfo, StatisticsDB
 from .elastic import plan_remesh, remesh_partition_plan, surviving_node_ids
 from .scheduler import ClusterScheduler
@@ -107,17 +111,41 @@ class StorageNode:
     """One Pangea storage service: a unified buffer pool plus its memory
     manager (paper §2 — every node runs one storage process owning all its
     data). ``node.memory`` is the runtime's window into the node's eviction
-    policy, spill store, and pressure accounting."""
+    policy, spill store, and pressure accounting. With a ``pagelog_dir`` the
+    node also owns a durable page log — the tier below scratch spill that
+    write-through sets page against and that survives the node's death."""
 
     def __init__(self, node_id: int, capacity: int,
                  spill_dir: Optional[str] = None,
                  policy: str = "data-aware",
-                 pressure_watermark: float = 0.85):
+                 pressure_watermark: float = 0.85,
+                 pagelog_dir: Optional[str] = None,
+                 epoch_fn=None):
         self.node_id = node_id
         self.capacity = capacity
         self.pressure_watermark = pressure_watermark
-        self.pool = BufferPool(capacity, SpillStore(spill_dir), policy=policy,
-                               pressure_watermark=pressure_watermark)
+        self.spill_dir = spill_dir
+        self.policy = policy
+        self.pagelog_dir = pagelog_dir
+        self.epoch_fn = epoch_fn
+        self.pool = self._build_pool()
+        self.alive = True
+
+    def _build_pool(self) -> BufferPool:
+        """Construct the pool, reopening the durable page log from disk when
+        one is configured (construction replays its index — a revival with
+        surviving log files IS the warm start)."""
+        pagelog = (PageLog(self.pagelog_dir, epoch_fn=self.epoch_fn)
+                   if self.pagelog_dir else None)
+        return BufferPool(self.capacity, SpillStore(self.spill_dir),
+                          policy=self.policy,
+                          pressure_watermark=self.pressure_watermark,
+                          pagelog=pagelog)
+
+    def revive(self) -> None:
+        """Bring a killed node back with a fresh pool (and a reopened,
+        replayed page log when durable storage is configured)."""
+        self.pool = self._build_pool()
         self.alive = True
 
     @property
@@ -155,6 +183,11 @@ class ShardInfo:
     checksum: int
     content_checksum: int = 0
     replicas: List[Tuple[int, str]] = field(default_factory=list)
+    # topology/job event counter (StatisticsDB.event_seq) when this shard's
+    # bytes were last (re)written — page-log replay is fenced against it, so
+    # a shard dropped or rebuilt elsewhere while its node was dead cannot be
+    # resurrected from the dead node's stale log entries
+    epoch: int = 0
 
 
 class ShardedSet:
@@ -201,6 +234,25 @@ class ShardedSet:
 
 
 @dataclass
+class ConflictGuard:
+    """Paper §7's conflicting objects, cluster-level: when the same logical
+    dataset is registered under two partitionings and node ``node`` holds a
+    shard under BOTH, the records routed to ``node`` by both schemes exist
+    nowhere else once that node dies — a factor-0 pair could then never
+    rebuild either shard from the other. The guard is a copy of exactly
+    those records, placed on the ring successor, consulted by the
+    co-partitioned rebuild when the conflicted node's alternate shard is
+    unreadable."""
+
+    node: int           # the conflicted node both schemes route to
+    holder: int         # where the guard copy lives
+    set_name: str
+    num_records: int
+    checksum: int       # order-exact CRC32 of the guard records
+    epoch: int = 0
+
+
+@dataclass
 class RecoveryReport:
     node_id: int
     shards_recovered: int = 0
@@ -208,9 +260,13 @@ class RecoveryReport:
     bytes_transferred: int = 0
     checksum_failures: List[str] = field(default_factory=list)
     # "<set>:<shard>" -> the recovery source the scheduler chose
-    # ("replica@2", "rebuild<-other_set", ...)
+    # ("replica@2", "rebuild<-other_set", "pagelog", ...)
     sources: Dict[str, str] = field(default_factory=dict)
     seconds: float = 0.0
+    # durable-tier warm recovery (PR 6)
+    warm_shards: int = 0        # primary shards restored from the local log
+    warm_replicas: int = 0      # held replicas restored from the local log
+    fenced_sets: List[str] = field(default_factory=list)  # stale log sets purged
 
     @property
     def ok(self) -> bool:
@@ -255,7 +311,8 @@ class Cluster:
                  admission: bool = True,
                  admission_deadline_s: float = 0.05,
                  admission_timeout_s: float = 0.2,
-                 pressure_watermark: float = 0.85):
+                 pressure_watermark: float = 0.85,
+                 pagelog_dir: Optional[str] = None):
         if num_nodes < 2:
             raise ValueError("a cluster needs at least 2 nodes")
         self.num_nodes = num_nodes
@@ -274,10 +331,20 @@ class Cluster:
         self.admission_timeout_s = admission_timeout_s
         self.pressure_watermark = pressure_watermark
         self._spill_dir = spill_dir
+        # durable tier (PR 6): per-node page-log directories under
+        # ``pagelog_dir``. Configuring it makes sharded sets write-through
+        # by default (their pages land in the log) and node recovery
+        # warm-start from the revived node's replayed local index.
+        self._pagelog_dir = pagelog_dir
+        # stats must exist before the nodes: every node's page log stamps
+        # its records with the cluster's topology/job event counter
+        self.stats = StatisticsDB()
         self.nodes: Dict[int, StorageNode] = {
             n: StorageNode(n, node_capacity, self._node_spill_dir(n),
                            policy=policy,
-                           pressure_watermark=pressure_watermark)
+                           pressure_watermark=pressure_watermark,
+                           pagelog_dir=self._node_pagelog_dir(n),
+                           epoch_fn=self.stats.current_epoch)
             for n in range(num_nodes)
         }
         # the manager/driver process's own memory authority: pure accounting
@@ -285,8 +352,15 @@ class Cluster:
         # loader prefetch windows. Its high-water marks are what the
         # O(page)-driver-memory guarantees are asserted against.
         self.driver_memory = MemoryManager(node_capacity, policy=policy)
-        self.stats = StatisticsDB()
         self.catalog: Dict[str, ShardedSet] = {}
+        # paper-§7 conflicting-object guards (satellite bugfix):
+        # (base_name, other_name) -> {conflicted node -> ConflictGuard}
+        self.conflict_guards: Dict[Tuple[str, str],
+                                   Dict[int, ConflictGuard]] = {}
+        # durable blobs: plain (non-sharded) pool sets that live in a node's
+        # page log — checkpoint streams, mostly. name -> (node_id, epoch);
+        # the revival fence treats registered blobs as valid log state.
+        self.durable_blobs: Dict[str, Tuple[int, int]] = {}
         self.scheduler = ClusterScheduler(self)
         self._transfer_workers = transfer_workers
         self._transfer: Optional[TransferEngine] = None
@@ -298,6 +372,11 @@ class Cluster:
         if self._spill_dir is None:
             return None
         return f"{self._spill_dir}/node{node_id}"
+
+    def _node_pagelog_dir(self, node_id: int) -> Optional[str]:
+        if self._pagelog_dir is None:
+            return None
+        return f"{self._pagelog_dir}/node{node_id}"
 
     # -- membership -----------------------------------------------------------
     def node(self, node_id: int) -> StorageNode:
@@ -324,6 +403,72 @@ class Cluster:
         node.pool = None  # drop the arena; nothing on this node survives
         # topology event: recorded pressure snapshots are now stale
         self.stats.note_event()
+
+    def revive_node(self, node_id: int,
+                    warm: Optional[bool] = None) -> List[str]:
+        """Bring a dead node's identity back up with a fresh pool. With the
+        durable tier configured a *warm* revival (the default) reopens the
+        node's local page log — replaying its index — and then fences it:
+        replayed sets the catalog no longer names on this node, or whose
+        cataloged epoch is newer than the log's (dropped or re-sharded while
+        the node was dead), are purged rather than resurrected (satellite
+        bugfix — the fence rides ``StatisticsDB.note_event``'s counter,
+        stamped into every log record at write time). ``warm=False`` models
+        losing the machine's disk along with it: the log directory is wiped
+        before the pool reopens, so recovery must pull every byte from
+        replicas — the cold baseline the benchmark measures against.
+        Returns the fenced (purged) set names."""
+        node = self.nodes[node_id]
+        if node.alive:
+            raise ValueError(f"node {node_id} is alive; nothing to revive")
+        if warm is None:
+            warm = self._pagelog_dir is not None
+        log_dir = self._node_pagelog_dir(node_id)
+        if not warm and log_dir is not None and os.path.isdir(log_dir):
+            shutil.rmtree(log_dir, ignore_errors=True)
+        node.revive()
+        self.stats.note_event()  # topology event: node re-joined
+        return self._fence_pagelog(node_id)
+
+    def _fence_pagelog(self, node_id: int) -> List[str]:
+        """Purge replayed page-log state that no longer describes the
+        catalog. Valid log sets are the node's cataloged primaries, the
+        replicas it holds for other owners, its conflict-guard copies, and
+        registered durable blobs — each at the epoch the catalog stamped
+        when the bytes were (re)written. Anything else in the replayed
+        index is stale history from before the node died."""
+        pool = self.nodes[node_id].pool
+        log = pool.memory.pagelog if pool is not None else None
+        if log is None:
+            return []
+        valid: Dict[str, int] = {}
+        for sset in self.catalog.values():
+            info = sset.shards.get(node_id)
+            if info is not None:
+                valid[info.set_name] = info.epoch
+            for oinfo in sset.shards.values():
+                for holder, rep_name in oinfo.replicas:
+                    if holder == node_id:
+                        valid[rep_name] = oinfo.epoch
+        for guards in self.conflict_guards.values():
+            for g in guards.values():
+                if g.holder == node_id:
+                    valid[g.set_name] = g.epoch
+        for name, (nid, epoch) in self.durable_blobs.items():
+            if nid == node_id:
+                valid[name] = epoch
+        fenced = [name for name in log.set_names()
+                  if name not in valid or log.set_epoch(name) < valid[name]]
+        for name in fenced:
+            log.drop_set(name)
+        return sorted(fenced)
+
+    # -- durable blobs (checkpoint streams and other non-sharded log sets) ----
+    def register_durable_blob(self, name: str, node_id: int) -> None:
+        self.durable_blobs[name] = (node_id, self.stats.event_seq)
+
+    def unregister_durable_blob(self, name: str) -> None:
+        self.durable_blobs.pop(name, None)
 
     # -- byte accounting (thread-safe: pulls run on engine workers) -----------
     def add_net_bytes(self, n: int) -> None:
@@ -422,6 +567,11 @@ class Cluster:
                                  len(domain))
         sset = ShardedSet(name, records.dtype, scheme, page_size, factor,
                           node_ids=domain)
+        if attrs_factory is None and self._pagelog_dir is not None:
+            # durable tier configured: sharded user data is write-through by
+            # default so its pages land in each node's page log and a killed
+            # node can warm-start from its local index
+            attrs_factory = user_data_attrs
         sset.attrs_factory = attrs_factory
         self._place_records(sset, records)
         self.catalog[name] = sset
@@ -435,8 +585,70 @@ class Cluster:
         a logical dataset (paper §7 through the cluster pools): queries over
         ``logical_name`` may then be routed to whichever replica's
         partitioning matches (``scheduler.plan_aggregation``), e.g. a
-        by-key replica making an aggregation shuffle-free."""
+        by-key replica making an aggregation shuffle-free.
+
+        Carried bugfix (PR 3): registration is now *symmetric* — the base
+        set is equally a heterogeneous replica of ``sset``, so recovery can
+        rebuild in either direction — and paper §7's *conflicting objects*
+        are guarded: when the same node holds a shard under BOTH
+        partitionings and neither set carries chain replicas, the records
+        both schemes route to that node would die with it, leaving the
+        factor-0 pair unable to rebuild each other. A guard copy of exactly
+        those records is written to the ring successor at registration."""
         self.stats.register_replica(logical_name, self._replica_info(sset))
+        base = self.catalog.get(logical_name)
+        if base is None or base is sset or base.name == sset.name:
+            return
+        self.stats.register_replica(sset.name, self._replica_info(base))
+        self._guard_conflicting_objects(base, sset)
+
+    def _guard_conflicting_objects(self, base: ShardedSet,
+                                   other: ShardedSet) -> None:
+        """Write the paper-§7 conflicting-object guards for a factor-0 pair:
+        for every node holding a shard of ``other`` that ``base`` also
+        routes records to, copy exactly the records both partitionings place
+        there to the node's ring successor. Chain replicas already cover the
+        conflict when either set carries them, so guards are only needed
+        when both factors are zero."""
+        if base.replication_factor > 0 or other.replication_factor > 0:
+            return
+        pair = (base.name, other.name)
+        guards = self.conflict_guards.setdefault(pair, {})
+        domain = other.node_ids
+        if len(domain) < 2:
+            return
+        for slot, n in enumerate(domain):
+            if n in guards or n not in other.shards or n not in base.shards:
+                continue
+            recs = self.read_shard(other, n)
+            if not len(recs):
+                continue
+            conflicts = recs[base.node_of_records(recs) == n]
+            if not len(conflicts):
+                continue
+            hslot = replica_nodes(slot, len(domain), 1)[0]
+            holder = domain[hslot]
+            gname = f"{other.name}/conflict{n}@{holder}"
+            attrs = other.attrs_factory() if other.attrs_factory else None
+            self.node(holder).write_records(gname, conflicts, other.dtype,
+                                            other.page_size, attrs)
+            self.add_net_bytes(conflicts.nbytes)
+            guards[n] = ConflictGuard(
+                node=n, holder=holder, set_name=gname,
+                num_records=len(conflicts),
+                checksum=shard_checksum(conflicts),
+                epoch=self.stats.event_seq)
+
+    def conflict_guard(self, name_a: str, name_b: str,
+                       node: int) -> Optional[ConflictGuard]:
+        """The live guard for the (a, b) replica pair's conflict on
+        ``node``, in either registration order, or None when no guard copy
+        survives on an alive holder."""
+        for pair in ((name_a, name_b), (name_b, name_a)):
+            g = self.conflict_guards.get(pair, {}).get(node)
+            if g is not None and self.scheduler._holds(g.holder, g.set_name):
+                return g
+        return None
 
     def _replica_info(self, sset: ShardedSet) -> ReplicaInfo:
         return ReplicaInfo(
@@ -462,13 +674,19 @@ class Cluster:
             info = ShardInfo(node_id=nid, set_name=sset.primary_set_name(nid),
                              num_records=len(shard),
                              checksum=shard_checksum(shard),
-                             content_checksum=record_content_checksum(shard))
+                             content_checksum=record_content_checksum(shard),
+                             epoch=self.stats.event_seq)
             for hslot in replica_nodes(slot, len(domain),
                                        sset.replication_factor):
                 holder = domain[hslot]
                 rep_name = sset.replica_set_name(nid, holder)
+                # replicas inherit the shard attributes: a write-through
+                # replica lands in its holder's page log too, so a revived
+                # holder warm-starts the replicas it held
+                rep_attrs = sset.attrs_factory() if sset.attrs_factory else None
                 self.transfer_records(nid, info.set_name, holder, rep_name,
-                                      sset.dtype, sset.page_size)
+                                      sset.dtype, sset.page_size,
+                                      attrs=rep_attrs)
                 info.replicas.append((holder, rep_name))
             sset.shards[nid] = info
 
@@ -513,6 +731,19 @@ class Cluster:
     def drop_sharded_set(self, sset: ShardedSet) -> None:
         self._drop_physical(sset)
         self.catalog.pop(sset.name, None)
+        # guards exist to rebuild this set (or its pair partner) — dropping
+        # the set retires every pair it participates in
+        for pair in [p for p in self.conflict_guards if sset.name in p]:
+            for g in self.conflict_guards[pair].values():
+                hnode = self.nodes[g.holder]
+                if (hnode.alive and hnode.pool is not None
+                        and g.set_name in hnode.pool.paging.sets):
+                    hnode.pool.drop_set(hnode.pool.get_set(g.set_name))
+            del self.conflict_guards[pair]
+        # a dropped set's shards are gone everywhere: any log entries left
+        # on dead nodes are fenced at revival because the catalog no longer
+        # names them
+        self.stats.note_event()
 
     # -- replica-based recovery (paper §7) ------------------------------------
     def _rebuild_shard_from_replica(self, sset: ShardedSet, shard_id: int,
@@ -530,7 +761,24 @@ class Cluster:
         moved = 0
         try:
             for i, n in enumerate(sorted(alt.shards)):
-                holder, recs = self.read_shard_from(alt, n)
+                try:
+                    holder, recs = self.read_shard_from(alt, n)
+                except DeadNodeError:
+                    # paper-§7 conflicting objects (carried bugfix): the
+                    # alt's shard on the failed node itself may have no
+                    # surviving copy — both partitionings routed those
+                    # records there. The guard copy written at registration
+                    # holds exactly the records this rebuild needs from it
+                    # (the ones ``sset`` routes to ``shard_id``); any other
+                    # unreadable alt shard is a genuine loss.
+                    guard = self.conflict_guard(sset.name, alt_name, n)
+                    if guard is None or n != shard_id:
+                        raise
+                    holder = guard.holder
+                    recs = self.node(holder).read_records(guard.set_name,
+                                                          sset.dtype)
+                    if shard_checksum(recs) != guard.checksum:
+                        raise
                 # string keys: no alt shard may be skipped as "the failed
                 # node" — a dead owner's shard reaches us through a replica
                 src_shards[f"alt{i}"] = recs
@@ -558,6 +806,20 @@ class Cluster:
         exhausted."""
         pool = self.nodes[node_id].pool
         for src in self.scheduler.recovery_plan(sset, node_id, node_id):
+            if src.kind == "pagelog":
+                # local-disk warm restore (PR 6): adopt the replayed index
+                # and stream-verify. A torn tail or stale image just falls
+                # through to the next candidate — the log is best-effort,
+                # replicas remain the durability truth.
+                if self._warm_restore_set(node_id, info.set_name,
+                                          sset.page_size, sset.dtype,
+                                          info.checksum,
+                                          self._shard_attrs(sset)):
+                    report.sources[f"{sset.name}:{node_id}"] = "pagelog"
+                    report.shards_recovered += 1
+                    report.warm_shards += 1
+                    return True
+                continue
             if src.kind == "rebuild":
                 rebuilt, moved = self._rebuild_shard_from_replica(
                     sset, node_id, src.replica_of)
@@ -572,8 +834,10 @@ class Cluster:
                 self.add_net_bytes(moved)
                 report.bytes_transferred += moved
                 # the rebuilt order is the shard's new canonical layout:
-                # re-key the order-exact CRC and refresh surviving replicas
+                # re-key the order-exact CRC (and the epoch: the bytes were
+                # just rewritten) and refresh surviving replicas
                 info.checksum = shard_checksum(rebuilt)
+                info.epoch = self.stats.event_seq
                 for holder, rep_name in info.replicas:
                     hnode = self.nodes[holder]
                     if not hnode.alive:
@@ -582,15 +846,17 @@ class Cluster:
                         hnode.pool.drop_set(hnode.pool.get_set(rep_name))
                     report.bytes_transferred += self.transfer_records(
                         node_id, info.set_name, holder, rep_name, sset.dtype,
-                        sset.page_size)
+                        sset.page_size, attrs=self._shard_attrs(sset))
                 report.sources[f"{sset.name}:{node_id}"] = \
                     f"rebuild<-{src.replica_of}"
                 report.shards_recovered += 1
                 return True
             # primary/replica: page-for-page copy, order-exact CRC check
+            # (shard attrs ride along, so a cold-recovered primary is
+            # write-through again and re-enters the durable tier)
             report.bytes_transferred += self.transfer_records(
                 src.holder, src.set_name, node_id, info.set_name, sset.dtype,
-                sset.page_size)
+                sset.page_size, attrs=self._shard_attrs(sset))
             rebuilt = self.read_shard(sset, node_id)
             if shard_checksum(rebuilt) != info.checksum:
                 report.checksum_failures.append(
@@ -604,31 +870,73 @@ class Cluster:
             return True
         return False
 
+    def _shard_attrs(self, sset: ShardedSet) -> Optional[AttributeSet]:
+        return sset.attrs_factory() if sset.attrs_factory else None
+
+    def _warm_restore_set(self, node_id: int, set_name: str, page_size: int,
+                          dtype: np.dtype, expect_crc: int,
+                          attrs: Optional[AttributeSet] = None) -> bool:
+        """Adopt one set from the revived node's replayed page log and
+        stream-verify its CRC against the catalog. The verify pass reads the
+        page images straight out of the log file — sequential disk reads,
+        no pool allocation — so adoption stays O(index) and the pages stay
+        non-resident until something actually pins them. On mismatch (torn
+        tail truncated a page, stale bytes) nothing is adopted and the
+        caller falls through to a replica or rebuild source."""
+        pool = self.nodes[node_id].pool
+        log = pool.memory.pagelog if pool is not None else None
+        if log is None or not log.entries_for(set_name):
+            return False
+        if set_name in pool.paging.sets:
+            return True  # already adopted during this recovery
+        if not self._verify_log_crc(log, set_name, dtype, expect_crc):
+            return False
+        pool.adopt_durable_set(set_name, page_size, attrs)
+        return True
+
+    @staticmethod
+    def _verify_log_crc(log, set_name: str, dtype: np.dtype,
+                        expect: int) -> bool:
+        """CRC a set's record bytes directly from its durable-log page
+        images (each payload is itself CRC-checked by ``PageLog.read``).
+        Entries are visited in seq order — the same order adoption assigns
+        page ids, so the byte stream matches ``_verify_set_crc``'s."""
+        itemsize = np.dtype(dtype).itemsize
+        crc = 0
+        try:
+            for entry in log.entries_for(set_name):
+                payload = log.read(set_name, entry.seq)
+                n = int(np.frombuffer(payload[:_HEADER], np.int64)[0])
+                body = payload[_HEADER:_HEADER + n * itemsize]
+                if len(body) != n * itemsize:
+                    return False
+                crc = zlib.crc32(body, crc)
+        except (IOError, KeyError):
+            return False
+        return (crc & 0xFFFFFFFF) == expect
+
     def recover_node(self, node_id: int) -> RecoveryReport:
         """Bring a fresh node up under the failed node's identity and rebuild
         its state through the buffer pools:
 
-        1. every primary shard it owned is re-materialized from the *cheapest*
-           source the scheduler can cost (``scheduler.recovery_plan``): a
-           surviving chain replica (verified against the cataloged CRC32,
+        1. the node revives (``revive_node``): with the durable tier its
+           local page log is replayed and fenced, so the scheduler can cost
+           "adopt it from local disk" against "pull replica bytes";
+        2. every primary shard it owned is re-materialized from the *cheapest*
+           source the scheduler can cost (``scheduler.recovery_plan``): the
+           fenced local page log (CRC stream-verified, zero network bytes),
+           a surviving chain replica (verified against the cataloged CRC32,
            ties broken toward the least memory-pressured holder), or — when
            no direct copy survives — a co-partitioned rebuild from a
            heterogeneously partitioned replica set (verified against the
            order-independent content checksum);
-        2. every replica it held for other owners is re-replicated from the
-           (alive) primary, restoring the replication factor.
+        3. every replica it held for other owners is warm-restored from the
+           log when its image survives, else re-replicated from the (alive)
+           primary, restoring the replication factor.
         """
         t0 = time.perf_counter()
         report = RecoveryReport(node_id=node_id)
-        node = self.nodes[node_id]
-        if node.alive:
-            raise ValueError(f"node {node_id} is alive; nothing to recover")
-        node.pool = BufferPool(node.capacity,
-                               SpillStore(self._node_spill_dir(node_id)),
-                               policy=self.policy,
-                               pressure_watermark=self.pressure_watermark)
-        node.alive = True
-        self.stats.note_event()  # topology event: node re-joined
+        report.fenced_sets = self.revive_node(node_id)
         for sset in self.catalog.values():
             info = sset.shards.get(node_id)
             if info is not None:
@@ -643,9 +951,16 @@ class Cluster:
                 for holder, rep_name in oinfo.replicas:
                     if holder != node_id:
                         continue
+                    if self._warm_restore_set(node_id, rep_name,
+                                              sset.page_size, sset.dtype,
+                                              oinfo.checksum,
+                                              self._shard_attrs(sset)):
+                        report.warm_replicas += 1
+                        report.replicas_rebuilt += 1
+                        continue
                     report.bytes_transferred += self.transfer_records(
                         owner, oinfo.set_name, node_id, rep_name, sset.dtype,
-                        sset.page_size)
+                        sset.page_size, attrs=self._shard_attrs(sset))
                     rebuilt = self.nodes[node_id].read_records(rep_name,
                                                                sset.dtype)
                     if shard_checksum(rebuilt) != oinfo.checksum:
@@ -801,7 +1116,8 @@ class Cluster:
             sset.shards[nid] = ShardInfo(
                 node_id=nid, set_name=sset.primary_set_name(nid),
                 num_records=counts[nid], checksum=crc[nid] & 0xFFFFFFFF,
-                content_checksum=content[nid])
+                content_checksum=content[nid],
+                epoch=self.stats.event_seq)
         # 4. chain replicas from the new primaries
         for slot, nid in enumerate(alive):
             info = sset.shards[nid]
@@ -810,7 +1126,8 @@ class Cluster:
                 holder = alive[hslot]
                 rep_name = sset.replica_set_name(nid, holder)
                 self.transfer_records(nid, info.set_name, holder, rep_name,
-                                      sset.dtype, sset.page_size)
+                                      sset.dtype, sset.page_size,
+                                      attrs=self._shard_attrs(sset))
                 info.replicas.append((holder, rep_name))
         report.bytes_transferred += self.net_bytes - base_net
         return True
@@ -924,6 +1241,9 @@ class ClusterShuffle:
         self.placement: Optional[Dict[int, int]] = None
         # reducer -> (refused_node, placed_node) when admission diverted it
         self.diversions: Dict[int, Tuple[int, int]] = {}
+        # (straggler, refused_holder, placed_holder) for every backup task
+        # whose byte-local holder refused admission (carried bugfix)
+        self.backup_diversions: List[Tuple[int, int, int]] = []
         self._services: Dict[int, ShuffleService] = {}
         self._svc_lock = threading.Lock()  # threaded mappers race creation
         self._pulled: Dict[int, Tuple[str, int]] = {}  # reducer -> (set, node)
@@ -1084,7 +1404,14 @@ class ClusterShuffle:
         when a shard has no other surviving copy, or when the node's service
         holds records fed through the raw ``map_batch`` API (untracked work
         cannot be replayed, and dropping it would lose records). Returns
-        ``[(straggler, backup), ...]``."""
+        ``[(straggler, backup), ...]``.
+
+        With admission on, each backup's landing node is chosen through
+        ``scheduler.backup_source_admitted`` (carried bugfix): the holder
+        must admit the shard's re-execution bytes just like reducer
+        placement admits a partition's, so a pressured replica holder is
+        passed over for the next surviving copy; diversions are recorded on
+        ``self.backup_diversions`` as ``(straggler, refused, placed)``."""
         redone: List[Tuple[int, int]] = []
         for s in stragglers:
             items = self._work.get(s)
@@ -1094,8 +1421,18 @@ class ClusterShuffle:
             tracked = sum(it[5] for it in items)
             if sum(svc.partition_records) != tracked:
                 continue  # mixed provenance: raw map_batch records present
-            sources = [self.scheduler.backup_source(sset, shard_id, exclude=s)
-                       for (sset, shard_id, *_rest) in items]
+            sources = []
+            for (sset, shard_id, *_rest) in items:
+                if self.admission:
+                    src, diversion = self.scheduler.backup_source_admitted(
+                        sset, shard_id, exclude=s,
+                        deadline_s=self.cluster.admission_deadline_s)
+                    if src is not None and diversion is not None:
+                        self.backup_diversions.append((s,) + diversion)
+                else:
+                    src = self.scheduler.backup_source(sset, shard_id,
+                                                       exclude=s)
+                sources.append(src)
             if any(src is None for src in sources):
                 continue  # nowhere else to run it; slow output stands
             self.discard_map_output(s)

@@ -49,17 +49,26 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.statistics import ReplicaInfo
 
 
+# preference order among sources whose costs tie: a direct local copy, then
+# local disk, then a network copy, then a full re-partition
+_KIND_RANK = {"primary": 0, "pagelog": 1, "replica": 2, "rebuild": 3}
+
+
 @dataclass
 class RecoverySource:
     """One costed way to re-materialize a shard (scheduler recovery plan).
 
     ``kind`` is ``"primary"``/``"replica"`` for a direct page-for-page copy
-    from a surviving set, or ``"rebuild"`` for re-running the partitioner
-    over a heterogeneously partitioned replica of the same logical data
+    from a surviving set, ``"pagelog"`` for replaying the revived owner's
+    own durable page log (PR 6 — zero network bytes, only local disk reads),
+    or ``"rebuild"`` for re-running the partitioner over a heterogeneously
+    partitioned replica of the same logical data
     (``core/replication.recover_target_shard``). ``cost_bytes`` is the bytes
-    that must cross the network to execute it; ``pressure`` is the source
-    node's memory-pressure score (tie-breaker: don't read a shard off a node
-    that is busy spilling)."""
+    that must cross the network to execute it; ``disk_bytes`` the bytes that
+    must come off the target's local disk (discounted by the scheduler's
+    ``disk_byte_cost`` — disk is cheaper than the wire but not free);
+    ``pressure`` is the source node's memory-pressure score (tie-breaker:
+    don't read a shard off a node that is busy spilling)."""
 
     kind: str
     holder: Optional[int]
@@ -67,11 +76,14 @@ class RecoverySource:
     cost_bytes: int
     pressure: float = 0.0
     replica_of: Optional[str] = None   # rebuild: the sharded set to read
+    disk_bytes: int = 0                # pagelog: bytes replayed off local disk
+
+    def effective_cost(self, disk_byte_cost: float) -> int:
+        return self.cost_bytes + int(disk_byte_cost * self.disk_bytes)
 
     @property
     def sort_key(self) -> Tuple:
-        return (self.cost_bytes, self.pressure,
-                {"primary": 0, "replica": 1, "rebuild": 2}[self.kind],
+        return (self.cost_bytes, self.pressure, _KIND_RANK[self.kind],
                 -1 if self.holder is None else self.holder)
 
 
@@ -137,6 +149,13 @@ class JoinPlan:
 class ClusterScheduler:
     """Placement decisions over a ``Cluster`` (duck-typed: anything with
     ``nodes``, ``alive_node_ids()`` and ``stats``)."""
+
+    #: relative price of a byte read from the recovery target's local disk
+    #: versus a byte pulled over the network (recovery costing, PR 6). At the
+    #: default a warm log replay beats any remote copy of the same bytes but
+    #: still loses to a copy already sitting in the target's pool, and a
+    #: sufficiently small replica pull can out-cost a huge disk replay.
+    disk_byte_cost: float = 0.25
 
     def __init__(self, cluster):
         self.cluster = cluster
@@ -431,11 +450,17 @@ class ClusterScheduler:
         * the alive primary / each alive replica holder — a page-for-page
           copy; costs the shard's bytes when the holder is remote, zero when
           the bytes are already on the target;
+        * the target's own durable page log (PR 6) — when the target IS the
+          shard's owner and its replayed log still indexes the set at a
+          non-stale epoch, the shard can be adopted from local disk; zero
+          network bytes, the replay bytes priced at ``disk_byte_cost`` each;
         * a heterogeneously partitioned replica of the same logical dataset
           (``Cluster.register_replica_set``) — rebuild by re-running the
           partitioner over its readable shards
           (``core/replication.recover_target_shard``); costs every remote
-          byte of that replica set, since each shard must be scanned.
+          byte of that replica set, since each shard must be scanned. An
+          alt shard unreadable *because it sat on the failed node itself* is
+          still viable when a conflicting-object guard covers it.
 
         Ties break toward the source node with the lowest live memory
         pressure: reading a shard off a node that is busy spilling faults
@@ -448,6 +473,12 @@ class ClusterScheduler:
                 kind="primary", holder=shard_id, set_name=info.set_name,
                 cost_bytes=0 if shard_id == target_node else shard_bytes,
                 pressure=self.node_pressure_live(shard_id)))
+        log_bytes = self._pagelog_bytes(sset, info, shard_id, target_node)
+        if log_bytes is not None:
+            plan.append(RecoverySource(
+                kind="pagelog", holder=target_node, set_name=info.set_name,
+                cost_bytes=0, disk_bytes=log_bytes,
+                pressure=self.node_pressure_live(target_node)))
         for holder, rep_name in info.replicas:
             if not self._holds(holder, rep_name):
                 continue
@@ -455,6 +486,7 @@ class ClusterScheduler:
                 kind="replica", holder=holder, set_name=rep_name,
                 cost_bytes=0 if holder == target_node else shard_bytes,
                 pressure=self.node_pressure_live(holder)))
+        guard_fn = getattr(self.cluster, "conflict_guard", None)
         for rinfo in self.cluster.stats.replicas_of(sset.name):
             alt = self.cluster.catalog.get(rinfo.set_name)
             if alt is None or alt is sset or alt.name == sset.name:
@@ -465,6 +497,19 @@ class ClusterScheduler:
             for n, ainfo in alt.shards.items():
                 sources = self.read_sources(alt, n)
                 if not sources:
+                    # paper-§7 conflicting objects: the alt's shard on the
+                    # failed node is the one shard the rebuild can substitute
+                    # — the guard copy holds exactly the records both
+                    # partitionings routed there, which are exactly the ones
+                    # this target shard needs from it
+                    guard = (guard_fn(sset.name, alt.name, n)
+                             if guard_fn is not None else None)
+                    if guard is not None and n == shard_id:
+                        if guard.holder != target_node:
+                            cost += guard.num_records * sset.dtype.itemsize
+                        pressures.append(
+                            self.node_pressure_live(guard.holder))
+                        continue
                     readable = False
                     break
                 holder = sources[0][0]
@@ -476,8 +521,31 @@ class ClusterScheduler:
                     kind="rebuild", holder=None, set_name=None,
                     cost_bytes=cost, pressure=max(pressures),
                     replica_of=alt.name))
-        plan.sort(key=lambda s: s.sort_key)
+        plan.sort(key=lambda s: (s.effective_cost(self.disk_byte_cost),
+                                 s.pressure, _KIND_RANK[s.kind],
+                                 -1 if s.holder is None else s.holder))
         return plan
+
+    def _pagelog_bytes(self, sset, info, shard_id: int,
+                       target_node: int) -> Optional[int]:
+        """Bytes the recovery target could replay from its local page log
+        for this shard, or None when the log has nothing usable. The target
+        must BE the shard's owner (logs are per-node — no other node's log
+        ever held these pages), alive with the durable tier configured, and
+        the replayed entries must carry an epoch at least the cataloged
+        shard's (the revival fence: log state from before a drop/re-shard
+        must not resurrect)."""
+        if target_node != shard_id:
+            return None
+        node = self.cluster.nodes.get(target_node)
+        if node is None or not node.alive or node.pool is None:
+            return None
+        log = node.pool.memory.pagelog
+        if log is None or not log.entries_for(info.set_name):
+            return None
+        if log.set_epoch(info.set_name) < getattr(info, "epoch", 0):
+            return None
+        return log.set_bytes(info.set_name)
 
     def remesh_read_source(self, sset, shard_id: int,
                            survivors: Sequence[int]) -> List[Tuple[int, str]]:
@@ -504,3 +572,31 @@ class ClusterScheduler:
             if holder != exclude:
                 return holder, set_name
         return None
+
+    def backup_source_admitted(self, sset, shard_id: int, exclude: int,
+                               deadline_s: float = 0.05
+                               ) -> Tuple[Optional[Tuple[int, str]],
+                                          Optional[Tuple[int, int]]]:
+        """``backup_source`` with the admission check the PR-5 loop missed
+        (carried bugfix): re-executing a straggler's map work lands the
+        shard's scan plus its map output on the chosen holder, so that
+        holder's MemoryManager must admit the bytes exactly like reducer
+        placement admits a partition's landing bytes. A holder that refuses
+        past the deadline loses the backup task to the next surviving copy;
+        when every candidate refuses, the first keeps it (someone must run
+        it — the pool spills rather than fails, same terminal rule as
+        ``_place_admitted``). Returns ``(source, diversion)`` where
+        ``diversion`` is ``(refused_holder, placed_holder)`` or None."""
+        candidates = [(h, s) for h, s in self.read_sources(sset, shard_id)
+                      if h != exclude]
+        if not candidates:
+            return None, None
+        ask = self._shard_bytes(sset, sset.shards[shard_id])
+        for holder, set_name in candidates:
+            memory = self.cluster.nodes[holder].memory
+            if memory is None or memory.admission.admit_placement(
+                    ask, deadline_s=deadline_s):
+                diversion = (None if holder == candidates[0][0]
+                             else (candidates[0][0], holder))
+                return (holder, set_name), diversion
+        return candidates[0], None

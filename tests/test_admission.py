@@ -341,7 +341,11 @@ def test_transfer_engine_resolves_callable_dest_after_deps():
 def test_threaded_map_writers_bounded_inflight_no_deadlock_identical():
     """Concurrent map writers feeding one node throttle against its staging
     cap: the node's reservation HWM stays bounded, nothing deadlocks, and
-    the shuffle output is byte-identical to the always-grant run."""
+    the shuffle output is byte-identical to the always-grant run. The
+    driver holds a staging grant across the barrier release so writer
+    contention is deterministic — left to scheduling luck, a whole
+    map_batch can run reserve-to-release without any overlap and the
+    throttle this test asserts on never materializes."""
     batches = [_pairs(2_000, 1 << 40, seed=100 + i) for i in range(12)]
 
     def run(admission):
@@ -354,7 +358,7 @@ def test_threaded_map_writers_bounded_inflight_no_deadlock_identical():
         mm.reset_reserved_hwm()
         sh = ClusterShuffle(cluster, "t", num_reducers=4, dtype=PAIR)
         errors = []
-        barrier = threading.Barrier(len(batches))
+        barrier = threading.Barrier(len(batches) + 1)  # writers + driver
 
         def writer(idx):
             try:
@@ -367,6 +371,17 @@ def test_threaded_map_writers_bounded_inflight_no_deadlock_identical():
                    for i in range(len(batches))]
         for t in threads:
             t.start()
+        # pre-hold a grant so writers arriving behind the barrier find the
+        # cap taken, and keep holding until one is observably parked on the
+        # condition variable (released well inside their 30s timeout, so
+        # they are throttled — never forced)
+        hold = mm.try_reserve(32 << 10, urgency="low") if admission else None
+        barrier.wait()
+        if hold is not None:
+            deadline = time.time() + 10.0
+            while mm.admission.waiting == 0 and time.time() < deadline:
+                time.sleep(0.001)
+            hold.release()
         for t in threads:
             t.join()
         assert errors == []
@@ -487,3 +502,55 @@ def test_admission_reduces_destination_spill_byte_identical():
     assert hot in placement_off.values()
     # and the diverted reducers stopped paying destination spill
     assert spill_on < spill_off
+
+
+# -- straggler backup admission (PR 6 carried bugfix) -------------------------
+def test_straggler_backup_diverted_off_pressured_holder():
+    """Regression: ``reexecute_stragglers`` used to hand the backup task to
+    the first surviving copy regardless of pressure — the one placement
+    decision the PR-5 admission loop missed. The pressured holder must now
+    refuse and the task land on the next copy, with the diversion recorded."""
+    cluster = Cluster(4, node_capacity=1 << 20, page_size=1 << 14,
+                      replication_factor=2, admission_deadline_s=0.01)
+    recs = _pairs(20_000, 1_500, seed=40)
+    sset = cluster.create_sharded_set("st", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "st.sh", 4, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    straggler = 2
+    first, second = [h for h, _ in sset.shards[straggler].replicas]
+    # resident ballast pushes the first backup candidate past its watermark
+    ballast = _pairs(58_000, 100, seed=41)
+    cluster.nodes[first].write_records("ballast", ballast, PAIR, 1 << 14)
+    redone = sh.reexecute_stragglers([straggler])
+    assert redone and redone[0] == (straggler, second)
+    assert (straggler, first, second) in sh.backup_diversions
+    assert cluster.nodes[first].memory.admission.refused >= 1
+    sh.finish_maps()
+    allk = np.concatenate([sh.pull(r)["key"] for r in range(4)])
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+    cluster.shutdown()
+
+
+def test_straggler_backup_all_refusing_keeps_first_copy():
+    """Every candidate refusing must not strand the work: the first copy
+    keeps it (spill, don't fail) and no diversion is recorded."""
+    cluster = Cluster(4, node_capacity=1 << 20, page_size=1 << 14,
+                      replication_factor=2, admission_deadline_s=0.01)
+    recs = _pairs(20_000, 1_500, seed=42)
+    sset = cluster.create_sharded_set("st", recs, key_fn=lambda r: r["key"])
+    sh = ClusterShuffle(cluster, "st.sh", 4, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    straggler = 2
+    first, _second = [h for h, _ in sset.shards[straggler].replicas]
+    ballast = _pairs(58_000, 100, seed=43)
+    for nid in cluster.alive_node_ids():
+        if nid != straggler:
+            cluster.nodes[nid].write_records(f"bal{nid}", ballast, PAIR,
+                                             1 << 14)
+    redone = sh.reexecute_stragglers([straggler])
+    assert redone and redone[0] == (straggler, first)
+    assert sh.backup_diversions == []
+    sh.finish_maps()
+    allk = np.concatenate([sh.pull(r)["key"] for r in range(4)])
+    assert np.array_equal(np.sort(allk), np.sort(recs["key"]))
+    cluster.shutdown()

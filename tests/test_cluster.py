@@ -256,3 +256,70 @@ def test_sharded_token_dataset_roundtrip():
         assert b["labels"].shape == b["tokens"].shape
         assert (b["labels"][:, -1] == -100).all()
         assert np.array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# -- conflicting-object guards (paper §7, carried bugfix) --------------------
+def test_factor0_conflicting_pair_recovers_via_guard():
+    """Regression: a factor-0 heterogeneous pair where the same node holds
+    shards under BOTH partitionings. The records both schemes route there
+    die with the node, and without the registration-time guard copy neither
+    set can rebuild the other — recovery used to report failure."""
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(12_000, 800, seed=31)
+    base = cluster.create_sharded_set("ev", recs, key_fn=lambda r: r["key"],
+                                      partition_key="key")
+    alt = cluster.create_sharded_set(
+        "ev_by_val", recs, partition_key="val",
+        key_fn=lambda r: (r["val"] * 1e6).astype(np.int64))
+    cluster.register_replica_set("ev", alt)
+    guards = cluster.conflict_guards[("ev", "ev_by_val")]
+    assert guards, "no conflicted node — setup lost its point"
+    victim = sorted(guards)[0]
+    g = guards[victim]
+    assert g.holder != victim              # the guard survives the kill
+    order = ["key", "val"]
+    expect_base = np.sort(cluster.read_sharded(base), order=order)
+    expect_alt = np.sort(cluster.read_sharded(alt), order=order)
+    cluster.kill_node(victim)
+    report = cluster.recover_node(victim)
+    assert report.ok, report.checksum_failures
+    assert report.sources[f"ev:{victim}"] == "rebuild<-ev_by_val"
+    assert report.sources[f"ev_by_val:{victim}"] == "rebuild<-ev"
+    assert np.array_equal(np.sort(cluster.read_sharded(base), order=order),
+                          expect_base)
+    assert np.array_equal(np.sort(cluster.read_sharded(alt), order=order),
+                          expect_alt)
+    cluster.shutdown()
+
+
+def test_no_guards_written_when_either_side_carries_replicas():
+    """Chain replicas already cover the conflict: guards are a factor-0-pair
+    mechanism only, so a replicated pair must not pay the extra copies."""
+    cluster = _cluster(replication_factor=1)
+    recs = _pairs(8_000, 500, seed=32)
+    cluster.create_sharded_set("a", recs, key_fn=lambda r: r["key"],
+                               partition_key="key")
+    alt = cluster.create_sharded_set(
+        "a_by_val", recs, partition_key="val",
+        key_fn=lambda r: (r["val"] * 1e6).astype(np.int64))
+    cluster.register_replica_set("a", alt)
+    assert cluster.conflict_guards.get(("a", "a_by_val"), {}) == {}
+    cluster.shutdown()
+
+
+def test_dropping_a_set_drops_its_guards():
+    cluster = _cluster(replication_factor=0)
+    recs = _pairs(10_000, 600, seed=33)
+    cluster.create_sharded_set("d", recs, key_fn=lambda r: r["key"],
+                               partition_key="key")
+    alt = cluster.create_sharded_set(
+        "d_by_val", recs, partition_key="val",
+        key_fn=lambda r: (r["val"] * 1e6).astype(np.int64))
+    cluster.register_replica_set("d", alt)
+    guards = dict(cluster.conflict_guards[("d", "d_by_val")])
+    assert guards
+    cluster.drop_sharded_set(alt)
+    assert ("d", "d_by_val") not in cluster.conflict_guards
+    for g in guards.values():              # the guard copies were freed
+        assert not cluster.scheduler._holds(g.holder, g.set_name)
+    cluster.shutdown()

@@ -1,0 +1,249 @@
+"""Durable per-node page tier (PR 6): append-only page log + consistent-hash
+index unit behaviour, torn-tail truncation, warm-vs-cold cluster restarts,
+recovery-plan disk-vs-wire costing, and the revival epoch fence (the
+kill+revive carried bugfix: stale log state must not resurrect)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.pagelog import (LOG_FILENAME, ConsistentHashIndex, PageLog,
+                                fsck)
+from repro.runtime.cluster import Cluster
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def _pairs(n, key_range, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, key_range, n)
+    recs["val"] = rng.random(n)
+    return recs
+
+
+def _sorted(recs):
+    return np.sort(recs, order=["key", "val"])
+
+
+def _cluster(tmp_path, replication_factor=1, **kw):
+    kw.setdefault("node_capacity", 16 << 20)
+    kw.setdefault("page_size", 1 << 16)
+    kw.setdefault("pagelog_dir", str(tmp_path / "pagelog"))
+    return Cluster(4, replication_factor=replication_factor, **kw)
+
+
+# -- page log unit behaviour --------------------------------------------------
+def test_append_read_roundtrip_and_supersede(tmp_path):
+    log = PageLog(str(tmp_path))
+    a0 = os.urandom(512)
+    a1 = os.urandom(512)
+    log.append("a", a0)                    # seq 0 allocated
+    log.append("a", a1)                    # seq 1
+    assert log.read("a", 0) == a0
+    assert log.read("a", 1) == a1
+    assert log.next_seq("a") == 2
+    # re-appending an existing seq supersedes in place: index keeps newest
+    a0b = os.urandom(512)
+    log.append("a", a0b, seq=0)
+    assert log.read("a", 0) == a0b
+    assert len(log.entries_for("a")) == 2  # still two live pages
+    assert log.set_bytes("a") == 1024
+    log.close()
+
+
+def test_replay_rebuilds_index_with_tombstones_and_renames(tmp_path):
+    log = PageLog(str(tmp_path))
+    pages = [os.urandom(256) for _ in range(3)]
+    for p in pages:
+        log.append("keep", p)
+    log.append("gone", os.urandom(256))
+    log.drop_set("gone")                   # tombstone
+    log.rename_set("keep", "kept")         # O(1) re-key, no data rewrite
+    log.close()
+
+    warm = PageLog(str(tmp_path))          # construction IS the replay
+    assert warm.set_names() == ["kept"]
+    assert [warm.read("kept", i) for i in range(3)] == pages
+    assert warm.next_seq("kept") == 3      # seq allocation survives restart
+    assert warm.report["tombstones"] == 1
+    assert warm.report["renames"] == 1
+    assert warm.report["truncated_bytes"] == 0
+    warm.close()
+
+
+def test_torn_tail_truncated_on_replay(tmp_path):
+    log = PageLog(str(tmp_path))
+    keep = [os.urandom(300), os.urandom(300)]
+    log.append("t", keep[0])
+    log.append("t", keep[1])
+    log.append("t", os.urandom(300))       # this record will be torn
+    log.close()
+    path = os.path.join(str(tmp_path), LOG_FILENAME)
+    with open(path, "r+b") as f:           # crash mid-append: short tail
+        f.truncate(os.path.getsize(path) - 5)
+
+    rep = fsck(str(tmp_path))              # read-only check sees the tear
+    assert not rep["clean"] and rep["torn_tail_bytes"] > 0
+
+    warm = PageLog(str(tmp_path))          # replay cuts back to last good
+    assert warm.report["truncated_bytes"] > 0
+    assert [e.seq for e in warm.entries_for("t")] == [0, 1]
+    assert [warm.read("t", i) for i in range(2)] == keep
+    warm.close()
+    post = fsck(str(tmp_path))             # the tear is gone from disk
+    assert post["clean"] and post["torn_tail_bytes"] == 0
+    assert post["records"] == 2
+
+
+def test_index_keeps_one_set_in_one_bucket():
+    """Set-granular ops touch one bucket: every page of a set hashes to the
+    same ring interval regardless of seq."""
+    idx = ConsistentHashIndex(num_buckets=8)
+    from repro.core.pagelog import PageLogEntry
+    for seq in range(20):
+        idx.put(PageLogEntry(name="s", seq=seq, epoch=0, offset=0,
+                             length=1, payload_crc=0))
+    b = idx.bucket_of("s")
+    assert all(("s", seq) in idx._buckets[b] for seq in range(20))
+    assert [e.seq for e in idx.entries_for("s")] == list(range(20))
+    assert idx.drop_set("s") == 20 and len(idx) == 0
+
+
+# -- warm vs cold cluster restart ---------------------------------------------
+def test_warm_restart_is_byte_identical_with_zero_net_bytes(tmp_path):
+    cluster = _cluster(tmp_path)
+    recs = _pairs(20_000, 1_500, seed=3)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    expect = _sorted(cluster.read_sharded(sset))
+    cluster.kill_node(2)
+    base_net = cluster.net_bytes
+    report = cluster.recover_node(2)
+    assert report.ok, report.checksum_failures
+    # the primary came off local disk, not the wire
+    assert report.sources["t:2"] == "pagelog"
+    assert report.warm_shards >= 1
+    # the replica node 2 held for a peer warm-restored from the log too
+    assert report.warm_replicas >= 1
+    assert cluster.net_bytes == base_net
+    assert np.array_equal(_sorted(cluster.read_sharded(sset)), expect)
+    cluster.shutdown()
+
+
+def test_cold_restart_pulls_replica_bytes(tmp_path):
+    """The machine's disk died with it: wiping the log before revival forces
+    the wire path, still byte-identical."""
+    import shutil
+
+    cluster = _cluster(tmp_path)
+    recs = _pairs(20_000, 1_500, seed=4)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    expect = _sorted(cluster.read_sharded(sset))
+    cluster.kill_node(2)
+    shutil.rmtree(cluster._node_pagelog_dir(2), ignore_errors=True)
+    base_net = cluster.net_bytes
+    report = cluster.recover_node(2)
+    assert report.ok, report.checksum_failures
+    assert report.sources["t:2"].startswith("replica@")
+    assert report.warm_shards == 0
+    assert cluster.net_bytes > base_net
+    assert np.array_equal(_sorted(cluster.read_sharded(sset)), expect)
+    cluster.shutdown()
+
+
+# -- recovery costing: local disk vs wire -------------------------------------
+def test_recovery_plan_flips_pagelog_vs_replica_as_disk_cost_rises(tmp_path):
+    cluster = _cluster(tmp_path)
+    recs = _pairs(16_000, 900, seed=5)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(2)
+    cluster.revive_node(2)                 # warm: log replayed, pool empty
+    plan = cluster.scheduler.recovery_plan(sset, 2, target_node=2)
+    kinds = [s.kind for s in plan]
+    assert kinds[0] == "pagelog"           # default: disk byte < wire byte
+    assert "replica" in kinds
+    log_src = plan[0]
+    assert log_src.disk_bytes > 0 and log_src.cost_bytes == 0
+    # flip the cost model: disk reads priced above wire pulls
+    cluster.scheduler.disk_byte_cost = 1e6
+    plan = cluster.scheduler.recovery_plan(sset, 2, target_node=2)
+    assert plan[0].kind == "replica"
+    assert plan[-1].kind == "pagelog"
+    cluster.shutdown()
+
+
+def test_recovery_plan_has_no_pagelog_source_without_durable_tier():
+    cluster = Cluster(4, node_capacity=16 << 20, page_size=1 << 16,
+                      replication_factor=1)
+    recs = _pairs(8_000, 500, seed=6)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(1)
+    cluster.revive_node(1)
+    plan = cluster.scheduler.recovery_plan(sset, 1, target_node=1)
+    assert all(s.kind != "pagelog" for s in plan)
+    cluster.shutdown()
+
+
+# -- revival fence (carried bugfix: kill+revive must not resurrect) ----------
+def test_revive_fences_sets_dropped_while_dead(tmp_path):
+    cluster = _cluster(tmp_path)
+    keep = cluster.create_sharded_set("keep", _pairs(8_000, 500, seed=7),
+                                      key_fn=lambda r: r["key"])
+    tmp = cluster.create_sharded_set("tmp", _pairs(8_000, 500, seed=8),
+                                     key_fn=lambda r: r["key"])
+    cluster.kill_node(1)
+    cluster.drop_sharded_set(tmp)          # dropped while node 1 was dead
+    fenced = cluster.revive_node(1)
+    # the dead node's log still held tmp's pages; the fence purged them
+    assert fenced and all(n.startswith("tmp/") for n in fenced)
+    log = cluster.nodes[1].pool.memory.pagelog
+    assert not any(n.startswith("tmp/") for n in log.set_names())
+    # keep's shard survived the fence and still warm-recovers
+    plan = cluster.scheduler.recovery_plan(keep, 1, target_node=1)
+    assert plan[0].kind == "pagelog"
+    cluster.shutdown()
+
+
+def test_stale_log_epoch_is_not_a_recovery_source(tmp_path):
+    """A shard re-sharded/rebuilt elsewhere while its owner was dead carries
+    a newer catalog epoch than the dead owner's log entries: the log must
+    not be offered as a source for bytes it no longer truthfully holds."""
+    cluster = _cluster(tmp_path)
+    recs = _pairs(12_000, 700, seed=9)
+    sset = cluster.create_sharded_set("t", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(1)
+    cluster.revive_node(1)
+    # catalog stamped a newer epoch than anything node 1 ever logged
+    sset.shards[1].epoch = cluster.stats.event_seq + 10
+    plan = cluster.scheduler.recovery_plan(sset, 1, target_node=1)
+    assert all(s.kind != "pagelog" for s in plan)
+    cluster.shutdown()
+
+
+def test_double_revive_raises(tmp_path):
+    cluster = _cluster(tmp_path)
+    cluster.create_sharded_set("t", _pairs(4_000, 300, seed=10),
+                               key_fn=lambda r: r["key"])
+    cluster.kill_node(3)
+    cluster.revive_node(3)
+    with pytest.raises(ValueError):
+        cluster.revive_node(3)
+    cluster.shutdown()
+
+
+# -- overcommit: the pool degrades to the log instead of failing -------------
+def test_scan_larger_than_pool_completes_through_the_log(tmp_path):
+    recs = _pairs(30_000, 2_000, seed=11)
+    # 2x data (primaries + factor-1 replicas) against pools that cannot
+    # hold it: write-through pages overflow into the durable tier
+    capacity = max(4 << 16, recs.nbytes // 8)
+    cluster = Cluster(4, node_capacity=capacity, page_size=1 << 16,
+                      replication_factor=1,
+                      pagelog_dir=str(tmp_path / "pagelog"))
+    sset = cluster.create_sharded_set("big", recs, key_fn=lambda r: r["key"])
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(_sorted(back), _sorted(recs))
+    log_bytes = sum(node.memory.stats["log_bytes"]
+                    for node in cluster.nodes.values())
+    assert log_bytes > 0
+    cluster.shutdown()

@@ -1,0 +1,45 @@
+"""Offline page-log checker: walk a directory tree, fsck every node page log
+found, and print one JSON report per log (plus a summary line). Read-only —
+unlike replay, it never truncates a torn tail, it just reports it.
+
+Usage::
+
+    PYTHONPATH=src python tools/pagelog_fsck.py <root> [<root> ...]
+
+Exit status is 0 when every log is clean (no CRC failures, no torn tail),
+1 otherwise — CI uploads the output as the durable-tier health artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.pagelog import LOG_FILENAME, fsck  # noqa: E402
+
+
+def find_logs(root: str):
+    for dirpath, _dirnames, filenames in os.walk(root):
+        if LOG_FILENAME in filenames:
+            yield dirpath
+
+
+def main(argv=None) -> int:
+    roots = (argv if argv is not None else sys.argv[1:]) or ["."]
+    reports = {}
+    for root in roots:
+        for log_dir in sorted(find_logs(root)):
+            reports[log_dir] = fsck(log_dir)
+    for log_dir, rep in reports.items():
+        print(json.dumps({"log": log_dir, **rep}, sort_keys=True))
+    clean = all(r["clean"] for r in reports.values())
+    print(f"# {len(reports)} page log(s), "
+          f"{sum(r['records'] for r in reports.values())} records, "
+          f"{'all clean' if clean else 'PROBLEMS FOUND'}")
+    return 0 if clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
