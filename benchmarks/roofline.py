@@ -153,6 +153,71 @@ def _is_variant(row: Dict) -> bool:
     return row["file"] != base
 
 
+def run_fused(n: int = 20000, num_partitions: int = 4) -> Dict:
+    """Host roofline for the fused hash-partition + incremental-CRC pass
+    (PR 7) — the cluster shuffle's map-side kernel, measured against this
+    machine's memory-bound ceiling rather than the TPU terms above.
+
+    Traffic model (bytes per record, every array pass counted once —
+    the kernel is a chain of streaming passes, so its floor is the time
+    those bytes take at memcpy speed):
+
+      hash:    key read + hash write + 2 in-place mix passes  8+8+2*16 = 48
+      narrow:  hash read -> uint8 partition-id write           8+1     =  9
+      plan:    stable radix argsort (2 counting reads + int64
+               order write) + bincount read                    10+1    = 11
+      gather:  order read + column read + landed write         8+2*w
+      crc:     landed bytes read                               w
+
+    with ``w`` the record width. The ceiling is measured, not assumed: a
+    straight ``np.copyto`` of a pool-sized buffer gives this host's
+    streaming bandwidth. ``roofline_frac = (bytes/bw) / t_kernel``."""
+    import time
+
+    import numpy as np
+
+    from repro.core.columnar import fused_partition_crc
+    from repro.runtime.cluster import dispatch_impl, partition_crc_impl
+
+    from .common import record
+
+    rec_dtype = np.dtype([("key", np.int64), ("payload", np.uint8, (10,))])
+    w = rec_dtype.itemsize
+    rng = np.random.default_rng(0)
+    keys = rng.zipf(1.3, n).astype(np.int64)
+    cols = {"key": keys,
+            "payload": rng.integers(0, 255, (n, 10)).astype(np.uint8)}
+
+    def best(fn, reps):
+        fn(); fn()
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_kernel = best(lambda: fused_partition_crc(keys, cols, rec_dtype,
+                                                num_partitions), reps=30)
+    src = np.empty(32 << 20, np.uint8)
+    src[:] = 7
+    dst = np.empty_like(src)
+    bw = len(src) / best(lambda: np.copyto(dst, src), reps=10)
+    bytes_per_rec = 48 + 9 + 11 + (8 + 2 * w) + w
+    moved = n * bytes_per_rec
+    achieved = moved / t_kernel
+    frac = (moved / bw) / t_kernel
+    row = {"n": n, "bytes_per_record": bytes_per_rec,
+           "achieved_gbps": achieved / 1e9, "ceiling_gbps": bw / 1e9,
+           "roofline_frac": frac, "kernel_us": t_kernel * 1e6,
+           "dispatch_impl": dispatch_impl(),
+           "partition_crc_impl": partition_crc_impl()}
+    record("roofline/fused_partition_crc", t_kernel * 1e6,
+           f"achieved_gbps={achieved/1e9:.2f};ceiling_gbps={bw/1e9:.2f};"
+           f"frac={frac:.3f}", **row)
+    return row
+
+
 def run(write_csv: bool = True) -> List[Dict]:
     rows = analyze()
     if not rows:

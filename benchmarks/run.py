@@ -18,7 +18,7 @@ import sys
 
 CLUSTER_PREFIXES = ["shuffle/cluster", "recovery/cluster", "recovery/degrade",
                     "recovery/warm_vs_cold", "recovery/overcap_scan",
-                    "join/cluster"]
+                    "join/cluster", "roofline/fused_partition_crc"]
 
 
 def main(argv=None) -> None:
@@ -53,10 +53,13 @@ def main(argv=None) -> None:
         print("\n# roofline (per-device terms from the dry-run; see "
               "EXPERIMENTS.md)")
         roofline.run(write_csv=True)
+        roofline.run_fused()
     else:
+        from . import roofline
         bench_shuffle.run()
         bench_join.run()
         bench_recovery.run()
+        roofline.run_fused()
     write_results_json(args.json_out, prefixes=CLUSTER_PREFIXES)
 
 

@@ -55,6 +55,24 @@ class EvictionStrategy(enum.Enum):
     LRU = "lru"
 
 
+class StorageScheme(enum.Enum):
+    """Physical page layout of a locality set.
+
+    row: ``[count:int64][record bytes...]`` — each page holds contiguous
+    fixed-width records (the seed layout; every legacy set uses it).
+
+    columnar: ``[count:int64][validity bitmap][col0 block][col1 block]...``
+    — each page holds one column block: per-field contiguous arrays plus a
+    validity bitmap (arrow-ish). Selected per set so the vectorized shuffle /
+    aggregate / join kernels can stream whole columns without per-record
+    decode; spill and pagelog paths are layout-oblivious (pages are opaque
+    byte payloads either way).
+    """
+
+    ROW = "row"
+    COLUMNAR = "columnar"
+
+
 # ---------------------------------------------------------------------------
 # Paper Table 3: normalized spilling-cost constants `c`.
 # The cost is keyed on (reading/writing pattern, durability) because those are
@@ -117,6 +135,7 @@ class AttributeSet:
     reading: ReadingPattern = ReadingPattern.NONE
     lifetime: Lifetime = Lifetime.ALIVE
     operation: CurrentOperation = CurrentOperation.IDLE
+    storage: StorageScheme = StorageScheme.ROW
     access_recency: int = 0  # integer timestamp of last access (paper Table 2)
     # free-form labels an application may attach (e.g. "kv-cache", "layer=3")
     labels: dict = field(default_factory=dict)

@@ -52,6 +52,14 @@ FLAG_RENAME = 2      # payload = old set name; entries move to the new name
 
 LOG_FILENAME = "pages.log"
 
+# Durability-vs-throughput knob (ROADMAP §4 follow-up). ``none`` preserves
+# the original behavior: records are flushed to the OS but never fsync'd
+# (a machine crash may lose the tail; replay's torn-tail truncation makes
+# that safe, and replicas remain the durability truth). ``close`` syncs
+# once when the log is closed, ``group`` batches one sync per
+# ``group_bytes`` of appended records, ``always`` syncs every append.
+FSYNC_POLICIES = ("none", "close", "group", "always")
+
 
 def _hash64(key: str) -> int:
     return int.from_bytes(
@@ -136,9 +144,16 @@ class PageLog:
 
     def __init__(self, directory: str,
                  epoch_fn: Optional[Callable[[], int]] = None,
-                 index_buckets: int = 16):
+                 index_buckets: int = 16,
+                 fsync_policy: str = "none",
+                 group_bytes: int = 1 << 20):
+        if fsync_policy not in FSYNC_POLICIES:
+            raise ValueError(f"fsync_policy must be one of {FSYNC_POLICIES}, "
+                             f"got {fsync_policy!r}")
         self.directory = directory
         self.epoch_fn = epoch_fn
+        self.fsync_policy = fsync_policy
+        self.group_bytes = group_bytes
         os.makedirs(directory, exist_ok=True)
         self.path = os.path.join(directory, LOG_FILENAME)
         self.index = ConsistentHashIndex(index_buckets)
@@ -147,6 +162,8 @@ class PageLog:
         self._read_fh = None
         self._next_seq: Dict[str, int] = {}
         self.bytes_appended = 0
+        self.fsync_count = 0     # observable: tests assert group batching
+        self._unsynced = 0       # bytes appended since the last fsync
         self.report: Dict[str, int] = {}
         self._replay()
 
@@ -192,8 +209,19 @@ class PageLog:
         fh.write(nb)
         fh.write(payload)
         fh.flush()
-        self.bytes_appended += _HEADER.size + len(nb) + len(payload)
+        nbytes = _HEADER.size + len(nb) + len(payload)
+        self.bytes_appended += nbytes
+        self._unsynced += nbytes
+        if (self.fsync_policy == "always"
+                or (self.fsync_policy == "group"
+                    and self._unsynced >= self.group_bytes)):
+            self._fsync(fh)
         return start + _HEADER.size + len(nb), epoch
+
+    def _fsync(self, fh) -> None:
+        os.fsync(fh.fileno())
+        self.fsync_count += 1
+        self._unsynced = 0
 
     def next_seq(self, name: str) -> int:
         with self._lock:
@@ -272,9 +300,14 @@ class PageLog:
 
     def close(self) -> None:
         """Close file handles; the log FILES stay — that is the point of the
-        durable tier (``SpillStore.clear`` has no analogue here)."""
+        durable tier (``SpillStore.clear`` has no analogue here). The
+        ``close`` and ``group`` fsync policies drain any unsynced tail here
+        so a clean shutdown is durable."""
         with self._lock:
             if self._append_fh is not None:
+                if (self.fsync_policy in ("close", "group")
+                        and self._unsynced):
+                    self._fsync(self._append_fh)
                 self._append_fh.close()
                 self._append_fh = None
             if self._read_fh is not None:

@@ -26,8 +26,11 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
-                         WritingPattern)
+                         StorageScheme, WritingPattern)
 from .buffer_pool import BufferPool, PoolExhaustedError
+from .columnar import (ColumnarWriter, _col_view, _field_layout,
+                       columns_to_records, iter_column_blocks,
+                       records_to_columns)
 from .locality_set import LocalitySet, Page
 
 _HEADER = 8  # int64 record count at page start
@@ -49,6 +52,29 @@ def user_data_attrs() -> AttributeSet:
     node restart (warm recovery)."""
     return AttributeSet(durability=DurabilityType.WRITE_THROUGH,
                         writing=WritingPattern.SEQUENTIAL_WRITE)
+
+
+def columnar_job_data_attrs() -> AttributeSet:
+    """Job-data preset with the columnar storage scheme: the set's pages hold
+    column blocks, so the vectorized shuffle/aggregate paths stream whole
+    columns (``core/columnar.py``)."""
+    attrs = job_data_attrs()
+    attrs.storage = StorageScheme.COLUMNAR
+    return attrs
+
+
+def columnar_user_data_attrs() -> AttributeSet:
+    """Long-lived user data stored columnar (write-through durability rides
+    the same page-image log path — blocks are opaque payloads to it)."""
+    attrs = user_data_attrs()
+    attrs.storage = StorageScheme.COLUMNAR
+    return attrs
+
+
+def is_columnar(ls: LocalitySet) -> bool:
+    """Whether a locality set's pages hold column blocks (the per-set
+    ``AttributeSet.storage`` dimension selects the scheme)."""
+    return ls.attrs.storage is StorageScheme.COLUMNAR
 
 
 def as_record_bytes(records: np.ndarray, dtype: np.dtype) -> np.ndarray:
@@ -375,6 +401,145 @@ class ShuffleService:
         """Consumer is done with this partition: end the lifetime of its
         job-data pages (making them the cheapest eviction victims, paper §6)
         and drop the set, returning arena space to the pool."""
+        ls = self.partition_sets[partition_id]
+        ls.end_lifetime(self.pool.clock)
+        self.pool.drop_set(ls)
+
+
+class ColumnarShuffleService:
+    """Columnar twin of ``ShuffleService``: one columnar locality set per
+    partition, written block-at-a-time by per-(worker, partition)
+    ``ColumnarWriter`` handles. The fused map pass hands each writer an
+    already-routed *column slice* — ``add_columns`` memcpys it straight into
+    the partition's column block, no per-record work and no row
+    materialization anywhere on the map side. ``iter_partition`` streams the
+    blocks back out as zero-copy ``(columns, n)`` views (the reducer pull /
+    join probe feed). The same accounting surface as the row service
+    (``partition_records`` / ``partition_bytes``) keeps the locality-aware
+    scheduler working unchanged."""
+
+    def __init__(self, pool: BufferPool, name: str, num_partitions: int,
+                 dtype: np.dtype, page_size: int = 1 << 20,
+                 attrs_factory: Optional[Callable[[], AttributeSet]] = None):
+        self.pool = pool
+        self.dtype = np.dtype(dtype)
+        self.num_partitions = num_partitions
+        self.partition_sets: List[LocalitySet] = []
+        # one shared landing writer per partition, provisioned up front with
+        # its first page (the paper's pre-provisioned per-partition shuffle
+        # buffers) — map passes memcpy routed slices without any cold-start
+        # page allocation in the landing loop. Appends serialize under
+        # ``_lock``, consistent with the per-node CRC-chain contract.
+        self._writers: List[ColumnarWriter] = []
+        self._lock = threading.Lock()
+        for p in range(num_partitions):
+            attrs = attrs_factory() if attrs_factory else columnar_job_data_attrs()
+            ls = pool.create_set(f"{name}/part{p}", page_size, attrs)
+            ls.infer_from_service("shuffle", pool.clock)
+            self.partition_sets.append(ls)
+            w = ColumnarWriter(pool, ls, self.dtype)
+            w._open_page()
+            self._writers.append(w)
+        self.partition_records: List[int] = [0] * num_partitions
+        self.partition_bytes: List[int] = [0] * num_partitions
+        # per-partition, per-field incremental CRC32 of the routed column
+        # bytes, chained slice by slice in append order by the fused map pass.
+        # One chain per field keeps the fingerprint invariant to block
+        # boundaries, so consumers re-verify it block by block after the pull.
+        nfields = len(_field_layout(self.dtype))
+        self.partition_crcs: List[List[int]] = [
+            [0] * nfields for _ in range(num_partitions)]
+        self._released: set = set()
+
+    def get_writer(self, worker_id, partition_id: int) -> ColumnarWriter:
+        """The pre-provisioned landing writer for one partition (``worker_id``
+        is accepted for call-site compatibility; writers are shared, so
+        callers must serialize appends — ``add_columns``/``add_routed`` do)."""
+        return self._writers[partition_id]
+
+    def add_columns(self, worker_id, partition_id: int,
+                    columns: Dict[str, np.ndarray], n: int,
+                    start: int = 0) -> None:
+        """Append ``columns[start:start+n]`` to one partition (the routed
+        slice a fused dispatch pass produced)."""
+        if n == 0:
+            return
+        with self._lock:
+            self._writers[partition_id].append_columns(columns, n, start=start)
+            self.partition_records[partition_id] += n
+            self.partition_bytes[partition_id] += n * self.dtype.itemsize
+
+    def add_routed(self, worker_id, columns: Dict[str, np.ndarray],
+                   offsets: np.ndarray) -> None:
+        """Bulk landing: append every partition's routed slice in one call.
+        ``columns`` is partition-major (the fused dispatch output) and
+        ``offsets`` the ``num_partitions + 1`` slice boundaries. One lock
+        round-trip and one set of flat column views for the whole page,
+        instead of one of each per partition."""
+        itemsize = self.dtype.itemsize
+        flats = {name: _col_view(columns[name])
+                 for name, _, _, _ in _field_layout(self.dtype)}
+        bounds = offsets.tolist() if hasattr(offsets, "tolist") else offsets
+        with self._lock:
+            for p in range(self.num_partitions):
+                lo = bounds[p]
+                n = bounds[p + 1] - lo
+                if n == 0:
+                    continue
+                self._writers[p].append_flat(flats, n, start=lo)
+                self.partition_records[p] += n
+                self.partition_bytes[p] += n * itemsize
+
+    def add_gathered(self, worker_id, columns: Dict[str, np.ndarray],
+                     order: np.ndarray, offsets: np.ndarray) -> None:
+        """Fused landing (the map hot path): gather each partition's rows
+        from the source block straight into its pre-provisioned pages —
+        ``np.take(..., out=page_region)``, no routed intermediate — while
+        chaining the per-field partition CRCs over the landed bytes.
+        ``order``/``offsets`` are a ``host_dispatch_plan`` result over this
+        block's reducer ids."""
+        itemsize = self.dtype.itemsize
+        bounds = (offsets.tolist() if hasattr(offsets, "tolist")
+                  else list(offsets))
+        with self._lock:
+            for p in range(self.num_partitions):
+                lo, hi = bounds[p], bounds[p + 1]
+                if hi == lo:
+                    continue
+                self._writers[p].gather_append(columns, order, lo, hi,
+                                               self.partition_crcs[p])
+                self.partition_records[p] += hi - lo
+                self.partition_bytes[p] += (hi - lo) * itemsize
+
+    def finish_writes(self) -> None:
+        # each writer's close already marks its (1:1) partition set IDLE
+        for w in self._writers:
+            w.close()
+
+    def iter_partition(self, partition_id: int
+                       ) -> Iterator[Tuple[Dict[str, np.ndarray], int]]:
+        """Stream one partition's column blocks — zero-copy views valid only
+        until the next iteration; pinning each page faults spilled blocks
+        back through the pool (same pressure-safe contract as the row
+        service's small-page iterator)."""
+        yield from iter_column_blocks(
+            self.pool, self.partition_sets[partition_id], self.dtype)
+
+    def read_partition(self, partition_id: int) -> np.ndarray:
+        out = [columns_to_records(cols, self.dtype, n)
+               for cols, n in self.iter_partition(partition_id)]
+        if not out:
+            return np.empty(0, dtype=self.dtype)
+        return np.concatenate(out)
+
+    def release_partition(self, partition_id: int) -> None:
+        """End one partition's lifetime and drop its pages. Idempotent:
+        deferred-release pulls (``ClusterShuffle.pull_columns``) and failure
+        cleanup (``discard_map_output``) may both reach the same partition."""
+        with self._lock:
+            if partition_id in self._released:
+                return
+            self._released.add(partition_id)
         ls = self.partition_sets[partition_id]
         ls.end_lifetime(self.pool.clock)
         self.pool.drop_set(ls)
@@ -718,6 +883,42 @@ class JoinService:
         for f in self.probe_dtype.names:
             if f != self.probe_key:
                 out[f"p_{f}"] = precs[f]
+        return out
+
+    # -- columnar batches (PR 7) -----------------------------------------------
+    def build_columns(self, columns: Dict[str, np.ndarray], n: int) -> None:
+        """Build from a column block: the key column feeds the resident index
+        directly (no row decode); rows are materialized once for the spillable
+        build pages, which stay row-oriented so ``_fetch_build_rows``'s
+        page-grouped gather is unchanged."""
+        if n == 0:
+            return
+        self._key_chunks.append(
+            np.asarray(columns[self.build_key][:n], np.int64).copy())
+        self._writer.append_batch(columns_to_records(columns,
+                                                     self.build_dtype, n))
+        self.build_rows += n
+
+    def probe_columns(self, columns: Dict[str, np.ndarray],
+                      n: int) -> np.ndarray:
+        """Probe with a column block: the searchsorted match runs on the key
+        column as-is and output fields gather per column — no probe-side row
+        materialization at all (the columnar join hot path)."""
+        if n == 0 or self.build_rows == 0:
+            return np.empty(0, self.out_dtype)
+        pk = np.asarray(columns[self.probe_key][:n], np.int64)
+        probe_idx, build_rows = self._match_positions(pk)
+        if len(probe_idx) == 0:
+            return np.empty(0, self.out_dtype)
+        brecs = self._fetch_build_rows(build_rows)
+        out = np.empty(len(probe_idx), self.out_dtype)
+        out["key"] = pk[probe_idx]
+        for f in self.build_dtype.names:
+            if f != self.build_key:
+                out[f"b_{f}"] = brecs[f]
+        for f in self.probe_dtype.names:
+            if f != self.probe_key:
+                out[f"p_{f}"] = columns[f][:n][probe_idx]
         return out
 
     def close(self) -> None:

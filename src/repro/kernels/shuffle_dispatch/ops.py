@@ -10,6 +10,12 @@ import numpy as np
 from .kernel import combine_kernel, dispatch_kernel
 from .ref import combine_ref, dispatch_ref
 
+# Fused hash-partition + incremental-CRC host pass (PR 7): the numpy-only
+# implementation lives with the columnar page code so the cluster runtime can
+# fall back to it when this package's jax import is unavailable; re-exported
+# here so kernels/ stays the single import point for dispatch math.
+from ...core.columnar import fused_partition_crc as host_partition_crc  # noqa: F401,E402
+
 
 def host_dispatch_plan(partition_ids: np.ndarray, num_partitions: int
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -21,7 +27,9 @@ def host_dispatch_plan(partition_ids: np.ndarray, num_partitions: int
     partition_ids = np.asarray(partition_ids)
     order = np.argsort(partition_ids, kind="stable")
     counts = np.bincount(partition_ids, minlength=num_partitions)
-    offsets = np.concatenate([[0], np.cumsum(counts)])
+    offsets = np.empty(len(counts) + 1, np.int64)
+    offsets[0] = 0
+    np.cumsum(counts, out=offsets[1:])
     return order, counts, offsets
 
 

@@ -52,8 +52,14 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.attributes import AttributeSet
+from ..core.attributes import AttributeSet, StorageScheme
 from ..core.buffer_pool import BufferPool, SpillStore
+from ..core.columnar import (ColumnarWriter, ColumnLayout, _field_layout,
+                             columns_crc32, columns_to_records,
+                             fused_partition_crc, iter_column_blocks,
+                             read_all_columnar, read_block,
+                             records_to_columns, route_partition_ids,
+                             segment_sum)
 from ..core.locality_set import LocalitySet
 from ..core.memory_manager import MemoryManager, derive_staging_cap
 from ..core.pagelog import PageLog
@@ -63,8 +69,9 @@ from ..core.replication import (DistributedSet, PartitionScheme,
                                 record_content_checksum,
                                 recover_target_shard, replica_nodes,
                                 shard_checksum)
-from ..core.services import (_HEADER, HashService, PageIterator,
-                             SequentialWriter, ShuffleService,
+from ..core.services import (_HEADER, ColumnarShuffleService, HashService,
+                             PageIterator, SequentialWriter, ShuffleService,
+                             columnar_job_data_attrs, is_columnar,
                              job_data_attrs, read_all, user_data_attrs)
 from ..core.statistics import ReplicaInfo, StatisticsDB
 from .elastic import plan_remesh, remesh_partition_plan, surviving_node_ids
@@ -78,11 +85,40 @@ def _host_dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
     the device kernel version is preferred when importable."""
     order = np.argsort(partition_ids, kind="stable")
     counts = np.bincount(partition_ids, minlength=num_partitions)
-    offsets = np.concatenate([[0], np.cumsum(counts)])
+    offsets = np.empty(len(counts) + 1, np.int64)
+    offsets[0] = 0
+    np.cumsum(counts, out=offsets[1:])
     return order, counts, offsets
 
 
 _dispatch_plan_impl = None
+_dispatch_impl_name = "unresolved"
+
+
+def _resolve_dispatch_plan():
+    """Resolve the dispatch-plan implementation exactly once. A failed import
+    is not cached by Python, so retrying per batch would re-run the whole
+    failing jax import on every call — the PR-7 bugfix also records *which*
+    implementation won, so benchmarks can report it instead of the resolution
+    being silently swallowed."""
+    global _dispatch_plan_impl, _dispatch_impl_name
+    if _dispatch_plan_impl is None:
+        try:
+            from ..kernels.shuffle_dispatch.ops import host_dispatch_plan
+            _dispatch_plan_impl = host_dispatch_plan
+            _dispatch_impl_name = "kernels.shuffle_dispatch"
+        except ImportError:  # kernels need jax; the cluster runtime must not
+            _dispatch_plan_impl = _host_dispatch_plan
+            _dispatch_impl_name = "host-fallback"
+    return _dispatch_plan_impl
+
+
+def dispatch_impl() -> str:
+    """Which dispatch-plan implementation is active:
+    ``"kernels.shuffle_dispatch"`` (the kernel package imported cleanly) or
+    ``"host-fallback"`` (this module's numpy copy). Resolves on first call."""
+    _resolve_dispatch_plan()
+    return _dispatch_impl_name
 
 
 def dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
@@ -90,21 +126,59 @@ def dispatch_plan(partition_ids: np.ndarray, num_partitions: int):
     MoE shuffle-dispatch slot assignment (``kernels/shuffle_dispatch``), whose
     host-side helper is used when available; records land contiguously per
     partition: ``order[offsets[p]:offsets[p+1]]`` are partition ``p``'s rows."""
-    global _dispatch_plan_impl
-    if _dispatch_plan_impl is None:
-        # resolve once: a failed import is not cached by Python, so retrying
-        # per batch would re-run the whole failing jax import each call
+    return _resolve_dispatch_plan()(partition_ids, num_partitions)
+
+
+_partition_crc_impl = None
+_partition_crc_name = "unresolved"
+
+
+def _resolve_partition_crc():
+    """Same once-only resolution for the fused hash-partition + CRC pass:
+    prefer the kernel package's export, fall back to the numpy implementation
+    in ``core.columnar`` (they are the same host pass — the fallback exists so
+    the cluster runtime never needs the kernels package's jax import)."""
+    global _partition_crc_impl, _partition_crc_name
+    if _partition_crc_impl is None:
         try:
-            from ..kernels.shuffle_dispatch.ops import host_dispatch_plan
-            _dispatch_plan_impl = host_dispatch_plan
-        except ImportError:  # kernels need jax; the cluster runtime must not
-            _dispatch_plan_impl = _host_dispatch_plan
-    return _dispatch_plan_impl(partition_ids, num_partitions)
+            from ..kernels.shuffle_dispatch.ops import host_partition_crc
+            _partition_crc_impl = host_partition_crc
+            _partition_crc_name = "kernels.shuffle_dispatch"
+        except ImportError:
+            _partition_crc_impl = fused_partition_crc
+            _partition_crc_name = "core.columnar"
+    return _partition_crc_impl
+
+
+def partition_crc_impl() -> str:
+    """Which fused partition+CRC implementation is active (for benchmarks)."""
+    _resolve_partition_crc()
+    return _partition_crc_name
 
 
 class DeadNodeError(RuntimeError):
     """Raised when touching a node that has been killed and not recovered,
     and no surviving replica can stand in for it."""
+
+
+def _iter_record_chunks(pool, ls, dtype: np.dtype) -> Iterator[np.ndarray]:
+    """Stream a locality set as record-array chunks regardless of its storage
+    scheme: row pages decode in place (``PageIterator``), columnar pages
+    materialize each block's columns into rows. The scheme-neutral read path
+    the remesh stream and CRC verifiers share."""
+    if is_columnar(ls):
+        for cols, n in iter_column_blocks(pool, ls, dtype):
+            yield columns_to_records(cols, dtype, n)
+    else:
+        yield from PageIterator(pool, ls, dtype, sorted(ls.pages))
+
+
+def sharded_set_is_columnar(sset: "ShardedSet") -> bool:
+    """Whether a sharded set's shards are columnar (the storage-scheme
+    dimension of its remembered attrs factory; no factory means row)."""
+    if sset.attrs_factory is None:
+        return False
+    return sset.attrs_factory().storage is StorageScheme.COLUMNAR
 
 
 class StorageNode:
@@ -120,7 +194,8 @@ class StorageNode:
                  policy: str = "data-aware",
                  pressure_watermark: float = 0.85,
                  pagelog_dir: Optional[str] = None,
-                 epoch_fn=None):
+                 epoch_fn=None,
+                 pagelog_fsync: str = "none"):
         self.node_id = node_id
         self.capacity = capacity
         self.pressure_watermark = pressure_watermark
@@ -128,6 +203,7 @@ class StorageNode:
         self.policy = policy
         self.pagelog_dir = pagelog_dir
         self.epoch_fn = epoch_fn
+        self.pagelog_fsync = pagelog_fsync
         self.pool = self._build_pool()
         self.alive = True
 
@@ -135,7 +211,8 @@ class StorageNode:
         """Construct the pool, reopening the durable page log from disk when
         one is configured (construction replays its index — a revival with
         surviving log files IS the warm start)."""
-        pagelog = (PageLog(self.pagelog_dir, epoch_fn=self.epoch_fn)
+        pagelog = (PageLog(self.pagelog_dir, epoch_fn=self.epoch_fn,
+                           fsync_policy=self.pagelog_fsync)
                    if self.pagelog_dir else None)
         return BufferPool(self.capacity, SpillStore(self.spill_dir),
                           policy=self.policy,
@@ -157,14 +234,20 @@ class StorageNode:
                       dtype: np.dtype, page_size: int,
                       attrs: Optional[AttributeSet] = None) -> LocalitySet:
         ls = self.pool.create_set(set_name, page_size, attrs)
-        w = SequentialWriter(self.pool, ls, dtype)
+        if attrs is not None and attrs.storage is StorageScheme.COLUMNAR:
+            w = ColumnarWriter(self.pool, ls, dtype)
+        else:
+            w = SequentialWriter(self.pool, ls, dtype)
         if len(records):
             w.append_batch(records)
         w.close()
         return ls
 
     def read_records(self, set_name: str, dtype: np.dtype) -> np.ndarray:
-        return read_all(self.pool, self.pool.get_set(set_name), dtype)
+        ls = self.pool.get_set(set_name)
+        if ls.attrs.storage is StorageScheme.COLUMNAR:
+            return read_all_columnar(self.pool, ls, dtype)
+        return read_all(self.pool, ls, dtype)
 
 
 @dataclass
@@ -312,7 +395,8 @@ class Cluster:
                  admission_deadline_s: float = 0.05,
                  admission_timeout_s: float = 0.2,
                  pressure_watermark: float = 0.85,
-                 pagelog_dir: Optional[str] = None):
+                 pagelog_dir: Optional[str] = None,
+                 pagelog_fsync: str = "none"):
         if num_nodes < 2:
             raise ValueError("a cluster needs at least 2 nodes")
         self.num_nodes = num_nodes
@@ -336,6 +420,9 @@ class Cluster:
         # by default (their pages land in the log) and node recovery
         # warm-start from the revived node's replayed local index.
         self._pagelog_dir = pagelog_dir
+        # durability-vs-throughput knob forwarded to every node's PageLog
+        # (``core/pagelog.FSYNC_POLICIES``); "none" is the original behavior
+        self._pagelog_fsync = pagelog_fsync
         # stats must exist before the nodes: every node's page log stamps
         # its records with the cluster's topology/job event counter
         self.stats = StatisticsDB()
@@ -344,7 +431,8 @@ class Cluster:
                            policy=policy,
                            pressure_watermark=pressure_watermark,
                            pagelog_dir=self._node_pagelog_dir(n),
-                           epoch_fn=self.stats.current_epoch)
+                           epoch_fn=self.stats.current_epoch,
+                           pagelog_fsync=pagelog_fsync)
             for n in range(num_nodes)
         }
         # the manager/driver process's own memory authority: pure accounting
@@ -889,29 +977,42 @@ class Cluster:
             return False
         if set_name in pool.paging.sets:
             return True  # already adopted during this recovery
-        if not self._verify_log_crc(log, set_name, dtype, expect_crc):
+        columnar = (attrs is not None
+                    and attrs.storage is StorageScheme.COLUMNAR)
+        if not self._verify_log_crc(log, set_name, dtype, expect_crc,
+                                    columnar=columnar):
             return False
         pool.adopt_durable_set(set_name, page_size, attrs)
         return True
 
     @staticmethod
     def _verify_log_crc(log, set_name: str, dtype: np.dtype,
-                        expect: int) -> bool:
+                        expect: int, columnar: bool = False) -> bool:
         """CRC a set's record bytes directly from its durable-log page
         images (each payload is itself CRC-checked by ``PageLog.read``).
         Entries are visited in seq order — the same order adoption assigns
-        page ids, so the byte stream matches ``_verify_set_crc``'s."""
+        page ids, so the byte stream matches ``_verify_set_crc``'s. The
+        cataloged checksum is the row-major record CRC for *both* storage
+        schemes, so columnar payloads are decoded block -> records before
+        hashing (the layout is a pure function of dtype + page size, and a
+        logged payload is a whole page image)."""
         itemsize = np.dtype(dtype).itemsize
         crc = 0
         try:
             for entry in log.entries_for(set_name):
                 payload = log.read(set_name, entry.seq)
-                n = int(np.frombuffer(payload[:_HEADER], np.int64)[0])
-                body = payload[_HEADER:_HEADER + n * itemsize]
-                if len(body) != n * itemsize:
-                    return False
+                if columnar:
+                    layout = ColumnLayout.for_page(dtype, len(payload))
+                    cols, n = read_block(np.frombuffer(payload, np.uint8),
+                                         layout)
+                    body = columns_to_records(cols, dtype, n).tobytes()
+                else:
+                    n = int(np.frombuffer(payload[:_HEADER], np.int64)[0])
+                    body = payload[_HEADER:_HEADER + n * itemsize]
+                    if len(body) != n * itemsize:
+                        return False
                 crc = zlib.crc32(body, crc)
-        except (IOError, KeyError):
+        except (IOError, KeyError, ValueError):
             return False
         return (crc & 0xFFFFFFFF) == expect
 
@@ -979,7 +1080,7 @@ class Cluster:
         pool = self.nodes[holder].pool
         ls = pool.get_set(set_name)
         crc = 0
-        for chunk in PageIterator(pool, ls, dtype, sorted(ls.pages)):
+        for chunk in _iter_record_chunks(pool, ls, dtype):
             crc = zlib.crc32(np.ascontiguousarray(chunk).tobytes(), crc)
         return (crc & 0xFFFFFFFF) == expect
 
@@ -1038,24 +1139,25 @@ class Cluster:
             sset.scheme.num_partitions, len(sset.node_ids), alive)
         new_scheme = PartitionScheme(sset.scheme.name, sset.scheme.key_fn,
                                      num_parts, len(alive))
-        writers: Dict[int, SequentialWriter] = {}
+        writers: Dict[int, object] = {}
         crc = {nid: 0 for nid in alive}
         content = {nid: 0 for nid in alive}
         counts = {nid: 0 for nid in alive}
+        columnar = sharded_set_is_columnar(sset)
         for nid in alive:
             attrs = sset.attrs_factory() if sset.attrs_factory else None
             ls = self.node(nid).pool.create_set(
                 f"{sset.name}/shard{nid}@remesh", sset.page_size, attrs)
-            writers[nid] = SequentialWriter(self.node(nid).pool, ls,
-                                            sset.dtype)
+            writer_cls = ColumnarWriter if columnar else SequentialWriter
+            writers[nid] = writer_cls(self.node(nid).pool, ls, sset.dtype)
         base_net = self.net_bytes
         try:
             for n in sorted(sset.shards):
                 holder, set_name = sources[n]
                 src_pool = self.nodes[holder].pool
                 ls_src = src_pool.get_set(set_name)
-                for chunk in PageIterator(src_pool, ls_src, sset.dtype,
-                                          sorted(ls_src.pages)):
+                for chunk in _iter_record_chunks(src_pool, ls_src,
+                                                 sset.dtype):
                     # staged: the pinned chunk plus its routed copy below
                     with self.driver_memory.reserve(2 * chunk.nbytes):
                         slots = new_scheme.node_of_records(chunk)
@@ -1220,13 +1322,22 @@ class ClusterShuffle:
                  dtype: np.dtype, page_size: Optional[int] = None,
                  scheduler: Optional[ClusterScheduler] = None,
                  partition_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-                 admission: Optional[bool] = None):
+                 admission: Optional[bool] = None,
+                 columnar: bool = False):
         self.cluster = cluster
         self.name = name
         self.num_reducers = num_reducers
         self.dtype = np.dtype(dtype)
         self.page_size = page_size or cluster.page_size
         self.scheduler = scheduler or cluster.scheduler
+        # columnar mode (PR 7): map output lands in per-partition columnar
+        # sets via the fused hash-partition + CRC pass (``map_columns``), the
+        # reducer pull moves column blocks and re-verifies the chained
+        # per-partition CRC32, and ``stream_partition`` yields ``(columns,
+        # n)`` views instead of record arrays. The per-partition CRC chain
+        # assumes one mapper thread per node (writers on one node interleave
+        # block append order otherwise).
+        self.columnar = columnar
         # keys -> reducer partition override; the join path routes a shuffled
         # side by the *stationary* side's storage scheme so matching keys
         # land on the nodes whose build shards already sit there
@@ -1247,6 +1358,7 @@ class ClusterShuffle:
         self._services: Dict[int, ShuffleService] = {}
         self._svc_lock = threading.Lock()  # threaded mappers race creation
         self._pulled: Dict[int, Tuple[str, int]] = {}  # reducer -> (set, node)
+        self._deferred_release: set = set()  # reducers whose map-side drop waits
         # worker node -> shard-map work items it performed, for straggler
         # re-execution: (sset, shard_id, key_fn, transform, batch)
         self._work: Dict[int, List[tuple]] = {}
@@ -1278,14 +1390,21 @@ class ClusterShuffle:
                 self.name, self.num_reducers))
         return self.placement
 
-    def _service(self, node_id: int) -> ShuffleService:
+    def _service(self, node_id: int):
         with self._svc_lock:
             if node_id not in self._services:
-                self._services[node_id] = ShuffleService(
-                    self.cluster.node(node_id).pool,
-                    f"{self.name}/map{node_id}", self.num_reducers, self.dtype,
-                    page_size=self.page_size,
-                    attrs_factory=job_data_attrs)
+                if self.columnar:
+                    self._services[node_id] = ColumnarShuffleService(
+                        self.cluster.node(node_id).pool,
+                        f"{self.name}/map{node_id}", self.num_reducers,
+                        self.dtype, page_size=self.page_size,
+                        attrs_factory=columnar_job_data_attrs)
+                else:
+                    self._services[node_id] = ShuffleService(
+                        self.cluster.node(node_id).pool,
+                        f"{self.name}/map{node_id}", self.num_reducers,
+                        self.dtype, page_size=self.page_size,
+                        attrs_factory=job_data_attrs)
             return self._services[node_id]
 
     def partition_of_keys(self, keys: np.ndarray) -> np.ndarray:
@@ -1327,6 +1446,13 @@ class ClusterShuffle:
         its pool."""
         if len(records) == 0:
             return
+        if self.columnar:
+            # row-API compatibility for columnar shuffles (straggler replay
+            # re-feeds shard records through here): split once, then the
+            # fused column path
+            self.map_columns(node_id, records_to_columns(records),
+                             len(records), key_fn(records))
+            return
         parts = self.partition_of_keys(key_fn(records))
         order, counts, offsets = dispatch_plan(parts, self.num_reducers)
         routed = records[order]
@@ -1345,14 +1471,92 @@ class ClusterShuffle:
             if reservation is not None:
                 reservation.release()
 
+    def map_columns(self, node_id: int, columns: Dict[str, np.ndarray],
+                    n: int, keys: np.ndarray) -> None:
+        """Columnar map hot path: one fused hash-partition + gather +
+        incremental-CRC pass (``kernels.shuffle_dispatch.host_partition_crc``
+        when importable, ``core.columnar.fused_partition_crc`` otherwise)
+        routes a column batch, then each partition's contiguous column slice
+        is memcpy'd into that reducer's column blocks — no row
+        materialization anywhere on the map side. ``keys`` is the (view of
+        the) key column the reducer hash runs over; a ``partition_fn``
+        override (the join path's scheme routing) takes the unfused
+        dispatch-plan route with the same chained CRC."""
+        if not self.columnar:
+            raise ValueError("map_columns requires columnar=True")
+        if n == 0:
+            return
+        svc = self._service(node_id)
+        worker = (node_id, threading.get_ident())
+        nbytes = n * self.dtype.itemsize
+        reservation = self._paced_reservation(node_id, nbytes)
+        try:
+            if self.partition_fn is None:
+                # reducer hash -> narrow ids -> dispatch plan, then gather
+                # each partition's rows STRAIGHT into its landing pages
+                # (np.take with the page region as out) with the per-field
+                # CRC chains run over the landed bytes — the fused pass with
+                # zero intermediate copies (the ``fused_partition_crc``
+                # kernel materializing a routed block serves the non-landing
+                # callers and the roofline bench)
+                h = route_partition_ids(keys, self.num_reducers)
+                parts = (h.astype(np.uint8) if self.num_reducers <= 256
+                         else h.astype(np.int64))
+                order, counts, offsets = dispatch_plan(parts,
+                                                       self.num_reducers)
+                svc.add_gathered(worker, columns, order, offsets)
+            else:
+                parts = self.partition_fn(np.asarray(keys)[:n])
+                order, counts, offsets = dispatch_plan(parts,
+                                                       self.num_reducers)
+                routed = {f: np.take(np.asarray(col)[:n], order, axis=0)
+                          for f, col in columns.items()}
+                for r in range(self.num_reducers):
+                    lo, hi = int(offsets[r]), int(offsets[r + 1])
+                    if hi > lo:
+                        svc.partition_crcs[r] = columns_crc32(
+                            routed, self.dtype, lo, hi,
+                            svc.partition_crcs[r])
+                svc.add_routed(worker, routed, offsets)
+        finally:
+            if reservation is not None:
+                reservation.release()
+
     def map_shard(self, sset: ShardedSet, shard_id: int,
                   key_fn: Callable[[np.ndarray], np.ndarray],
                   transform: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-                  batch: int = 65536) -> int:
+                  batch: int = 65536,
+                  key_field: Optional[str] = None) -> int:
         """Run the map side for one shard on the node that holds its bytes
         (the primary owner, or a replica holder when the owner is down).
         Returns the worker node id; the work item is remembered so a
-        straggler's shards can be replayed elsewhere."""
+        straggler's shards can be replayed elsewhere.
+
+        Columnar fast path: when this shuffle is columnar, the shard's
+        primary is alive and stored columnar, and no record transform is
+        requested, blocks stream straight off the shard's pages into the
+        fused ``map_columns`` pass — ``key_field`` names the key column so
+        keys never require row materialization (without it the key batch is
+        materialized per block through ``key_fn``, the rest still moves as
+        columns)."""
+        if self.columnar and transform is None:
+            info = sset.shards[shard_id]
+            node = self.cluster.nodes[info.node_id]
+            if (node.alive and node.pool is not None
+                    and info.set_name in node.pool.paging.sets):
+                ls = node.pool.get_set(info.set_name)
+                if is_columnar(ls):
+                    total = 0
+                    for cols, n in iter_column_blocks(node.pool, ls,
+                                                      sset.dtype):
+                        keys = (cols[key_field] if key_field is not None
+                                else key_fn(columns_to_records(
+                                    cols, sset.dtype, n)))
+                        self.map_columns(info.node_id, cols, n, keys)
+                        total += n
+                    self._work.setdefault(info.node_id, []).append(
+                        (sset, shard_id, key_fn, transform, batch, total))
+                    return info.node_id
         worker, records = self.cluster.read_shard_from(sset, shard_id)
         if transform is not None:
             records = transform(records)
@@ -1487,7 +1691,14 @@ class ClusterShuffle:
         the whole partition, so a pull works even when the partition exceeds
         pool headroom), then release the map-side pages (lifetime ended —
         paper §6's cheapest victims). Spilled map output faults back in
-        transparently as its pages are pinned."""
+        transparently as its pages are pinned.
+
+        Columnar shuffles stage through ``pull_columns`` (raw block moves +
+        CRC re-verification) and materialize rows only here, for the
+        row-API consumer."""
+        if self.columnar:
+            cols, n = self.pull_columns(reducer)
+            return columns_to_records(cols, self.dtype, n)
         dst_node = self.cluster.node(self.reducer_node(reducer))
         dst = dst_node.node_id
         reduce_set = f"{self.name}/reduce{reducer}"
@@ -1514,20 +1725,144 @@ class ClusterShuffle:
         self._pulled[reducer] = (reduce_set, dst)
         return dst_node.read_records(reduce_set, self.dtype)
 
-    def stream_partition(self, reducer: int,
-                         dst_node: int) -> Iterator[np.ndarray]:
+    def pull_columns(self, reducer: int, materialize: bool = True,
+                     verify: bool = True
+                     ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Columnar reduce-side fetch: stream partition ``reducer``'s column
+        blocks from every map node to the reducer's node (block moves — no
+        per-record decode on either end), re-verifying each map node's
+        chained per-partition per-field CRC32 as the blocks drain
+        (byte-identical shuffle output is checked, not assumed; pass
+        ``verify=False`` to skip the second CRC pass when the caller
+        verifies the output itself). ``materialize=True`` additionally lands
+        the blocks in a columnar reduce set on the reducer's node so the
+        partition survives ``release``-then-reread; streaming consumers
+        (the vectorized aggregate) pass ``False`` and read the returned
+        arrays directly. Returns the partition as concatenated
+        ``(columns, n)``."""
+        if not self.columnar:
+            raise ValueError("pull_columns requires columnar=True")
+        dst_node = self.cluster.node(self.reducer_node(reducer))
+        dst = dst_node.node_id
+        writer = None
+        reduce_set = None
+        if materialize:
+            reduce_set = f"{self.name}/reduce{reducer}"
+            dst_pool = dst_node.pool
+            ls = dst_pool.create_set(reduce_set, self.page_size,
+                                     columnar_job_data_attrs())
+            writer = ColumnarWriter(dst_pool, ls, self.dtype)
+        services = sorted(self._services.items())
+        # the services already know the partition's exact size: preallocate
+        # the output columns once and charge admission once, instead of a
+        # per-block copy + reserve + final concat
+        total = sum(svc.partition_records[reducer] for _, svc in services)
+        fields = _field_layout(self.dtype)
+        out = {name: np.empty(total, fdt) for name, fdt, _, _ in fields}
+        reservation = (self._paced_reservation(dst, total * self.dtype.itemsize)
+                       or dst_node.memory.reserve(total * self.dtype.itemsize))
+        # streaming fast path copies raw column bytes block -> out through
+        # flat uint8 views (no per-block dtype view construction)
+        out_flat = {name: out[name].view(np.uint8).reshape(-1)
+                    for name, _, _, _ in fields}
+        pos = 0
+        local_bytes = net_bytes = 0
+        layout = ColumnLayout.for_page(self.dtype, self.page_size)
+        try:
+            for node_id, svc in services:
+                crcs = [0] * len(svc.partition_crcs[reducer]) if verify \
+                    else None
+                pos0 = pos
+                ls = svc.partition_sets[reducer]
+                pool = svc.pool
+                ls.infer_from_service("sequential-read", pool.clock)
+                for pid in sorted(ls.pages):
+                    page = ls.pages[pid]
+                    view = pool.pin(page)
+                    try:
+                        n = int(view[:8].view(np.int64)[0])
+                        if not n:
+                            continue
+                        if writer is not None or verify:
+                            cols, n = read_block(view, layout)
+                            if writer is not None:
+                                writer.append_columns(cols, n)
+                            if verify:
+                                columns_crc32(cols, self.dtype, 0, n, crcs)
+                        for name, _, _, w in fields:
+                            off = layout.field_offs[name]
+                            out_flat[name][pos * w:(pos + n) * w] = \
+                                view[off:off + n * w]
+                        pos += n
+                    finally:
+                        pool.unpin(page)
+                nbytes = (pos - pos0) * self.dtype.itemsize
+                if node_id == dst:
+                    local_bytes += nbytes
+                else:
+                    net_bytes += nbytes
+                if verify and crcs != svc.partition_crcs[reducer]:
+                    want = "/".join(f"{c:#010x}"
+                                    for c in svc.partition_crcs[reducer])
+                    got = "/".join(f"{c:#010x}" for c in crcs)
+                    raise ValueError(
+                        f"{self.name}: partition {reducer} bytes from map "
+                        f"node {node_id} fail CRC re-verification "
+                        f"({got} != {want})")
+        except BaseException:
+            # a failed verify must not strand a half-built reduce set on
+            # the destination — drop it so the caller can re-pull once the
+            # (still intact, release is deferred) map output is repaired
+            if writer is not None:
+                writer.close()
+                dst_node.pool.drop_set(dst_node.pool.get_set(reduce_set))
+            raise
+        finally:
+            reservation.release()
+        if local_bytes:
+            self.cluster.add_local_bytes(local_bytes)
+        if net_bytes:
+            self.cluster.add_net_bytes(net_bytes)
+        if writer is not None:
+            writer.close()
+        # map-side release is deferred to ``release_reducer``: the drop
+        # stays off the pull critical path, and a CRC failure above leaves
+        # the map output intact for a re-pull.
+        self._deferred_release.add(reducer)
+        self._pulled[reducer] = (reduce_set, dst)
+        return out, pos
+
+    def pull_columns_async(self, reducer: int, after: Sequence = (),
+                           materialize: bool = True, verify: bool = True):
+        """``pull_async``'s columnar twin: submit ``pull_columns(reducer)``
+        to the transfer engine with the same lazy destination/byte
+        declarations."""
+        return self.cluster.transfer.submit(
+            self.pull_columns, reducer, materialize, verify, after=after,
+            label=f"{self.name}/pull{reducer}",
+            dest=lambda: self.reducer_node(reducer),
+            nbytes=lambda: sum(self.cluster.stats.shuffle_partition_bytes(
+                self.name, reducer).values()))
+
+    def stream_partition(self, reducer: int, dst_node: int) -> Iterator:
         """Stream partition ``reducer`` straight off every map node's shuffle
         service, small-page by small-page, with byte accounting against
         ``dst_node`` as the consumer — no reducer-set staging at all. This is
         the join path's probe feed: chunks go directly into the join tables.
-        Yielded arrays are views valid only until the next iteration (copy to
-        retain); call ``release_partition`` once the consumer is done."""
+        Row shuffles yield record arrays; columnar shuffles yield
+        ``(columns, n)`` block views. Yielded arrays are views valid only
+        until the next iteration (copy to retain); call ``release_partition``
+        once the consumer is done."""
         for node_id, svc in sorted(self._services.items()):
             for chunk in svc.iter_partition(reducer):
-                if node_id == dst_node:
-                    self.cluster.add_local_bytes(chunk.nbytes)
+                if self.columnar:
+                    nbytes = chunk[1] * self.dtype.itemsize
                 else:
-                    self.cluster.add_net_bytes(chunk.nbytes)
+                    nbytes = chunk.nbytes
+                if node_id == dst_node:
+                    self.cluster.add_local_bytes(nbytes)
+                else:
+                    self.cluster.add_net_bytes(nbytes)
                 yield chunk
 
     def release_partition(self, reducer: int) -> None:
@@ -1552,7 +1887,12 @@ class ClusterShuffle:
                 self.name, reducer).values()))
 
     def release_reducer(self, reducer: int) -> None:
-        """Drop a pulled reduce partition once the reducer has consumed it."""
+        """Drop a pulled reduce partition once the reducer has consumed it
+        (plus the map-side partition pages whose release ``pull_columns``
+        deferred)."""
+        if reducer in self._deferred_release:
+            self._deferred_release.discard(reducer)
+            self.release_partition(reducer)
         name, dst = self._pulled.pop(reducer, (None, None))
         if name is None:
             return
@@ -1589,7 +1929,15 @@ def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
       synchronous path — results are identical).
 
     Reducer outputs are disjoint by construction (keys are routed by hash),
-    so the merge is a concatenate + sort."""
+    so the merge is a concatenate + sort.
+
+    Columnar sharded sets take the vectorized hot path (PR 7): the map side
+    streams each shard's blocks and feeds ``{key, val}`` column *views*
+    through the fused partition+CRC pass (zero row materialization), pulls
+    move column blocks, and the reduce is a ``segment_sum`` (``np.unique`` +
+    ``np.add.at``) instead of per-record open-addressing inserts. Note the
+    float accumulation order differs from ``HashService`` (exact equality
+    holds for integer-valued sums)."""
     scheduler = scheduler or cluster.scheduler
     num_reducers = num_reducers or cluster.num_nodes
     pair = HashService.PAIR_DTYPE
@@ -1612,6 +1960,19 @@ def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
         node.pool.drop_set(hs.ls)
         return k, v
 
+    def shard_blocks_columnar(target: ShardedSet, n: int):
+        """The shard's block iterator when its alive primary is columnar
+        (the zero-materialization feed), else None (row/replica fallback)."""
+        info = target.shards[n]
+        node = cluster.nodes[info.node_id]
+        if (node.alive and node.pool is not None
+                and info.set_name in node.pool.paging.sets):
+            ls = node.pool.get_set(info.set_name)
+            if is_columnar(ls):
+                return info.node_id, iter_column_blocks(node.pool, ls,
+                                                        target.dtype)
+        return None
+
     keys_out: List[np.ndarray] = []
     vals_out: List[np.ndarray] = []
     if plan.shuffle_free and not force_shuffle:
@@ -1622,37 +1983,88 @@ def cluster_hash_aggregate(cluster: Cluster, sset: ShardedSet,
         target = (cluster.catalog.get(plan.target_name, sset)
                   if plan.target_name else sset)
         for n in sorted(target.shards):
-            holder, shard = cluster.read_shard_from(target, n)
-            k, v = aggregate(cluster.node(holder), f"local{n}",
-                             to_pairs(shard))
+            blocks = shard_blocks_columnar(target, n)
+            if blocks is not None:
+                # vectorized shard-local reduce straight off the column
+                # blocks — segment_sum per block, then one more merge pass
+                # over the (tiny) per-block partials
+                _holder, it = blocks
+                pk: List[np.ndarray] = []
+                pv: List[np.ndarray] = []
+                for cols, cnt in it:
+                    bk, bv = segment_sum(cols[key_field], cols[val_field])
+                    pk.append(bk)
+                    pv.append(bv)
+                k, v = (segment_sum(np.concatenate(pk), np.concatenate(pv))
+                        if pk else (np.empty(0, np.int64),
+                                    np.empty(0, np.float64)))
+            else:
+                holder, shard = cluster.read_shard_from(target, n)
+                k, v = aggregate(cluster.node(holder), f"local{n}",
+                                 to_pairs(shard))
             keys_out.append(k)
             vals_out.append(v)
     else:
+        columnar = sharded_set_is_columnar(sset)
         sh = ClusterShuffle(cluster, f"{sset.name}.agg", num_reducers, pair,
-                            scheduler=scheduler)
+                            scheduler=scheduler, columnar=columnar)
         for n in sorted(sset.shards):
             t0 = time.perf_counter()
-            worker = sh.map_shard(sset, n, key_fn=lambda p: p["key"],
-                                  transform=to_pairs)
+            blocks = shard_blocks_columnar(sset, n) if columnar else None
+            if blocks is not None:
+                # fused map over {key, val} column views of each block; the
+                # block writer memcpys raw bytes, so the views must already
+                # carry the pair dtype's field types (cast is a no-op when
+                # they match — the common case)
+                worker, it = blocks
+                kdt = pair.fields["key"][0]
+                vdt = pair.fields["val"][0]
+                total = 0
+                for cols, cnt in it:
+                    kc, vc = cols[key_field], cols[val_field]
+                    if kc.dtype != kdt:
+                        kc = kc.astype(kdt)
+                    if vc.dtype != vdt:
+                        vc = vc.astype(vdt)
+                    sh.map_columns(worker, {"key": kc, "val": vc}, cnt, kc)
+                    total += cnt
+                sh._work.setdefault(worker, []).append(
+                    (sset, n, lambda p: p["key"], to_pairs, 65536, total))
+            else:
+                worker = sh.map_shard(sset, n, key_fn=lambda p: p["key"],
+                                      transform=to_pairs)
             if step_timer is not None:
                 step_timer.record(worker, time.perf_counter() - t0)
         if step_timer is not None:
             sh.reexecute_stragglers(step_timer.stragglers(min_samples=1))
+        if columnar:
+            # the reduce consumes the pulled columns in place — skip the
+            # reduce-set materialization, keep the CRC re-verification
+            puller = lambda r: sh.pull_columns(r, materialize=False)
+            puller_async = lambda r, after: sh.pull_columns_async(
+                r, after=after, materialize=False)
+        else:
+            puller = sh.pull
+            puller_async = lambda r, after: sh.pull_async(r, after=after)
         if async_pull:
             engine = cluster.transfer
             fin = sh.finish_maps_async(engine)
             placed = engine.submit(sh.place_reducers_locally, after=fin,
                                    label=f"{sh.name}/place")
-            futures = [sh.pull_async(r, after=[placed])
+            futures = [puller_async(r, after=[placed])
                        for r in range(num_reducers)]
             pulls = (fut.result() for fut in futures)
         else:
             sh.finish_maps()
             sh.place_reducers_locally()
-            pulls = (sh.pull(r) for r in range(num_reducers))
+            pulls = (puller(r) for r in range(num_reducers))
         for r, pulled in enumerate(pulls):
-            node = cluster.node(sh.reducer_node(r))
-            k, v = aggregate(node, r, pulled)
+            if columnar:
+                cols, cnt = pulled
+                k, v = segment_sum(cols["key"][:cnt], cols["val"][:cnt])
+            else:
+                node = cluster.node(sh.reducer_node(r))
+                k, v = aggregate(node, r, pulled)
             sh.release_reducer(r)
             keys_out.append(k)
             vals_out.append(v)

@@ -37,7 +37,8 @@ from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.services import JoinService, canonical_join_sort
+from ..core.columnar import iter_column_blocks
+from ..core.services import JoinService, canonical_join_sort, is_columnar
 from .scheduler import ClusterScheduler, JoinPlan
 from .watchdog import StepTimer
 
@@ -103,21 +104,35 @@ class ClusterJoin:
 
     # -- shared executor -------------------------------------------------------
     def _run_join(self, node, tag: str, build_dtype, probe_dtype,
-                  build_chunks: Iterable[np.ndarray],
-                  probe_chunks: Iterable[np.ndarray]) -> np.ndarray:
+                  build_chunks: Iterable, probe_chunks: Iterable) -> np.ndarray:
         """One node-local hash join: build chunks reserve-charged into pool
-        pages (spillable), probe chunks streamed through the table."""
+        pages (spillable), probe chunks streamed through the table. Chunks
+        are polymorphic over the storage scheme (PR 7): a record array goes
+        through ``build_batch``/``probe_batch``, a ``(columns, n)`` block
+        tuple through the columnar twins — probe blocks run the searchsorted
+        match on the raw key column and gather output per column, with no
+        probe-side row materialization."""
         js = JoinService(node.pool, f"{self._name}/tbl{tag}", build_dtype,
                          probe_dtype, self.key_field, self.key_field,
                          page_size=self.page_size)
         for chunk in build_chunks:
-            with node.memory.reserve(chunk.nbytes):
-                js.build_batch(chunk)
+            if isinstance(chunk, tuple):
+                cols, n = chunk
+                with node.memory.reserve(n * js.build_dtype.itemsize):
+                    js.build_columns(cols, n)
+            else:
+                with node.memory.reserve(chunk.nbytes):
+                    js.build_batch(chunk)
         js.finish_build()
         outs = []
         for chunk in probe_chunks:
-            with node.memory.reserve(chunk.nbytes):
-                out = js.probe_batch(chunk)
+            if isinstance(chunk, tuple):
+                cols, n = chunk
+                with node.memory.reserve(n * js.probe_dtype.itemsize):
+                    out = js.probe_columns(cols, n)
+            else:
+                with node.memory.reserve(chunk.nbytes):
+                    out = js.probe_batch(chunk)
             if len(out):
                 outs.append(out)
         empty = np.empty(0, js.out_dtype)
@@ -128,24 +143,51 @@ class ClusterJoin:
         """The aggregation path's map side, verbatim: each shard maps on the
         node holding its bytes (replica holders for dead owners), per-shard
         times feed the straggler detector, and flagged mappers re-execute
-        from replica holders before byte statistics are published."""
+        from replica holders before byte statistics are published. On a
+        columnar shuffle, ``key_field`` routes each shard's blocks through
+        the fused partition+CRC pass without materializing rows."""
         for n in sorted(sset.shards):
             t0 = time.perf_counter()
             worker = sh.map_shard(sset, n,
-                                  key_fn=lambda r: r[self.key_field])
+                                  key_fn=lambda r: r[self.key_field],
+                                  key_field=self.key_field)
             if self.step_timer is not None:
                 self.step_timer.record(worker, time.perf_counter() - t0)
         if self.step_timer is not None:
             report.stragglers_redone.extend(sh.reexecute_stragglers(
                 self.step_timer.stragglers(min_samples=1)))
 
+    def _columnar_shard_blocks(self, t, n: int):
+        """``(holder, block_iterator)`` when shard ``n``'s alive primary is
+        stored columnar (the zero-materialization feed), else None — dead
+        owners and row shards take the record read path."""
+        info = t.shards[n]
+        node = self.cluster.nodes[info.node_id]
+        if (node.alive and node.pool is not None
+                and info.set_name in node.pool.paging.sets):
+            ls = node.pool.get_set(info.set_name)
+            if is_columnar(ls):
+                return info.node_id, iter_column_blocks(node.pool, ls,
+                                                        t.dtype)
+        return None
+
     # -- the three plans -------------------------------------------------------
     def _co_partitioned(self, bt, pt, report: JoinReport) -> List[np.ndarray]:
         """Both sides aligned on the key: node-local shard-pair joins, zero
         network bytes (replica fallback for a dead owner is the only thing
-        that can move data, and it is counted when it does)."""
+        that can move data, and it is counted when it does). Columnar shard
+        pairs stream block-by-block straight into the join tables — the
+        probe side never materializes rows at all."""
         outs = []
         for n in sorted(bt.shards):
+            bfast = self._columnar_shard_blocks(bt, n)
+            pfast = self._columnar_shard_blocks(pt, n)
+            if (bfast is not None and pfast is not None
+                    and bfast[0] == pfast[0]):
+                node = self.cluster.node(bfast[0])
+                outs.append(self._run_join(node, f"co{n}", bt.dtype,
+                                           pt.dtype, bfast[1], pfast[1]))
+                continue
             bholder, brecs = self.cluster.read_shard_from(bt, n)
             pholder, precs = self.cluster.read_shard_from(pt, n)
             if pholder != bholder:
@@ -163,7 +205,8 @@ class ClusterJoin:
         """Anchor side stays put; the moving side shuffles routed by the
         anchor's scheme, then streams partition-by-partition into join
         tables built from the anchor's local shards."""
-        from .cluster import ClusterShuffle  # local: cluster imports scheduler
+        from .cluster import (ClusterShuffle,  # local: cluster imports scheduler
+                              sharded_set_is_columnar)
         anchor_t, moving_t = (bt, pt) if plan.anchor == "build" else (pt, bt)
         moving_side = plan.shuffle_sides[0]
         sh = ClusterShuffle(
@@ -171,24 +214,29 @@ class ClusterJoin:
             moving_t.dtype, page_size=self.page_size,
             scheduler=self.scheduler,
             partition_fn=lambda keys: scheme_slot_of_keys(
-                keys, anchor_t.scheme))
+                keys, anchor_t.scheme),
+            columnar=sharded_set_is_columnar(moving_t))
         self._map_moving_side(sh, moving_t, report)
         sh.finish_maps()
         report.shuffled_bytes[moving_side] = \
             self.cluster.stats.total_shuffle_bytes(sh.name)
         outs = []
         for r, nid in enumerate(anchor_t.node_ids):
-            aholder, arecs = self.cluster.read_shard_from(anchor_t, nid)
+            afast = self._columnar_shard_blocks(anchor_t, nid)
+            if afast is not None:
+                aholder = afast[0]
+                anchor_chunks: Iterable = afast[1]
+            else:
+                aholder, arecs = self.cluster.read_shard_from(anchor_t, nid)
+                anchor_chunks = _batches(arecs, self.batch)
             node = self.cluster.node(aholder)
             moving_chunks = sh.stream_partition(r, dst_node=aholder)
             if plan.anchor == "build":
                 out = self._run_join(node, f"r{r}", bt.dtype, pt.dtype,
-                                     _batches(arecs, self.batch),
-                                     moving_chunks)
+                                     anchor_chunks, moving_chunks)
             else:
                 out = self._run_join(node, f"r{r}", bt.dtype, pt.dtype,
-                                     moving_chunks,
-                                     _batches(arecs, self.batch))
+                                     moving_chunks, anchor_chunks)
             sh.release_partition(r)
             outs.append(out)
         self.cluster.stats.clear_shuffle(sh.name)
@@ -198,14 +246,16 @@ class ClusterJoin:
         """Neither side is partitioned on the key: repartition both to a
         common hash layout; reducer placement follows the combined build +
         probe byte statistics with the pressure discount."""
-        from .cluster import ClusterShuffle
+        from .cluster import ClusterShuffle, sharded_set_is_columnar
         R = self.num_reducers or len(self.cluster.alive_node_ids())
         shb = ClusterShuffle(self.cluster, f"{self._name}.b", R, bt.dtype,
                              page_size=self.page_size,
-                             scheduler=self.scheduler)
+                             scheduler=self.scheduler,
+                             columnar=sharded_set_is_columnar(bt))
         shp = ClusterShuffle(self.cluster, f"{self._name}.p", R, pt.dtype,
                              page_size=self.page_size,
-                             scheduler=self.scheduler)
+                             scheduler=self.scheduler,
+                             columnar=sharded_set_is_columnar(pt))
         self._map_moving_side(shb, bt, report)
         self._map_moving_side(shp, pt, report)
         shb.finish_maps()

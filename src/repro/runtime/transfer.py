@@ -36,8 +36,8 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.attributes import AttributeSet
-from ..core.services import PageIterator, SequentialWriter
+from ..core.attributes import AttributeSet, StorageScheme
+from ..core.services import _HEADER, PageIterator, SequentialWriter
 
 
 def copy_set(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
@@ -48,14 +48,24 @@ def copy_set(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
     write on the destination. Each in-flight chunk is charged to the
     destination's MemoryManager (``reserve``) so replica creation and
     recovery copies show up in the same pressure accounting as shuffle pulls
-    and remesh streams."""
+    and remesh streams.
+
+    Row sets decode records per page (the destination re-packs them);
+    columnar sets (and sources whose pages already are column blocks) take
+    :func:`copy_set_raw` instead — page images move as raw buffers with no
+    per-record decode/encode at either end."""
+    src_ls = src_pool.get_set(src_set_name)
+    if (src_ls.attrs.storage is StorageScheme.COLUMNAR
+            or (attrs is not None
+                and attrs.storage is StorageScheme.COLUMNAR)):
+        return copy_set_raw(src_pool, src_set_name, dst_pool, dst_set_name,
+                            np.dtype(dtype), attrs)
     dtype = np.dtype(dtype)
-    ls_src = src_pool.get_set(src_set_name)
     ls_dst = dst_pool.create_set(dst_set_name, page_size, attrs)
     writer = SequentialWriter(dst_pool, ls_dst, dtype)
     memory = getattr(dst_pool, "memory", None)
     moved = 0
-    for recs in PageIterator(src_pool, ls_src, dtype, sorted(ls_src.pages)):
+    for recs in PageIterator(src_pool, src_ls, dtype, sorted(src_ls.pages)):
         reservation = memory.reserve(recs.nbytes) if memory is not None else None
         try:
             writer.append_batch(recs)
@@ -64,6 +74,41 @@ def copy_set(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
                 reservation.release()
         moved += recs.nbytes
     writer.close()
+    return moved
+
+
+def copy_set_raw(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
+                 dtype: np.dtype, attrs: Optional[AttributeSet] = None) -> int:
+    """Move a set between pools as raw page images: pin source page, alloc an
+    equally sized destination page, one memcpy, unpin dirty. No per-record
+    pickling or decode — the columnar fast wire (a column block is
+    position-dependent inside its page, so the image must move whole; the
+    destination set inherits the source's page size for the same reason).
+    Returns the *logical* record bytes moved (each block's ``count`` header
+    times the record width) so net-byte accounting stays comparable with the
+    row path."""
+    dtype = np.dtype(dtype)
+    ls_src = src_pool.get_set(src_set_name)
+    ls_dst = dst_pool.create_set(dst_set_name, ls_src.page_size, attrs)
+    memory = getattr(dst_pool, "memory", None)
+    moved = 0
+    for pid in sorted(ls_src.pages):
+        page = ls_src.pages[pid]
+        src_view = src_pool.pin(page)
+        try:
+            reservation = (memory.reserve(page.size)
+                           if memory is not None else None)
+            try:
+                dst_page = dst_pool.new_page(ls_dst, size=page.size)
+                dst_pool.view(dst_page)[:] = src_view
+                dst_pool.unpin(dst_page, dirty=True)
+            finally:
+                if reservation is not None:
+                    reservation.release()
+            n = int(src_view[:_HEADER].view(np.int64)[0])
+            moved += n * dtype.itemsize
+        finally:
+            src_pool.unpin(page)
     return moved
 
 
