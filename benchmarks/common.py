@@ -24,7 +24,12 @@ from typing import Callable, Dict, List, Optional
 # CRC-verified byte-identical output) and the fused partition+CRC roofline
 # row (roofline/fused_partition_crc: achieved GB/s vs the memory-bound
 # ceiling) joined the cluster artifact
-SCHEMA_VERSION = 6
+# v7: process-data-plane rows (shuffle/cluster4node/procplane/{overlap,
+# overcap}/{inproc,proc,gain}: durable end-to-end pipelines timed wall-clock
+# min-of-N on both backends, and recovery/cluster4node/procplane/sigkill:
+# a node process SIGKILLed between map and reduce with byte-identical
+# output via replica re-execution) joined the cluster artifact
+SCHEMA_VERSION = 7
 
 ROWS: List[dict] = []
 

@@ -34,7 +34,8 @@ def main(argv=None) -> None:
     if args.smoke:
         os.environ["BENCH_SMOKE"] = "1"
 
-    from . import bench_join, bench_recovery, bench_shuffle
+    from . import (bench_join, bench_procplane, bench_recovery,
+                   bench_shuffle)
     from .common import write_results_json
 
     print("name,us_per_call,derived")
@@ -50,6 +51,7 @@ def main(argv=None) -> None:
         bench_kmeans.run()        # Fig. 2
         bench_replicas.run()      # Fig. 4
         bench_recovery.run()      # Fig. 5 + elastic degrade
+        bench_procplane.run()     # process data plane vs in-process
         print("\n# roofline (per-device terms from the dry-run; see "
               "EXPERIMENTS.md)")
         roofline.run(write_csv=True)
@@ -59,6 +61,7 @@ def main(argv=None) -> None:
         bench_shuffle.run()
         bench_join.run()
         bench_recovery.run()
+        bench_procplane.run()
         roofline.run_fused()
     write_results_json(args.json_out, prefixes=CLUSTER_PREFIXES)
 

@@ -10,6 +10,11 @@ nothing needs to move — paper §9.2.2), re-runs the aggregation over a
 columnar-scheme set asserting bit-identical output, then kills a node and
 recovers its shards from replicas with checksum verification.
 
+The finale re-runs a shuffle on the **process data plane**
+(``backend="proc"`` — one OS process per node, shared-memory page path,
+docs/ARCHITECTURE.md §8), SIGKILLs a node mid-shuffle, and still drains a
+byte-identical result before ``close()`` proves nothing leaked.
+
 Run: PYTHONPATH=src python examples/cluster_quickstart.py
 """
 import numpy as np
@@ -105,6 +110,30 @@ def main() -> None:
     restored = cluster.read_sharded(sset)
     assert np.array_equal(np.sort(restored["key"]), np.sort(records["key"]))
     print("restored dataset byte-identical to the original")
+
+    # --- the same API on real OS processes ---------------------------------
+    # backend="proc" forks one process per node: control messages ride a
+    # socket, page payloads ride shared-memory arenas (zero pickling), and
+    # a SIGKILL is a real kill — the shuffle below loses a node between map
+    # and reduce and recovers byte-identically from chain replicas.
+    proc = Cluster(num_nodes=4, backend="proc", node_capacity=32 << 20,
+                   page_size=1 << 16, replication_factor=2)
+    psset = proc.create_sharded_set("sales", records,
+                                    key_fn=lambda r: r["key"])
+    shuffle = proc.shuffle("agg", num_reducers=8, dtype=REC)
+    shuffle.map_sharded(psset, key_field="key")
+    shuffle.finish_maps()
+    proc.kill_node(1)                    # SIGKILL, mid-shuffle
+    shuffle.place_reducers_locally()
+    drained = np.concatenate([shuffle.pull(r) for r in range(8)])
+    assert np.array_equal(np.sort(drained, order=("key", "val")),
+                          np.sort(records, order=("key", "val")))
+    print("proc backend: node 1 SIGKILLed between map and reduce; "
+          "replica re-execution drained a byte-identical shuffle")
+    report = proc.close()
+    assert report.ok, report
+    print(f"proc backend closed clean: {len(report.orphan_processes)} "
+          f"orphan processes, {len(report.leaked_segments)} leaked segments")
 
 
 if __name__ == "__main__":

@@ -393,6 +393,23 @@ def iter_column_blocks(pool: BufferPool, ls: LocalitySet, dtype: np.dtype
             pool.unpin(page)
 
 
+def set_column_crcs(pool: BufferPool, ls: LocalitySet,
+                    dtype: np.dtype) -> List[int]:
+    """Per-field CRC chains over a columnar set's stored blocks in page
+    order — the read-side twin of the map pass's ``partition_crcs`` chain.
+    Because the chains are split-invariant, a set rebuilt from raw page
+    images (replica copy, shm import across the process data plane) yields
+    the writer's exact fingerprint iff every block landed intact and in
+    order."""
+    dtype = np.dtype(dtype)
+    crcs: Optional[List[int]] = None
+    for cols, n in iter_column_blocks(pool, ls, dtype):
+        crcs = columns_crc32(cols, dtype, 0, n, crcs)
+    if crcs is None:
+        crcs = [0] * len(_field_layout(dtype))
+    return crcs
+
+
 def read_all_columnar(pool: BufferPool, ls: LocalitySet,
                       dtype: np.dtype) -> np.ndarray:
     """Materialize a columnar set back into a record array (the read-path

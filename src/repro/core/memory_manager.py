@@ -492,6 +492,15 @@ class MemoryManager:
                 "forced": self.admission.forced,
                 "waiting": self.admission.waiting,
                 **self.stats,
+                **(
+                    {
+                        "pagelog_bytes": self.pagelog.file_bytes(),
+                        "pagelog_amplification": self.pagelog.amplification(),
+                        "pagelog_generation": self.pagelog.generation,
+                        "pagelog_compactions": self.pagelog.compactions,
+                    }
+                    if self.pagelog is not None else {}
+                ),
             }
 
     def close(self) -> None:

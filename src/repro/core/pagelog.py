@@ -49,8 +49,11 @@ _TAIL = struct.Struct("<qqHIB")
 FLAG_DATA = 0
 FLAG_TOMBSTONE = 1   # drops every prior entry of the named set
 FLAG_RENAME = 2      # payload = old set name; entries move to the new name
+FLAG_GENERATION = 3  # payload = u64 generation number; first record of a
+#                      compacted log file (never indexed)
 
 LOG_FILENAME = "pages.log"
+COMPACT_TMP_FILENAME = "pages.log.compact"
 
 # Durability-vs-throughput knob (ROADMAP §4 follow-up). ``none`` preserves
 # the original behavior: records are flushed to the OS but never fsync'd
@@ -146,14 +149,22 @@ class PageLog:
                  epoch_fn: Optional[Callable[[], int]] = None,
                  index_buckets: int = 16,
                  fsync_policy: str = "none",
-                 group_bytes: int = 1 << 20):
+                 group_bytes: int = 1 << 20,
+                 compact_threshold: Optional[float] = None,
+                 compact_min_bytes: int = 256 << 10,
+                 compact_interval_s: Optional[float] = None):
         if fsync_policy not in FSYNC_POLICIES:
             raise ValueError(f"fsync_policy must be one of {FSYNC_POLICIES}, "
                              f"got {fsync_policy!r}")
+        if compact_threshold is not None and compact_threshold <= 1.0:
+            raise ValueError("compact_threshold is a file/live amplification "
+                             "ratio and must be > 1.0")
         self.directory = directory
         self.epoch_fn = epoch_fn
         self.fsync_policy = fsync_policy
         self.group_bytes = group_bytes
+        self.compact_threshold = compact_threshold
+        self.compact_min_bytes = compact_min_bytes
         os.makedirs(directory, exist_ok=True)
         self.path = os.path.join(directory, LOG_FILENAME)
         self.index = ConsistentHashIndex(index_buckets)
@@ -165,7 +176,20 @@ class PageLog:
         self.fsync_count = 0     # observable: tests assert group batching
         self._unsynced = 0       # bytes appended since the last fsync
         self.report: Dict[str, int] = {}
+        # Compaction state (ROADMAP §4 follow-up): superseded/tombstoned
+        # records otherwise accumulate forever.  ``generation`` counts
+        # rewrites; live/file byte counters feed the amplification trigger.
+        self.generation = 0
+        self.compactions = 0
+        self.compaction_bytes = 0   # bytes rewritten by compaction passes
+        self.last_compaction: Dict[str, int] = {}
+        self._live_bytes = 0
+        self._file_bytes = 0
+        self._compactor: Optional[threading.Thread] = None
+        self._compactor_stop = threading.Event()
         self._replay()
+        if compact_interval_s is not None:
+            self.start_compactor(compact_interval_s)
 
     # -- replay / torn-tail truncation ----------------------------------------
     def _replay(self) -> None:
@@ -183,6 +207,12 @@ class PageLog:
             for name in self.index.set_names():
                 entries = self.index.entries_for(name)
                 self._next_seq[name] = entries[-1].seq + 1 if entries else 0
+            self.generation = report.get("generation", 0)
+            self._file_bytes = os.path.getsize(self.path)
+            self._live_bytes = sum(
+                _record_size(e.name, e.length)
+                for name in self.index.set_names()
+                for e in self.index.entries_for(name))
         report["live_entries"] = len(self.index)
         report["live_sets"] = len(self.index.set_names())
         self.report = report
@@ -192,25 +222,23 @@ class PageLog:
         return self.epoch_fn() if self.epoch_fn is not None else 0
 
     def _append_record(self, name: str, payload: bytes, seq: int,
-                       flags: int) -> int:
-        """Append one record; returns the payload's file offset."""
+                       flags: int, epoch: Optional[int] = None) -> int:
+        """Append one record; returns the payload's file offset.  ``epoch``
+        defaults to the live counter; compaction passes the original record's
+        epoch so rewriting never un-fences stale state."""
         nb = name.encode("utf-8")
-        epoch = self._epoch()
-        tail = _TAIL.pack(epoch, seq, len(nb), len(payload), flags)
-        crc = zlib.crc32(tail)
-        crc = zlib.crc32(nb, crc)
-        crc = zlib.crc32(payload, crc) & 0xFFFFFFFF
-        header = struct.pack("<II", MAGIC, crc) + tail
+        if epoch is None:
+            epoch = self._epoch()
+        record = _pack_record(nb, payload, seq, flags, epoch)
         if self._append_fh is None:
             self._append_fh = open(self.path, "ab")
         fh = self._append_fh
         start = fh.tell()
-        fh.write(header)
-        fh.write(nb)
-        fh.write(payload)
+        fh.write(record)
         fh.flush()
-        nbytes = _HEADER.size + len(nb) + len(payload)
+        nbytes = len(record)
         self.bytes_appended += nbytes
+        self._file_bytes += nbytes
         self._unsynced += nbytes
         if (self.fsync_policy == "always"
                 or (self.fsync_policy == "group"
@@ -235,32 +263,45 @@ class PageLog:
         with self._lock:
             if seq is None:
                 seq = self._next_seq.get(name, 0)
+            prior = self.index.get(name, seq)
             offset, epoch = self._append_record(name, payload, seq, FLAG_DATA)
             self._next_seq[name] = max(self._next_seq.get(name, 0), seq + 1)
             entry = PageLogEntry(name=name, seq=seq, epoch=epoch,
                                  offset=offset, length=len(payload),
                                  payload_crc=zlib.crc32(payload) & 0xFFFFFFFF)
             self.index.put(entry)
+            if prior is not None:
+                self._live_bytes -= _record_size(name, prior.length)
+            self._live_bytes += _record_size(name, len(payload))
+            self.maybe_compact()
             return entry
 
     def drop_set(self, name: str) -> None:
         """Tombstone a set: replay will not resurrect its entries."""
         with self._lock:
-            if not self.index.entries_for(name):
+            entries = self.index.entries_for(name)
+            if not entries:
                 return  # never logged (or already tombstoned): nothing to cut
             self._append_record(name, b"", 0, FLAG_TOMBSTONE)
             self.index.drop_set(name)
             self._next_seq.pop(name, None)
+            self._live_bytes -= sum(_record_size(name, e.length)
+                                    for e in entries)
+            self.maybe_compact()
 
     def rename_set(self, old: str, new: str) -> None:
         """Re-key a set's entries in O(1) log bytes: a rename record whose
         payload is the old name; data records are not rewritten."""
         with self._lock:
-            if not self.index.entries_for(old):
+            entries = self.index.entries_for(old)
+            if not entries:
                 return
             self._append_record(new, old.encode("utf-8"), 0, FLAG_RENAME)
             self.index.rename_set(old, new)
             self._next_seq[new] = self._next_seq.pop(old, 0)
+            delta = len(new.encode("utf-8")) - len(old.encode("utf-8"))
+            self._live_bytes += delta * len(entries)
+            self.maybe_compact()
 
     # -- read path ---------------------------------------------------------------
     def read(self, name: str, seq: int) -> bytes:
@@ -298,11 +339,125 @@ class PageLog:
         with self._lock:
             return sum(e.length for e in self.index.entries_for(name))
 
+    # -- compaction (ROADMAP §4 follow-up) ----------------------------------
+    def live_bytes(self) -> int:
+        with self._lock:
+            return self._live_bytes
+
+    def file_bytes(self) -> int:
+        with self._lock:
+            return self._file_bytes
+
+    def amplification(self) -> float:
+        """File bytes over live-record bytes — 1.0 is a perfectly compact
+        log; superseded images, tombstoned sets, and rename markers all push
+        it up."""
+        with self._lock:
+            return self._file_bytes / max(1, self._live_bytes)
+
+    def compact(self) -> Dict[str, int]:
+        """Rewrite the live records into a new generation file and atomically
+        swap it in (``os.replace``).  The new file opens with a generation
+        record, then every live page image in (set, seq) order with its
+        original epoch and seq — so fencing, warm restore, and ``read()``
+        behave identically before and after.  Readers never see a partial
+        file: the swap is the commit point, and a crash before it leaves the
+        old log untouched (plus a stale ``pages.log.compact`` that the next
+        compaction overwrites and ``fsck`` reports)."""
+        with self._lock:
+            before = self._file_bytes
+            tmp = os.path.join(self.directory, COMPACT_TMP_FILENAME)
+            new_gen = self.generation + 1
+            rewritten = 0
+            with open(tmp, "wb") as out:
+                out.write(_pack_record(b"", struct.pack("<Q", new_gen),
+                                       0, FLAG_GENERATION, self._epoch()))
+                for name in self.index.set_names():
+                    nb = name.encode("utf-8")
+                    for e in self.index.entries_for(name):
+                        payload = self.read(name, e.seq)
+                        out.write(_pack_record(nb, payload, e.seq,
+                                               FLAG_DATA, e.epoch))
+                        rewritten += 1
+                out.flush()
+                os.fsync(out.fileno())
+            # swap + reopen: handles point at the old inode until replaced
+            if self._append_fh is not None:
+                self._append_fh.close()
+                self._append_fh = None
+            if self._read_fh is not None:
+                self._read_fh.close()
+                self._read_fh = None
+            os.replace(tmp, self.path)
+            try:
+                dirfd = os.open(self.directory, os.O_RDONLY)
+                try:
+                    os.fsync(dirfd)
+                finally:
+                    os.close(dirfd)
+            except OSError:  # pragma: no cover - platform without dir fsync
+                pass
+            # offsets all moved: rebuild the index from the new file
+            self.index = ConsistentHashIndex(self.index.num_buckets)
+            scan_log(self.path, self.index, {})
+            self.generation = new_gen
+            self._file_bytes = os.path.getsize(self.path)
+            self._live_bytes = sum(
+                _record_size(e.name, e.length)
+                for name in self.index.set_names()
+                for e in self.index.entries_for(name))
+            self.compactions += 1
+            self.compaction_bytes += self._file_bytes
+            self.last_compaction = {
+                "generation": new_gen, "records": rewritten,
+                "before_bytes": before, "after_bytes": self._file_bytes}
+            return dict(self.last_compaction)
+
+    def maybe_compact(self) -> bool:
+        """Amplification-triggered compaction: runs when the knob is set,
+        the file is past the minimum size, and file/live exceeds the
+        threshold.  Called after every mutating append (and periodically by
+        the background compactor thread)."""
+        if self.compact_threshold is None:
+            return False
+        with self._lock:
+            if (self._file_bytes < self.compact_min_bytes
+                    or self.amplification() <= self.compact_threshold):
+                return False
+            self.compact()
+            return True
+
+    def start_compactor(self, interval_s: float) -> None:
+        """Background amplification sweeps — for nodes whose write paths
+        should never pay the rewrite inline."""
+        if self._compactor is not None:
+            return
+        self._compactor_stop.clear()
+
+        def loop() -> None:
+            while not self._compactor_stop.wait(interval_s):
+                try:
+                    self.maybe_compact()
+                except Exception:  # pragma: no cover - keep sweeping
+                    pass
+
+        self._compactor = threading.Thread(
+            target=loop, name="pagelog-compactor", daemon=True)
+        self._compactor.start()
+
+    def stop_compactor(self) -> None:
+        if self._compactor is None:
+            return
+        self._compactor_stop.set()
+        self._compactor.join(timeout=5.0)
+        self._compactor = None
+
     def close(self) -> None:
         """Close file handles; the log FILES stay — that is the point of the
         durable tier (``SpillStore.clear`` has no analogue here). The
         ``close`` and ``group`` fsync policies drain any unsynced tail here
         so a clean shutdown is durable."""
+        self.stop_compactor()
         with self._lock:
             if self._append_fh is not None:
                 if (self.fsync_policy in ("close", "group")
@@ -313,6 +468,21 @@ class PageLog:
             if self._read_fh is not None:
                 self._read_fh.close()
                 self._read_fh = None
+
+
+def _record_size(name: str, payload_len: int) -> int:
+    return _HEADER.size + len(name.encode("utf-8")) + payload_len
+
+
+def _pack_record(name_bytes: bytes, payload: bytes, seq: int, flags: int,
+                 epoch: int) -> bytes:
+    """The one wire format: header (magic + crc over tail/name/payload),
+    name, payload — shared by the live append path and compaction."""
+    tail = _TAIL.pack(epoch, seq, len(name_bytes), len(payload), flags)
+    crc = zlib.crc32(tail)
+    crc = zlib.crc32(name_bytes, crc)
+    crc = zlib.crc32(payload, crc) & 0xFFFFFFFF
+    return struct.pack("<II", MAGIC, crc) + tail + name_bytes + payload
 
 
 def scan_log(path: str, index: Optional[ConsistentHashIndex],
@@ -344,7 +514,12 @@ def scan_log(path: str, index: Optional[ConsistentHashIndex],
         payload_off = pos + _HEADER.size + name_len
         records += 1
         report["records"] = report.get("records", 0) + 1
-        if flags == FLAG_TOMBSTONE:
+        if flags == FLAG_GENERATION:
+            report["generations"] = report.get("generations", 0) + 1
+            if payload_len == 8:
+                report["generation"] = struct.unpack_from(
+                    "<Q", data, payload_off)[0]
+        elif flags == FLAG_TOMBSTONE:
             report["tombstones"] = report.get("tombstones", 0) + 1
             if index is not None:
                 index.drop_set(name)
@@ -385,6 +560,20 @@ def fsck(directory: str) -> Dict[str, object]:
     out["torn_tail_bytes"] = file_len - good_end
     out["live_entries"] = len(index)
     out["live_sets"] = index.set_names()
+    out["generation"] = report.get("generation", 0)
+    live = sum(_record_size(e.name, e.length)
+               for name in index.set_names()
+               for e in index.entries_for(name))
+    out["live_bytes"] = live
+    out["amplification"] = round(file_len / max(1, live), 4)
+    # A generation record is written first by compaction; one appearing
+    # later means files were concatenated or corrupted.
+    gen_ok = True
+    if report.get("generations", 0) > 1:
+        gen_ok = False
+    out["stale_compact_tmp"] = os.path.exists(
+        os.path.join(directory, COMPACT_TMP_FILENAME))
     out["clean"] = (good_end == file_len
-                    and report.get("crc_failures", 0) == 0)
+                    and report.get("crc_failures", 0) == 0
+                    and gen_ok)
     return out

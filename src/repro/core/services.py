@@ -308,6 +308,30 @@ class VirtualShuffleBuffer:
         self.add_batch(np.array([record], dtype=self.dtype))
 
 
+def iter_small_page_records(pool: BufferPool, ls: LocalitySet,
+                            dtype: np.dtype,
+                            small_page: int = SMALL_PAGE) -> Iterator[np.ndarray]:
+    """Stream the records of a set whose pages are small-page shuffle output
+    (each ``small_page`` window self-describes with an int64 count header).
+    This is the decode side of a raw page-image move: a map partition
+    exported as whole page images — same host or across the process data
+    plane — reads back here without the producing service.  Yielded arrays
+    are views valid only until the next iteration."""
+    dtype = np.dtype(dtype)
+    small = min(small_page, ls.page_size)
+    for pid in sorted(ls.pages):
+        page = ls.pages[pid]
+        view = pool.pin(page)
+        try:
+            for base in range(0, page.size - small + 1, small):
+                n = int(view[base:base + _HEADER].view(np.int64)[0])
+                if n == 0:
+                    continue
+                yield from_record_bytes(view[base + _HEADER:], dtype, n)
+        finally:
+            pool.unpin(page)
+
+
 class ShuffleService:
     """One locality set per partition; concurrent writers share large pages
     through small-page sub-allocation. Readers use the sequential service."""
@@ -376,19 +400,14 @@ class ShuffleService:
         retain."""
         ls = self.partition_sets[partition_id]
         ls.infer_from_service("sequential-read", self.pool.clock)
-        small = self._allocators[partition_id].small_page
-        for pid in sorted(ls.pages):
-            page = ls.pages[pid]
-            view = self.pool.pin(page)
-            try:
-                for base in range(0, page.size - small + 1, small):
-                    n = int(view[base:base + _HEADER].view(np.int64)[0])
-                    if n == 0:
-                        continue
-                    yield from_record_bytes(view[base + _HEADER:],
-                                            self.dtype, n)
-            finally:
-                self.pool.unpin(page)
+        yield from iter_small_page_records(
+            self.pool, ls, self.dtype, self.small_page_of(partition_id))
+
+    def small_page_of(self, partition_id: int) -> int:
+        """The small-page stride of one partition's pages — what a raw
+        page-image consumer needs to decode them (``iter_small_page_records``
+        on the far side of an export)."""
+        return self._allocators[partition_id].small_page
 
     def read_partition(self, partition_id: int) -> np.ndarray:
         """Read back one whole partition (gathers ``iter_partition``)."""

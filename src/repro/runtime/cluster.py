@@ -161,6 +161,24 @@ class DeadNodeError(RuntimeError):
     and no surviving replica can stand in for it."""
 
 
+def reducer_hash(keys: np.ndarray, num_reducers: int) -> np.ndarray:
+    """The shuffle's reducer-routing hash — ``int64 keys -> reducer ids``.
+
+    Deliberately NOT the storage-placement hash (PartitionScheme's
+    golden-ratio multiplier): reusing it would silently co-locate every
+    record with its reducer and the shuffle would never exercise the
+    transfer path. Shuffle-free execution is an explicit scheduler decision
+    (plan_aggregation / plan_join), not a hash collision.
+
+    Module-level (rather than a ``ClusterShuffle`` method) because every
+    map site must route bit-identically — including map tasks running
+    inside remote node processes (``runtime/node_proc``), which never see
+    the driver's shuffle object."""
+    h = keys.astype(np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)
+    h ^= h >> np.uint64(29)
+    return (h % np.uint64(num_reducers)).astype(np.int64)
+
+
 def _iter_record_chunks(pool, ls, dtype: np.dtype) -> Iterator[np.ndarray]:
     """Stream a locality set as record-array chunks regardless of its storage
     scheme: row pages decode in place (``PageIterator``), columnar pages
@@ -195,7 +213,8 @@ class StorageNode:
                  pressure_watermark: float = 0.85,
                  pagelog_dir: Optional[str] = None,
                  epoch_fn=None,
-                 pagelog_fsync: str = "none"):
+                 pagelog_fsync: str = "none",
+                 pagelog_compact_threshold: Optional[float] = None):
         self.node_id = node_id
         self.capacity = capacity
         self.pressure_watermark = pressure_watermark
@@ -204,6 +223,7 @@ class StorageNode:
         self.pagelog_dir = pagelog_dir
         self.epoch_fn = epoch_fn
         self.pagelog_fsync = pagelog_fsync
+        self.pagelog_compact_threshold = pagelog_compact_threshold
         self.pool = self._build_pool()
         self.alive = True
 
@@ -212,7 +232,8 @@ class StorageNode:
         one is configured (construction replays its index — a revival with
         surviving log files IS the warm start)."""
         pagelog = (PageLog(self.pagelog_dir, epoch_fn=self.epoch_fn,
-                           fsync_policy=self.pagelog_fsync)
+                           fsync_policy=self.pagelog_fsync,
+                           compact_threshold=self.pagelog_compact_threshold)
                    if self.pagelog_dir else None)
         return BufferPool(self.capacity, SpillStore(self.spill_dir),
                           policy=self.policy,
@@ -385,7 +406,22 @@ class Cluster:
     database used by query planning (``best_replica``, shuffle byte maps),
     ``scheduler`` owns placement policy, and ``transfer`` is the lazy threaded
     engine every inter-pool byte rides through.
+
+    ``backend`` selects the data plane: ``"inproc"`` (default) keeps every
+    node an object in this process — fast to build, fully deterministic, the
+    test fallback; ``"proc"`` re-platforms each node onto its own OS process
+    with a socket control plane and a shared-memory page path
+    (``runtime/node_proc.ProcCluster`` — same catalog/scheduler/shuffle
+    surface, real wall-clock overlap).
     """
+
+    def __new__(cls, *args, backend: str = "inproc", **kwargs):
+        if cls is Cluster and backend == "proc":
+            from .node_proc import ProcCluster
+            return ProcCluster(*args, **kwargs)
+        if backend not in ("inproc", "proc"):
+            raise ValueError(f"unknown cluster backend {backend!r}")
+        return super().__new__(cls)
 
     def __init__(self, num_nodes: int, node_capacity: int = 32 << 20,
                  page_size: int = 1 << 18, replication_factor: int = 1,
@@ -396,7 +432,9 @@ class Cluster:
                  admission_timeout_s: float = 0.2,
                  pressure_watermark: float = 0.85,
                  pagelog_dir: Optional[str] = None,
-                 pagelog_fsync: str = "none"):
+                 pagelog_fsync: str = "none",
+                 pagelog_compact_threshold: Optional[float] = None,
+                 backend: str = "inproc"):
         if num_nodes < 2:
             raise ValueError("a cluster needs at least 2 nodes")
         self.num_nodes = num_nodes
@@ -423,6 +461,11 @@ class Cluster:
         # durability-vs-throughput knob forwarded to every node's PageLog
         # (``core/pagelog.FSYNC_POLICIES``); "none" is the original behavior
         self._pagelog_fsync = pagelog_fsync
+        # amplification threshold for background log compaction (None = off)
+        self._pagelog_compact_threshold = pagelog_compact_threshold
+        # warm the dispatch-plan kernel at boot so the first map batch is
+        # not charged with resolving (and possibly importing jax for) it
+        _resolve_dispatch_plan()
         # stats must exist before the nodes: every node's page log stamps
         # its records with the cluster's topology/job event counter
         self.stats = StatisticsDB()
@@ -432,7 +475,8 @@ class Cluster:
                            pressure_watermark=pressure_watermark,
                            pagelog_dir=self._node_pagelog_dir(n),
                            epoch_fn=self.stats.current_epoch,
-                           pagelog_fsync=pagelog_fsync)
+                           pagelog_fsync=pagelog_fsync,
+                           pagelog_compact_threshold=pagelog_compact_threshold)
             for n in range(num_nodes)
         }
         # the manager/driver process's own memory authority: pure accounting
@@ -1292,6 +1336,20 @@ class Cluster:
         rep[-1] = self.driver_memory.pressure_report()
         return rep
 
+    def shuffle(self, name: str, num_reducers: int, dtype: np.dtype,
+                page_size: Optional[int] = None,
+                admission: Optional[bool] = None,
+                columnar: bool = False,
+                partition_fn: Optional[Callable[[np.ndarray],
+                                                np.ndarray]] = None
+                ) -> "ClusterShuffle":
+        """Shuffle factory — the backend-neutral entry point (the proc
+        backend exposes the same signature, so callers can hold a
+        ``Cluster`` of either backend and not care)."""
+        return ClusterShuffle(self, name, num_reducers, dtype,
+                              page_size=page_size, admission=admission,
+                              columnar=columnar, partition_fn=partition_fn)
+
     def shutdown(self) -> None:
         """Stop the transfer engine's workers (benchmarks that build many
         clusters call this; tests can rely on idle-exit instead)."""
@@ -1410,16 +1468,7 @@ class ClusterShuffle:
     def partition_of_keys(self, keys: np.ndarray) -> np.ndarray:
         if self.partition_fn is not None:
             return self.partition_fn(keys)
-        # deliberately NOT the storage-placement hash (PartitionScheme's
-        # golden-ratio multiplier): reusing it
-        # would silently co-locate every record with its reducer and the
-        # shuffle would never exercise the transfer path. Shuffle-free
-        # execution is an explicit scheduler decision (plan_aggregation /
-        # plan_join), not a hash collision; the join path opts in to scheme
-        # routing explicitly via ``partition_fn``.
-        h = keys.astype(np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)
-        h ^= h >> np.uint64(29)
-        return (h % np.uint64(self.num_reducers)).astype(np.int64)
+        return reducer_hash(keys, self.num_reducers)
 
     def _paced_reservation(self, node_id: int, nbytes: int):
         """Admission-paced staging grant against ``node_id`` (None when

@@ -435,9 +435,10 @@ class ClusterScheduler:
         """Current MemoryManager pressure score of an alive node (0 for dead
         nodes — they have no pool to pressure)."""
         node = self.cluster.nodes.get(node_id)
-        if node is None or not node.alive or node.pool is None:
+        memory = node.memory if node is not None and node.alive else None
+        if memory is None:
             return 0.0
-        return node.pool.memory.pressure_score()
+        return memory.pressure_score()
 
     def _shard_bytes(self, sset, info) -> int:
         return info.num_records * sset.dtype.itemsize
@@ -538,9 +539,10 @@ class ClusterScheduler:
         if target_node != shard_id:
             return None
         node = self.cluster.nodes.get(target_node)
-        if node is None or not node.alive or node.pool is None:
+        memory = node.memory if node is not None and node.alive else None
+        if memory is None:
             return None
-        log = node.pool.memory.pagelog
+        log = memory.pagelog
         if log is None or not log.entries_for(info.set_name):
             return None
         if log.set_epoch(info.set_name) < getattr(info, "epoch", 0):

@@ -77,6 +77,39 @@ def copy_set(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
     return moved
 
 
+def iter_page_images(pool, ls):
+    """Pin each page of a set in page-id order and yield ``(size, view)``.
+    The view is a uint8 window over the pool's backing store, valid only
+    until the next iteration — callers copy it out (into a destination page,
+    a shm arena frame, or a socket buffer) before advancing.  This is the
+    producer half of every raw page-image move: same-pool replica copies
+    (:func:`copy_set_raw`) and the multi-process backend's shm exports share
+    it, so neither path ever touches per-record decode or pickle."""
+    for pid in sorted(ls.pages):
+        page = ls.pages[pid]
+        view = pool.pin(page)
+        try:
+            yield page.size, view
+        finally:
+            pool.unpin(page)
+
+
+def land_page_image(pool, ls, image, memory=None) -> None:
+    """The consumer half: allocate a destination page of the image's exact
+    size and memcpy the image in (charged to ``memory`` while in flight).
+    Valid for any self-describing page — row small-page blocks and columnar
+    blocks alike carry their own count headers."""
+    image = np.frombuffer(image, dtype=np.uint8)
+    reservation = memory.reserve(image.nbytes) if memory is not None else None
+    try:
+        dst_page = pool.new_page(ls, size=image.nbytes)
+        pool.view(dst_page)[:] = image
+        pool.unpin(dst_page, dirty=True)
+    finally:
+        if reservation is not None:
+            reservation.release()
+
+
 def copy_set_raw(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
                  dtype: np.dtype, attrs: Optional[AttributeSet] = None) -> int:
     """Move a set between pools as raw page images: pin source page, alloc an
@@ -92,23 +125,10 @@ def copy_set_raw(src_pool, src_set_name: str, dst_pool, dst_set_name: str,
     ls_dst = dst_pool.create_set(dst_set_name, ls_src.page_size, attrs)
     memory = getattr(dst_pool, "memory", None)
     moved = 0
-    for pid in sorted(ls_src.pages):
-        page = ls_src.pages[pid]
-        src_view = src_pool.pin(page)
-        try:
-            reservation = (memory.reserve(page.size)
-                           if memory is not None else None)
-            try:
-                dst_page = dst_pool.new_page(ls_dst, size=page.size)
-                dst_pool.view(dst_page)[:] = src_view
-                dst_pool.unpin(dst_page, dirty=True)
-            finally:
-                if reservation is not None:
-                    reservation.release()
-            n = int(src_view[:_HEADER].view(np.int64)[0])
-            moved += n * dtype.itemsize
-        finally:
-            src_pool.unpin(page)
+    for size, src_view in iter_page_images(src_pool, ls_src):
+        land_page_image(dst_pool, ls_dst, src_view, memory=memory)
+        n = int(src_view[:_HEADER].view(np.int64)[0])
+        moved += n * dtype.itemsize
     return moved
 
 

@@ -1,0 +1,330 @@
+"""Multi-process data plane (PR 8): per-node OS processes with the
+shared-memory zero-copy page path.
+
+Covers the proc backend against the in-process backend's contracts —
+byte-identical sharded sets and shuffles, zero pickling on the page fast
+path (counter-asserted), SIGKILL of a node process mid-shuffle riding the
+replica re-execution path, warm page-log recovery over RPC, the revival
+epoch fence, remote admission/pressure, and the resource hygiene the
+backend promises: no orphan processes and no linked shm segments after
+``close``.
+"""
+import os
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.shm_arena import (ArenaFullError, ShmArena, arena_name,
+                                  gather, segment_exists)
+from repro.runtime import rpc
+from repro.runtime.cluster import Cluster, DeadNodeError
+
+PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
+
+
+def _pairs(n, key_range, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = np.zeros(n, PAIR)
+    recs["key"] = rng.integers(0, key_range, n)
+    recs["val"] = rng.random(n)
+    return recs
+
+
+def _sorted(recs):
+    return np.sort(recs, order=["key", "val"])
+
+
+def _proc(tmp_path=None, **kw):
+    kw.setdefault("node_capacity", 16 << 20)
+    kw.setdefault("page_size", 1 << 16)
+    kw.setdefault("replication_factor", 1)
+    if tmp_path is not None:
+        kw.setdefault("pagelog_dir", str(tmp_path / "pagelog"))
+        kw.setdefault("spill_dir", str(tmp_path / "spill"))
+    return Cluster(4, backend="proc", **kw)
+
+
+def _run_shuffle(cluster, recs, name, columnar=False, reducers=8):
+    sset = cluster.create_sharded_set(name, recs, key_fn=lambda r: r["key"])
+    sh = cluster.shuffle(f"{name}-sh", reducers, PAIR, columnar=columnar)
+    sh.map_sharded(sset, key_field="key")
+    sh.finish_maps()
+    sh.place_reducers_locally()
+    parts = [sh.pull(r) for r in range(reducers)]
+    for r in range(reducers):
+        sh.release_reducer(r)
+    return sh, parts
+
+
+# -- shm arena unit behaviour -------------------------------------------------
+def test_arena_put_read_free_roundtrip():
+    a = ShmArena(arena_name("t"), frame_size=64, num_frames=8,
+                 create=True, owner=True)
+    try:
+        payload = os.urandom(200)          # spans 4 frames
+        desc = a.put(payload)
+        assert desc["nbytes"] == 200 and len(desc["frames"]) == 4
+        assert a.read(desc).tobytes() == payload
+        # a second attachment (reader) sees the same bytes
+        b = ShmArena.attach(a.name, 64, 8)
+        assert b.read(desc).tobytes() == payload
+        b.close()
+        a.free(desc)
+        assert a.free_frames() == 8 and a.frames_in_use == 0
+        with pytest.raises(ArenaFullError):
+            a.put(os.urandom(64 * 9))
+    finally:
+        a.unlink()
+    assert not segment_exists(a.name)
+
+
+def test_arena_reader_cannot_allocate_and_gather_falls_back():
+    a = ShmArena(arena_name("t"), frame_size=64, num_frames=2,
+                 create=True, owner=True)
+    try:
+        reader = ShmArena.attach(a.name, 64, 2)
+        with pytest.raises(RuntimeError):
+            reader.put(b"x")
+        with pytest.raises(RuntimeError):
+            reader.unlink()
+        reader.close()
+        # gather: descriptor channel when present, raw bytes otherwise
+        desc = a.put(b"abc")
+        assert gather(a, desc, b"").tobytes() == b"abc"
+        assert gather(a, None, b"raw-route").tobytes() == b"raw-route"
+    finally:
+        a.unlink()
+
+
+# -- rpc framing --------------------------------------------------------------
+def test_rpc_roundtrip_error_and_close():
+    parent, child = socket.socketpair()
+    calls = []
+
+    def op_echo(meta, raw):
+        calls.append(meta["x"])
+        return {"x": meta["x"] + 1}, bytes(reversed(raw))
+
+    def op_boom(meta, raw):
+        raise ValueError("kapow")
+
+    handlers = {"echo": op_echo, "boom": op_boom,
+                "close": lambda meta, raw: {}}
+    t = threading.Thread(target=rpc.serve_connection, args=(child, handlers),
+                         daemon=True)
+    t.start()
+    conn = rpc.RpcConnection(parent, timeout_s=10)
+    rep, raw = conn.call("echo", raw=b"abc", x=41)
+    assert rep["x"] == 42 and raw == b"cba"
+    with pytest.raises(rpc.RemoteError, match="kapow"):
+        conn.call("boom")
+    conn.call("close")                     # server loop replies, then exits
+    t.join(5)
+    assert not t.is_alive() and calls == [41]
+    conn.close()
+
+
+# -- sharded sets over processes ---------------------------------------------
+def test_proc_sharded_set_roundtrip_and_clean_close():
+    cluster = _proc()
+    recs = _pairs(10_000, 1_000, seed=1)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    assert set(sset.shards) == {0, 1, 2, 3}
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(_sorted(back), _sorted(recs))
+    report = cluster.close()
+    assert report.ok, (report.orphan_processes, report.leaked_segments)
+
+
+def test_no_orphan_processes_or_segments_after_close():
+    cluster = _proc()
+    pids = [h.proc.pid for h in cluster.nodes.values()]
+    segments = list(cluster._segments)
+    assert all(os.path.exists(f"/proc/{pid}") for pid in pids)
+    report = cluster.close()
+    assert report.ok
+    # close() joined every child: the pids are reaped, the segments unlinked
+    for pid in pids:
+        with pytest.raises(OSError):
+            os.kill(pid, 0)
+    assert not any(segment_exists(s) for s in segments)
+    # idempotent: a second close reports the same clean result
+    assert cluster.close().ok
+
+
+# -- shuffles -----------------------------------------------------------------
+def test_proc_shuffle_matches_inproc_byte_for_byte():
+    recs = _pairs(20_000, 1 << 20, seed=2)
+    inproc = Cluster(4, node_capacity=16 << 20, page_size=1 << 16,
+                     replication_factor=1)
+    sset = inproc.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    sh = inproc.shuffle("sh", 8, PAIR)
+    sh.map_sharded(sset, key_fn=lambda r: r["key"])
+    sh.finish_maps()
+    sh.place_reducers_locally()
+    in_parts = [sh.pull(r) for r in range(8)]
+    inproc.shutdown()
+
+    proc = _proc()
+    _sh, proc_parts = _run_shuffle(proc, recs, "pts")
+    # both backends hash with reducer_hash: partition contents must agree
+    for r in range(8):
+        assert np.array_equal(_sorted(proc_parts[r]), _sorted(in_parts[r]))
+    assert proc.close().ok
+
+
+def test_proc_shuffle_fast_path_is_pickle_free():
+    before = rpc.pickle_fallbacks()
+    cluster = _proc()
+    recs = _pairs(20_000, 1 << 20, seed=3)
+    _sh, parts = _run_shuffle(cluster, recs, "pts")
+    out = np.concatenate(parts)
+    assert np.array_equal(_sorted(out), _sorted(recs))
+    assert cluster.close().ok
+    # every payload rode a shm descriptor or raw socket bytes; pickle is a
+    # counted escape hatch that the hot path must never hit
+    assert rpc.pickle_fallbacks() - before == 0
+
+
+def test_proc_columnar_shuffle_is_byte_identical():
+    cluster = _proc()
+    recs = _pairs(20_000, 1 << 20, seed=4)
+    _sh, parts = _run_shuffle(cluster, recs, "pts", columnar=True)
+    out = np.concatenate(parts)
+    assert np.array_equal(_sorted(out), _sorted(recs))
+    assert cluster.close().ok
+
+
+def test_reduce_stats_verify_partitions_in_place():
+    from repro.core.replication import record_content_checksum
+    cluster = _proc()
+    recs = _pairs(12_000, 1 << 20, seed=5)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    sh = cluster.shuffle("sh", 4, PAIR)
+    sh.map_sharded(sset, key_field="key")
+    sh.finish_maps()
+    sh.place_reducers_locally()
+    total = 0
+    for r in range(4):
+        stats = sh.pull_remote(r)          # lands + verifies in the process
+        part = sh.pull(r)                  # then materialize driver-side
+        assert stats["num_records"] == len(part)
+        assert stats["content_crc"] == record_content_checksum(part)
+        total += len(part)
+    assert total == len(recs)
+    assert cluster.close().ok
+
+
+# -- death and recovery -------------------------------------------------------
+def test_sigkill_between_map_and_reduce_is_byte_identical():
+    cluster = _proc()
+    recs = _pairs(20_000, 1 << 20, seed=6)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    sh = cluster.shuffle("sh", 8, PAIR)
+    sh.map_sharded(sset, key_field="key")
+    sh.finish_maps()
+    victim = 1
+    victim_segments = [cluster.nodes[victim].inbox.name,
+                       cluster.nodes[victim].outbox.name]
+    cluster.kill_node(victim)              # SIGKILL: no goodbye, no cleanup
+    assert not any(segment_exists(s) for s in victim_segments)
+    sh.place_reducers_locally()
+    out = np.concatenate([sh.pull(r) for r in range(8)])
+    # the dead mapper's shard re-executed from its replica holder; nothing
+    # was lost and nothing double-counted
+    assert np.array_equal(_sorted(out), _sorted(recs))
+    assert cluster.close().ok
+
+
+def test_death_after_pulls_began_demands_a_rerun():
+    cluster = _proc()
+    recs = _pairs(12_000, 1 << 20, seed=7)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    sh = cluster.shuffle("sh", 4, PAIR)
+    sh.map_sharded(sset, key_field="key")
+    sh.finish_maps()
+    sh.place_reducers_locally()
+    sh.pull(0)                             # partitions started draining
+    cluster.kill_node(2)
+    with pytest.raises(DeadNodeError, match="re-run"):
+        for r in range(1, 4):
+            sh.pull(r)
+    assert cluster.close().ok
+
+
+def test_warm_log_recovery_over_rpc(tmp_path):
+    cluster = _proc(tmp_path)
+    recs = _pairs(10_000, 1_000, seed=8)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    cluster.kill_node(2)
+    report = cluster.recover_node(2)
+    assert report.ok
+    assert report.warm_shards == 1 and report.warm_replicas == 1
+    assert report.bytes_transferred == 0   # everything adopted from the log
+    assert report.sources == {"pts:2": "pagelog"}
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(_sorted(back), _sorted(recs))
+    assert cluster.close().ok
+
+
+def test_cold_recovery_copies_replica_bytes_node_to_node():
+    cluster = _proc()                      # no durable tier
+    recs = _pairs(10_000, 1_000, seed=9)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    before = cluster.net_bytes
+    cluster.kill_node(3)
+    report = cluster.recover_node(3)
+    assert report.ok
+    assert report.shards_recovered == 1 and report.warm_shards == 0
+    assert report.bytes_transferred > 0
+    assert cluster.net_bytes > before      # replica copy crossed nodes
+    back = cluster.read_sharded(sset)
+    assert np.array_equal(_sorted(back), _sorted(recs))
+    assert cluster.close().ok
+
+
+def test_proc_revive_fences_sets_dropped_while_dead(tmp_path):
+    cluster = _proc(tmp_path)
+    recs = _pairs(8_000, 500, seed=10)
+    sset = cluster.create_sharded_set("pts", recs, key_fn=lambda r: r["key"])
+    fenced_name = sset.shards[1].set_name
+    cluster.kill_node(1)
+    cluster.drop_sharded_set(sset)         # dropped everywhere else
+    fenced = cluster.revive_node(1)
+    # the revived node's replayed log must not resurrect the dropped set
+    assert fenced_name in fenced
+    rep, _ = cluster.nodes[1].call("log_sets")
+    assert fenced_name not in rep["sets"]
+    assert cluster.close().ok
+
+
+# -- remote admission / pressure ---------------------------------------------
+def test_remote_pressure_and_reservations():
+    cluster = _proc(node_capacity=4 << 20)
+    mem = cluster.nodes[0].memory
+    assert 0.0 <= mem.pressure_score() <= 1.0
+    report = cluster.pressure_report()
+    assert set(report) == {0, 1, 2, 3}
+    grant = mem.try_reserve(1 << 16, urgency="required", timeout=1.0)
+    assert grant is not None
+    grant.release()
+    # saturate the staging cap, then a normal-urgency ask is refused past
+    # its timeout (the first-ask liveness rule always admits on idle)
+    hog = mem.try_reserve(3 << 20, urgency="required", timeout=0.5)
+    assert hog is not None
+    assert mem.try_reserve(3 << 20, urgency="normal", timeout=0.05) is None
+    hog.release()
+    assert mem.admission.admit_placement(1 << 16, deadline_s=0.2)
+    assert cluster.close().ok
+
+
+def test_dead_node_pressure_reads_as_zero_not_an_error():
+    cluster = _proc()
+    mem = cluster.nodes[2].memory
+    cluster.kill_node(2)
+    assert cluster.nodes[2].memory is None  # handle exposes death
+    assert mem.pressure_score() == 0.0      # a raced reader degrades softly
+    assert not mem.admission.admit_placement(1 << 16)
+    assert cluster.close().ok

@@ -35,8 +35,15 @@ def main(argv=None) -> int:
     for log_dir, rep in reports.items():
         print(json.dumps({"log": log_dir, **rep}, sort_keys=True))
     clean = all(r["clean"] for r in reports.values())
+    gens = sum(r.get("generation", 0) for r in reports.values())
+    stale = sum(1 for r in reports.values() if r.get("stale_compact_tmp"))
+    amps = [r["amplification"] for r in reports.values()
+            if "amplification" in r]
+    worst = max(amps) if amps else 0.0
     print(f"# {len(reports)} page log(s), "
           f"{sum(r['records'] for r in reports.values())} records, "
+          f"{gens} compaction generation(s), worst amplification {worst}, "
+          f"{stale} stale compaction tmp file(s), "
           f"{'all clean' if clean else 'PROBLEMS FOUND'}")
     return 0 if clean else 1
 
