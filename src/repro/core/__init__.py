@@ -6,7 +6,7 @@ from .attributes import (AttributeSet, CurrentOperation, DurabilityType,
                          WritingPattern, eviction_ratio, select_strategy,
                          spilling_cost)
 from .buffer_pool import BufferPool, PoolExhaustedError, SpillStore
-from .kvcache import HBMExhaustedError, PagedKVCache
+from .kvcache import HBMExhaustedError, HostSlabStore, PagedKVCache
 from .locality_set import LocalitySet, Page
 from .memory_manager import (AdmissionController, MemoryManager,
                              MemoryReservation, derive_staging_cap)
@@ -29,6 +29,7 @@ __all__ = [
     "AdmissionController", "derive_staging_cap",
     "AttributeSet", "BufferPool", "CurrentOperation", "DistributedSet",
     "DurabilityType", "EvictionStrategy", "HBMExhaustedError", "HashService",
+    "HostSlabStore",
     "Lifetime", "LocalitySet", "Location", "MemoryManager",
     "MemoryReservation", "Page", "PagedKVCache",
     "PageIterator", "PagingSystem", "PartitionScheme", "PoolExhaustedError",

@@ -14,12 +14,17 @@ buffer pool:
   on TPU: ``jax.device_put(..., memory_kind="pinned_host")``) and restored on
   demand.
 
+The host side is pluggable: ``HostSlabStore`` is the flat dict default, and
+``runtime/serving.py`` substitutes a tiered store that charges the node's
+``MemoryManager`` and overflows to a remote node (level-3 spill) through the
+``TransferEngine`` — the three-level hierarchy HBM → host pool → remote node.
+
 The device half (attention over the page pool) is ``kernels/paged_attention``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -41,6 +46,42 @@ class HBMExhaustedError(MemoryError):
     pass
 
 
+class HostSlabStore:
+    """Level-2 host store for offloaded KV page slabs.
+
+    The default is a flat in-memory dict.  The interface is deliberately
+    small so a tiered implementation (host pool with a budget that overflows
+    to a remote node) can slot in without the cache knowing:
+
+    * ``put(pid, slab)``   — offload accepted this slab (may raise to refuse);
+    * ``take(pid)``        — remove + return the slab for restore (None if the
+      page was never offloaded);
+    * ``peek(pid)``        — read without removing (replication / asserts);
+    * ``discard(pid)``     — the sequence finished; drop any copy.
+    """
+
+    def __init__(self) -> None:
+        self._slabs: Dict[int, np.ndarray] = {}
+
+    def put(self, page_id: int, slab: np.ndarray) -> None:
+        self._slabs[page_id] = slab
+
+    def take(self, page_id: int) -> Optional[np.ndarray]:
+        return self._slabs.pop(page_id, None)
+
+    def peek(self, page_id: int) -> Optional[np.ndarray]:
+        return self._slabs.get(page_id)
+
+    def discard(self, page_id: int) -> None:
+        self._slabs.pop(page_id, None)
+
+    def __contains__(self, page_id: int) -> bool:
+        return page_id in self._slabs
+
+    def __len__(self) -> int:
+        return len(self._slabs)
+
+
 @dataclass
 class SeqState:
     seq_id: int
@@ -57,7 +98,8 @@ class PagedKVCache:
     """
 
     def __init__(self, num_layers: int, hbm_pages: int, page_size: int,
-                 kv_heads: int, head_dim: int, dtype=np.float32):
+                 kv_heads: int, head_dim: int, dtype=np.float32,
+                 host_store: Optional[HostSlabStore] = None):
         import jax.numpy as jnp  # local import: keep module importable w/o jax
         self.num_layers = num_layers
         self.hbm_pages = hbm_pages
@@ -74,9 +116,15 @@ class PagedKVCache:
         self._sets: Dict[int, LocalitySet] = {}
         # logical page id -> (physical slot | None, host copy | None)
         self._pages: Dict[int, Page] = {}
-        self._host_store: Dict[int, np.ndarray] = {}
+        self.host_store = host_store if host_store is not None else HostSlabStore()
         self._next_page_id = 0
         self.stats = {"offloads": 0, "fetches": 0, "offload_bytes": 0}
+
+    @property
+    def slab_nbytes(self) -> int:
+        """Bytes of one logical page's slab across all layers."""
+        return (self.num_layers * self.page_size * 2 * self.kv_heads
+                * self.head_dim * np.dtype(self.dtype).itemsize)
 
     # -- sequence lifecycle -----------------------------------------------------
     def start_sequence(self, seq_id: int) -> SeqState:
@@ -103,7 +151,7 @@ class PagedKVCache:
             page = self._pages.pop(pid)
             if page.offset is not None:
                 self._free_slots.append(page.offset)
-            self._host_store.pop(pid, None)
+            self.host_store.discard(pid)
         self.paging.unregister(ls.name)
 
     # -- page management ----------------------------------------------------------
@@ -119,7 +167,7 @@ class PagedKVCache:
         assert page.offset is not None
         # device -> host (CPU container: numpy copy of that page's slab)
         slab = np.asarray(self.kv[:, page.offset])
-        self._host_store[page.page_id] = slab
+        self.host_store.put(page.page_id, slab)
         self.stats["offloads"] += 1
         self.stats["offload_bytes"] += slab.nbytes
         self._free_slots.append(page.offset)
@@ -128,7 +176,13 @@ class PagedKVCache:
     def _restore(self, page: Page, ls: LocalitySet) -> int:
         import jax.numpy as jnp
         slot = self._alloc_slot(exclude_set=ls.name)
-        slab = self._host_store.pop(page.page_id, None)
+        try:
+            slab = self.host_store.take(page.page_id)
+        except BaseException:
+            # a tiered store may fail mid-fetch (dead remote node); the slot
+            # must go back so the cache stays consistent for the retry
+            self._free_slots.append(slot)
+            raise
         if slab is not None:
             self.kv = self.kv.at[:, slot].set(jnp.asarray(slab))
             self.stats["fetches"] += 1
@@ -179,6 +233,48 @@ class PagedKVCache:
 
     def advance(self, seq_id: int, tokens: int = 1) -> None:
         self._seqs[seq_id].length += tokens
+
+    # -- byte-exact page access ---------------------------------------------------
+    def write_page(self, seq_id: int, page_index: int, slab: np.ndarray) -> None:
+        """Overwrite one logical page's slab ([L, page, 2, KH, D]); restores
+        the page to HBM first if it was offloaded."""
+        import jax.numpy as jnp
+        st = self._seqs[seq_id]
+        ls = self._sets[seq_id]
+        page = self._pages[st.page_ids[page_index]]
+        self.clock += 1
+        if page.offset is None:
+            self._restore(page, ls)
+        page.last_access = self.clock
+        page.dirty = True
+        self.kv = self.kv.at[:, page.offset].set(jnp.asarray(slab))
+
+    def read_page(self, seq_id: int, page_index: int) -> np.ndarray:
+        """Byte-exact slab of one logical page, wherever it lives: resident
+        pages read from HBM, offloaded ones from the host store (without
+        pulling them back in)."""
+        st = self._seqs[seq_id]
+        page = self._pages[st.page_ids[page_index]]
+        if page.offset is not None:
+            return np.asarray(self.kv[:, page.offset])
+        slab = self.host_store.peek(page.page_id)
+        if slab is None:   # offloaded before any write: an all-zero page
+            shape = (self.num_layers, self.page_size, 2,
+                     self.kv_heads, self.head_dim)
+            return np.zeros(shape, dtype=self.dtype)
+        return np.asarray(slab)
+
+    def sequence_slabs(self, seq_id: int) -> List[np.ndarray]:
+        """All of a sequence's page slabs in logical order (byte-identity
+        checks and replication)."""
+        return [self.read_page(seq_id, i)
+                for i in range(len(self._seqs[seq_id].page_ids))]
+
+    def seq_length(self, seq_id: int) -> int:
+        return self._seqs[seq_id].length
+
+    def num_pages(self, seq_id: int) -> int:
+        return len(self._seqs[seq_id].page_ids)
 
     # -- introspection --------------------------------------------------------------
     def resident_pages(self) -> int:

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import os
 import threading
-from typing import Dict, Optional, Set
+from typing import Dict, List, Optional, Set
 
 from .attributes import DurabilityType
 from .pagelog import PageLog
@@ -173,6 +173,33 @@ class AdmissionController:
         self.throttled = 0    # asks that waited before being granted
         self.forced = 0       # urgency="required" grants past the deadline
         self.waiting = 0      # asks currently parked on the condition var
+        self._listeners: List = []   # notify hooks (event-name callbacks)
+
+    # -- event hooks (deflaked tests, serving-tier schedulers) ---------------
+    def add_notify_listener(self, fn) -> None:
+        """Register ``fn(event)`` called on admission state changes:
+        ``"waiting"`` when an ask parks on the condition variable and
+        ``"release"`` whenever headroom appears (reservation released, pages
+        freed, durable handoff). Callbacks run under the manager lock and
+        must be non-blocking (set an ``Event``, bump a counter — no manager
+        calls)."""
+        with self._cv:
+            self._listeners.append(fn)
+
+    def remove_notify_listener(self, fn) -> None:
+        with self._cv:
+            self._listeners.remove(fn)
+
+    def _fire(self, event: str) -> None:
+        for fn in list(self._listeners):
+            fn(event)
+
+    def wait_until(self, predicate, timeout: float = 5.0) -> bool:
+        """Park on the node's condition variable until ``predicate()`` holds
+        (checked under the manager lock on every admission event) — the
+        event-driven replacement for wall-clock polling loops in tests."""
+        with self._cv:
+            return self._cv.wait_for(predicate, timeout=timeout)
 
     # both predicates assume the manager's lock is held
     def _staging_headroom(self, nbytes: int) -> bool:
@@ -187,6 +214,7 @@ class AdmissionController:
 
     def _notify(self) -> None:
         self._cv.notify_all()
+        self._fire("release")
 
     def try_reserve(self, nbytes: int, *, urgency: str = "normal",
                     timeout: Optional[float] = None
@@ -214,12 +242,17 @@ class AdmissionController:
                 granted = False
                 if urgency != "low" and timeout > 0:
                     self.waiting += 1
+                    # wake wait_until() watchers of `waiting` (they re-check
+                    # their predicate and re-park; peers see no headroom change)
+                    self._cv.notify_all()
+                    self._fire("waiting")
                     try:
                         granted = self._cv.wait_for(
                             lambda: self._staging_headroom(nbytes),
                             timeout=timeout)
                     finally:
                         self.waiting -= 1
+                        self._cv.notify_all()
                 if granted:
                     self.throttled += 1
                 else:

@@ -6,6 +6,8 @@ from .cluster import (Cluster, ClusterShuffle, DeadNodeError, RecoveryReport,
                       RemeshReport, ShardInfo, ShardedSet, StorageNode,
                       cluster_hash_aggregate, dispatch_plan)
 from .join import ClusterJoin, JoinReport, scheme_slot_of_keys
+from .serving import (KVShard, ServingTier, Session, TieredSlabStore,
+                      expected_page_slab, token_value)
 
 __all__ = ["CollectiveWatchdog", "HostMonitor", "StepTimer", "plan_remesh",
            "surviving_mesh_shape", "surviving_node_ids", "AggregationPlan",
@@ -14,4 +16,5 @@ __all__ = ["CollectiveWatchdog", "HostMonitor", "StepTimer", "plan_remesh",
            "DeadNodeError", "RecoveryReport", "RemeshReport", "ShardInfo",
            "ShardedSet", "StorageNode", "cluster_hash_aggregate",
            "dispatch_plan", "ClusterJoin", "JoinReport",
-           "scheme_slot_of_keys"]
+           "scheme_slot_of_keys", "KVShard", "ServingTier", "Session",
+           "TieredSlabStore", "expected_page_slab", "token_value"]

@@ -666,6 +666,40 @@ class Cluster:
             self._stream_records, src_id, src_set, dst_id, dst_set, dtype,
             page_size, attrs, label=f"{src_set}->{dst_set}")
 
+    # -- raw byte blobs (serving KV slabs and other unsharded payloads) -------
+    def store_bytes(self, node_id: int, name: str, data: bytes) -> int:
+        """Land a raw byte blob as a uint8 locality set on one node
+        (drop-before-rewrite: a same-name re-store replaces the old copy).
+        The serving tier ships KV page slabs through this — on the proc
+        backend the bytes live in the node's OS process, so replica copies
+        genuinely survive a SIGKILL of the primary and genuinely die with
+        their own node. Returns the bytes stored."""
+        node = self.node(node_id)
+        if name in node.pool.paging.sets:
+            node.pool.drop_set(node.pool.get_set(name))
+        recs = np.frombuffer(bytes(data), dtype=np.uint8)
+        node.write_records(name, recs, np.dtype(np.uint8), self.page_size)
+        return len(recs)
+
+    def load_bytes(self, node_id: int, name: str) -> bytes:
+        """Read a blob back (raises ``DeadNodeError`` for a dead holder,
+        ``KeyError`` when the node never got the blob)."""
+        node = self.node(node_id)
+        if name not in node.pool.paging.sets:
+            raise KeyError(name)
+        return node.read_records(name, np.dtype(np.uint8)).tobytes()
+
+    def drop_bytes(self, node_id: int, name: str) -> None:
+        node = self.nodes[node_id]
+        if (node.alive and node.pool is not None
+                and name in node.pool.paging.sets):
+            node.pool.drop_set(node.pool.get_set(name))
+
+    def has_bytes(self, node_id: int, name: str) -> bool:
+        node = self.nodes[node_id]
+        return bool(node.alive and node.pool is not None
+                    and name in node.pool.paging.sets)
+
     # -- sharded locality sets ------------------------------------------------
     def create_sharded_set(self, name: str, records: np.ndarray,
                            key_fn: Callable[[np.ndarray], np.ndarray],

@@ -1298,6 +1298,37 @@ class ProcCluster:
             self.add_net_bytes(moved)
         return moved
 
+    # -- raw byte blobs (serving KV slabs and other unsharded payloads) -------
+    def store_bytes(self, node_id: int, name: str, data: bytes) -> int:
+        """Blob write over RPC: the bytes land in the node *process*'s pool
+        (drop-before-rewrite), so a serving replica slab physically outlives
+        a SIGKILL of the sequence's primary node."""
+        handle = self.node(node_id)
+        handle.call("drop_set", name=name)
+        recs = np.frombuffer(bytes(data), dtype=np.uint8)
+        return self._send_records(node_id, name, recs, np.dtype(np.uint8),
+                                  self.page_size, "none")
+
+    def load_bytes(self, node_id: int, name: str) -> bytes:
+        handle = self.node(node_id)
+        if name not in handle.set_mirror:
+            raise KeyError(name)
+        recs, _crc = self._fetch_set(node_id, name, np.dtype(np.uint8))
+        return recs.tobytes()
+
+    def drop_bytes(self, node_id: int, name: str) -> None:
+        handle = self.nodes[node_id]
+        if handle.alive and name in handle.set_mirror:
+            try:
+                handle.call("drop_set", name=name)
+            except DeadNodeError:
+                pass  # died under us: its blobs are gone anyway
+            handle.set_mirror.discard(name)
+
+    def has_bytes(self, node_id: int, name: str) -> bool:
+        handle = self.nodes[node_id]
+        return bool(handle.alive and name in handle.set_mirror)
+
     # -- sharded sets ---------------------------------------------------------
     def create_sharded_set(self, name: str, records: np.ndarray,
                            key_fn: Callable[[np.ndarray], np.ndarray],

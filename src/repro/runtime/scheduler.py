@@ -265,6 +265,49 @@ class ClusterScheduler:
                 plan.diversions[r] = (ranked[0], chosen)
         return plan
 
+    # -- serving-sequence placement (PR 9) -------------------------------------
+    def place_sequences(self, asks: Dict[int, Tuple[int, int]],
+                        deadline_s: float = 0.0) -> PlacementPlan:
+        """Admission-checked placement for serving sequences: ``asks`` maps
+        ``seq_id -> (affinity_node, kv_bytes)``. Session affinity makes the
+        hashed home node the top candidate (its pool may already hold the
+        session's KV pages); the ranking extends with the remaining alive
+        nodes, least live pressure first, exactly like the reducer re-route
+        loop. A refusal past ``deadline_s`` diverts the prefill to the next
+        admitting node (``plan.diversions[seq] = (affinity, chosen)``); when
+        every candidate refuses, the affinity node keeps the sequence — the
+        serving pool degrades to spill, it does not drop a session."""
+        plan = PlacementPlan(placement={}, diversions={})
+        refused_once: set = set()
+        planned: Dict[int, int] = {}
+        for seq_id, (affinity, nbytes) in asks.items():
+            ranked = ([affinity] if self.cluster.nodes[affinity].alive
+                      else [])
+            ranked = ranked + sorted(
+                (n for n in self.cluster.alive_node_ids()
+                 if n not in ranked),
+                key=lambda n: (self.node_pressure_live(n), n))
+            if not ranked:
+                raise ValueError("no alive nodes to place sequences on")
+            chosen = ranked[0]
+            for candidate in ranked:
+                node = self.cluster.nodes[candidate]
+                memory = node.memory if node.alive else None
+                first_probe = candidate not in refused_once
+                ask = nbytes + planned.get(candidate, 0)
+                if memory is None or memory.admission.admit_placement(
+                        ask, deadline_s=deadline_s if first_probe else 0.0,
+                        count=first_probe):
+                    chosen = candidate
+                    break
+                refused_once.add(candidate)
+                plan.refusals += 1
+            plan.placement[seq_id] = chosen
+            planned[chosen] = planned.get(chosen, 0) + nbytes
+            if chosen != ranked[0]:
+                plan.diversions[seq_id] = (ranked[0], chosen)
+        return plan
+
     def place_reducers(self, shuffle_name: str,
                        num_reducers: int) -> Dict[int, int]:
         """Locality-aware placement: reducer ``r`` goes to the alive node

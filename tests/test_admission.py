@@ -78,11 +78,16 @@ def test_try_reserve_unblocks_when_peer_releases():
     peer's release, not the timeout (no deadlock on refusal either way)."""
     mm = MemoryManager(1 << 20, admission_cap=128 << 10)
     held = mm.try_reserve(100 << 10)
-    t = threading.Timer(0.05, held.release)
-    t.start()
+    # release the moment the waiter is observably parked — event-driven via
+    # the admission notify hook, not a wall-clock timer guess
+    releaser = threading.Thread(
+        target=lambda: (mm.admission.wait_until(
+            lambda: mm.admission.waiting > 0, timeout=10.0), held.release()))
+    releaser.start()
     t0 = time.perf_counter()
     res = mm.try_reserve(100 << 10, timeout=10.0)
     waited = time.perf_counter() - t0
+    releaser.join()
     assert res is not None
     assert waited < 5.0                      # woken by the release
     assert mm.admission.throttled >= 1
@@ -378,9 +383,10 @@ def test_threaded_map_writers_bounded_inflight_no_deadlock_identical():
         hold = mm.try_reserve(32 << 10, urgency="low") if admission else None
         barrier.wait()
         if hold is not None:
-            deadline = time.time() + 10.0
-            while mm.admission.waiting == 0 and time.time() < deadline:
-                time.sleep(0.001)
+            # event-driven (no wall-clock polling): wait_until parks on the
+            # admission condition variable and wakes on the "waiting" notify
+            assert mm.admission.wait_until(
+                lambda: mm.admission.waiting > 0, timeout=10.0)
             hold.release()
         for t in threads:
             t.join()
