@@ -16,7 +16,6 @@ as views into the manager for existing callers.
 """
 from __future__ import annotations
 
-import threading
 from typing import Dict, Iterator, List, Optional
 
 import numpy as np
@@ -25,6 +24,7 @@ from .attributes import AttributeSet, DurabilityType, Lifetime
 from .locality_set import LocalitySet, Page
 from .memory_manager import MemoryManager, SpillStore
 from .paging import PagingSystem
+from .sanitizer import tracked_rlock
 from .tlsf import TLSF
 
 __all__ = ["BufferPool", "PoolExhaustedError", "SpillStore", "MemoryManager"]
@@ -56,7 +56,7 @@ class BufferPool:
         self.clock = 1  # logical time (paper: AccessRecency integers)
         self._pages: Dict[int, Page] = {}
         self._next_page_id = 0
-        self._lock = threading.RLock()
+        self._lock = tracked_rlock("buffer_pool")
 
     # -- delegation views (pre-PR-3 public surface) -----------------------------
     @property

@@ -29,12 +29,12 @@ the runtime as ``node.memory``.
 from __future__ import annotations
 
 import os
-import threading
 from typing import Dict, List, Optional, Set
 
 from .attributes import DurabilityType
 from .pagelog import PageLog
 from .paging import PagingSystem
+from .sanitizer import tracked_condition, tracked_rlock
 
 # smallest staging budget a node will advertise: tiny pools (unit tests,
 # smoke configs) must still admit a page-sized chunk or nothing ever moves
@@ -168,7 +168,7 @@ class AdmissionController:
         self.cap = (derive_staging_cap(manager.capacity,
                                        manager.pressure_watermark)
                     if cap is None else cap)
-        self._cv = threading.Condition(manager._lock)
+        self._cv = tracked_condition("memman.cv", manager._lock)
         self.refused = 0      # asks denied past their deadline
         self.throttled = 0    # asks that waited before being granted
         self.forced = 0       # urgency="required" grants past the deadline
@@ -307,7 +307,7 @@ class MemoryManager:
         self.pagelog = pagelog
         self.paging = PagingSystem(policy)
         self.pressure_watermark = pressure_watermark
-        self._lock = threading.RLock()
+        self._lock = tracked_rlock("memman")
         self.admission = AdmissionController(self, admission_cap)
         # live counters
         self.resident_bytes = 0
@@ -399,9 +399,13 @@ class MemoryManager:
         """Persist one page image into the durable log, keyed
         ``(set, page.log_seq)``; first write allocates the set's next
         sequence number, rewrites supersede in place (append-only)."""
+        # The log runs under its own lock (and fsyncs outside it); holding
+        # the manager lock across disk I/O would stall every accounting hook
+        # behind an appender.  Same-page write races are excluded upstream
+        # by the buffer pool's lock, so seq consistency survives the move.
+        entry = self.pagelog.append(
+            set_name, data, seq=page.log_seq if page.log_seq >= 0 else None)
         with self._lock:
-            entry = self.pagelog.append(
-                set_name, data, seq=page.log_seq if page.log_seq >= 0 else None)
             page.log_seq = entry.seq
             page.durable = True
             self.stats["log_bytes"] += len(data)

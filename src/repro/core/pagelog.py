@@ -40,6 +40,9 @@ import zlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from . import sanitizer
+from .sanitizer import tracked_lock, tracked_rlock
+
 MAGIC = 0x50474C31  # "PGL1"
 # magic u32 | crc u32 | epoch i64 | seq i64 | name_len u16 | payload_len u32
 # | flags u8 — crc covers everything after itself (tail + name + payload)
@@ -168,7 +171,13 @@ class PageLog:
         os.makedirs(directory, exist_ok=True)
         self.path = os.path.join(directory, LOG_FILENAME)
         self.index = ConsistentHashIndex(index_buckets)
-        self._lock = threading.RLock()
+        self._lock = tracked_rlock("pagelog")
+        # fsync order: _fsync_lock -> _lock, never the reverse.  The index
+        # lock is released before the disk sync so readers of other sets do
+        # not stall behind an appender's fsync; _fsync_lock serialises the
+        # tail syncs themselves (two appenders must not double-count one
+        # batched sync).
+        self._fsync_lock = tracked_lock("pagelog.fsync")
         self._append_fh = None
         self._read_fh = None
         self._next_seq: Dict[str, int] = {}
@@ -240,16 +249,36 @@ class PageLog:
         self.bytes_appended += nbytes
         self._file_bytes += nbytes
         self._unsynced += nbytes
-        if (self.fsync_policy == "always"
-                or (self.fsync_policy == "group"
-                    and self._unsynced >= self.group_bytes)):
-            self._fsync(fh)
         return start + _HEADER.size + len(nb), epoch
 
-    def _fsync(self, fh) -> None:
-        os.fsync(fh.fileno())
-        self.fsync_count += 1
-        self._unsynced = 0
+    def _sync_tail(self, force: bool = False) -> None:
+        """Fsync the unsynced tail if the policy says it is due.  Called by
+        the public mutators *after* releasing the index lock: a reader of an
+        unrelated set must never stall behind an appender's disk sync."""
+        with self._fsync_lock:
+            with self._lock:
+                fh = self._append_fh
+                due = fh is not None and self._unsynced and (
+                    force
+                    or self.fsync_policy == "always"
+                    or (self.fsync_policy == "group"
+                        and self._unsynced >= self.group_bytes))
+                if not due:
+                    return
+                pending = self._unsynced
+            with sanitizer.blocking_region("pagelog.fsync",
+                                           allow=("pagelog.fsync",)):
+                try:
+                    # pangea: allow(R3): tail sync holds only pagelog.fsync; the index lock was released above
+                    os.fsync(fh.fileno())
+                except (ValueError, OSError):
+                    # A concurrent compact() swapped and closed the append
+                    # handle; the compacted file was fsynced whole, so the
+                    # tail this call meant to sync is already durable.
+                    return
+            with self._lock:
+                self.fsync_count += 1
+                self._unsynced = max(0, self._unsynced - pending)
 
     def next_seq(self, name: str) -> int:
         with self._lock:
@@ -274,7 +303,8 @@ class PageLog:
                 self._live_bytes -= _record_size(name, prior.length)
             self._live_bytes += _record_size(name, len(payload))
             self.maybe_compact()
-            return entry
+        self._sync_tail()
+        return entry
 
     def drop_set(self, name: str) -> None:
         """Tombstone a set: replay will not resurrect its entries."""
@@ -288,6 +318,7 @@ class PageLog:
             self._live_bytes -= sum(_record_size(name, e.length)
                                     for e in entries)
             self.maybe_compact()
+        self._sync_tail()
 
     def rename_set(self, old: str, new: str) -> None:
         """Re-key a set's entries in O(1) log bytes: a rename record whose
@@ -302,6 +333,7 @@ class PageLog:
             delta = len(new.encode("utf-8")) - len(old.encode("utf-8"))
             self._live_bytes += delta * len(entries)
             self.maybe_compact()
+        self._sync_tail()
 
     # -- read path ---------------------------------------------------------------
     def read(self, name: str, seq: int) -> bytes:
@@ -380,6 +412,7 @@ class PageLog:
                                                FLAG_DATA, e.epoch))
                         rewritten += 1
                 out.flush()
+                # pangea: allow(R3): compaction is a whole-file rewrite; it must commit under the index lock so readers never see a half-swapped index
                 os.fsync(out.fileno())
             # swap + reopen: handles point at the old inode until replaced
             if self._append_fh is not None:
@@ -392,12 +425,16 @@ class PageLog:
             try:
                 dirfd = os.open(self.directory, os.O_RDONLY)
                 try:
+                    # pangea: allow(R3): directory fsync is part of the same atomic swap commit point as the file fsync above
                     os.fsync(dirfd)
                 finally:
                     os.close(dirfd)
             except OSError:  # pragma: no cover - platform without dir fsync
                 pass
-            # offsets all moved: rebuild the index from the new file
+            # offsets all moved: rebuild the index from the new file.  The
+            # rewrite was fsynced whole, so any tail _sync_tail() still owed
+            # is already durable.
+            self._unsynced = 0
             self.index = ConsistentHashIndex(self.index.num_buckets)
             scan_log(self.path, self.index, {})
             self.generation = new_gen
@@ -458,11 +495,10 @@ class PageLog:
         ``close`` and ``group`` fsync policies drain any unsynced tail here
         so a clean shutdown is durable."""
         self.stop_compactor()
+        if self.fsync_policy in ("close", "group"):
+            self._sync_tail(force=True)
         with self._lock:
             if self._append_fh is not None:
-                if (self.fsync_policy in ("close", "group")
-                        and self._unsynced):
-                    self._fsync(self._append_fh)
                 self._append_fh.close()
                 self._append_fh = None
             if self._read_fh is not None:

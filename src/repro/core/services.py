@@ -19,7 +19,6 @@ Page layout for record pages: ``[count:int64][record bytes...]``.
 """
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -32,6 +31,7 @@ from .columnar import (ColumnarWriter, _col_view, _field_layout,
                        columns_to_records, iter_column_blocks,
                        records_to_columns)
 from .locality_set import LocalitySet, Page
+from .sanitizer import tracked_lock
 
 _HEADER = 8  # int64 record count at page start
 
@@ -215,7 +215,7 @@ class _SmallPageAllocator:
         self._page: Optional[Page] = None
         self._next_off = 0
         self._outstanding = 0
-        self._lock = threading.Lock()
+        self._lock = tracked_lock("services.smallpage")
 
     def alloc_small(self) -> Tuple[Page, int]:
         """Returns ``(large_page, offset)`` with the large page pinned once
@@ -351,7 +351,7 @@ class ShuffleService:
             self.partition_sets.append(ls)
             self._allocators.append(_SmallPageAllocator(pool, ls))
         self._buffers: Dict[Tuple[int, int], VirtualShuffleBuffer] = {}
-        self._lock = threading.Lock()  # buffer map + write counters
+        self._lock = tracked_lock("services.shuffle")  # buffer map + write counters
         # per-partition write accounting: what the locality-aware scheduler
         # reads to place reducers where their input already lives
         self.partition_records: List[int] = [0] * num_partitions
@@ -450,7 +450,7 @@ class ColumnarShuffleService:
         # page allocation in the landing loop. Appends serialize under
         # ``_lock``, consistent with the per-node CRC-chain contract.
         self._writers: List[ColumnarWriter] = []
-        self._lock = threading.Lock()
+        self._lock = tracked_lock("services.columnar")
         for p in range(num_partitions):
             attrs = attrs_factory() if attrs_factory else columnar_job_data_attrs()
             ls = pool.create_set(f"{name}/part{p}", page_size, attrs)

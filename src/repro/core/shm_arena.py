@@ -23,11 +23,12 @@ leak check the cluster runs on close.
 from __future__ import annotations
 
 import secrets
-import threading
 from multiprocessing import resource_tracker, shared_memory
 from typing import Dict, Iterable, List, Optional
 
 import numpy as np
+
+from .sanitizer import tracked_lock
 
 
 class ArenaFullError(RuntimeError):
@@ -92,7 +93,7 @@ class ShmArena:
         self._free: List[int] = list(range(self.num_frames)) if owner else []
         # allocator ops can come from concurrent driver threads (the
         # transfer engine ships shards in parallel)
-        self._alloc_lock = threading.Lock()
+        self._alloc_lock = tracked_lock("shm_arena")
         # Observability: the leak check wants in-use == 0 at close, the
         # benchmark wants peak occupancy.
         self.frames_in_use = 0
@@ -147,6 +148,15 @@ class ShmArena:
     def free_frames(self) -> int:
         with self._alloc_lock:
             return len(self._free)
+
+    def reset_counters(self) -> None:
+        """Zero the observability counters (``puts``/``bytes_put``/
+        ``peak_frames``) so tests can assert per-test deltas on a shared
+        arena; ``frames_in_use`` is live accounting and is left alone."""
+        with self._alloc_lock:
+            self.puts = 0
+            self.bytes_put = 0
+            self.peak_frames = self.frames_in_use
 
     # -- reader side (works for the owner too) -----------------------------
     def read(self, desc: Dict[str, object]) -> np.ndarray:

@@ -63,6 +63,7 @@ from ..core.columnar import (ColumnarWriter, ColumnLayout, _field_layout,
 from ..core.locality_set import LocalitySet
 from ..core.memory_manager import MemoryManager, derive_staging_cap
 from ..core.pagelog import PageLog
+from ..core.sanitizer import tracked_lock
 from ..core.replication import (DistributedSet, PartitionScheme,
                                 ReplicaRegistration,
                                 combine_content_checksums,
@@ -496,7 +497,7 @@ class Cluster:
         self.scheduler = ClusterScheduler(self)
         self._transfer_workers = transfer_workers
         self._transfer: Optional[TransferEngine] = None
-        self._acct_lock = threading.Lock()
+        self._acct_lock = tracked_lock("cluster.acct")
         self.net_bytes = 0          # bytes that crossed node boundaries
         self.local_bytes = 0        # bytes moved pool->pool on one node
 
@@ -1448,7 +1449,7 @@ class ClusterShuffle:
         # whose byte-local holder refused admission (carried bugfix)
         self.backup_diversions: List[Tuple[int, int, int]] = []
         self._services: Dict[int, ShuffleService] = {}
-        self._svc_lock = threading.Lock()  # threaded mappers race creation
+        self._svc_lock = tracked_lock("shuffle.svc")  # threaded mappers race creation
         self._pulled: Dict[int, Tuple[str, int]] = {}  # reducer -> (set, node)
         self._deferred_release: set = set()  # reducers whose map-side drop waits
         # worker node -> shard-map work items it performed, for straggler

@@ -45,6 +45,7 @@ from ..core.columnar import (ColumnarWriter, columns_to_records,
                              iter_column_blocks, records_to_columns,
                              route_partition_ids, set_column_crcs)
 from ..core.memory_manager import MemoryManager, derive_staging_cap
+from ..core.sanitizer import tracked_lock
 from ..core.replication import (PartitionScheme, record_content_checksum,
                                 replica_nodes, shard_checksum)
 from ..core.services import (ColumnarShuffleService, SequentialWriter,
@@ -1096,7 +1097,7 @@ class ProcCluster:
         self.scheduler = ClusterScheduler(self)
         self._transfer_workers = transfer_workers
         self._transfer: Optional[TransferEngine] = None
-        self._acct_lock = threading.Lock()
+        self._acct_lock = tracked_lock("proc.acct")
         self.net_bytes = 0
         self.local_bytes = 0
         self._closed = False
@@ -1611,7 +1612,7 @@ class ProcShuffle:
         self.scheduler = cluster.scheduler
         self.placement: Optional[Dict[int, int]] = None
         self.diversions: Dict[int, Tuple[int, int]] = {}
-        self._lock = threading.Lock()
+        self._lock = tracked_lock("proc.shuffle")
         self._begun: set = set()
         # worker node -> [(sset, shard_id, key_field, batch, n)]
         self._work: Dict[int, List[tuple]] = {}

@@ -20,17 +20,18 @@ from __future__ import annotations
 
 import base64
 import json
-import pickle
+import pickle  # the counted escape hatch: R1 exempts exactly this module
 import socket
 import struct
-import threading
 import traceback
 from typing import Any, Callable, Dict, Optional, Tuple
+
+from ..core.sanitizer import blocking_region, tracked_lock
 
 _FRAME = struct.Struct("<II")
 _MAX_META = 64 << 20  # sanity bound against desynced streams
 
-_counter_lock = threading.Lock()
+_counter_lock = tracked_lock("rpc.counters")
 _counters = {"messages": 0, "raw_bytes": 0, "pickle_fallbacks": 0}
 
 
@@ -44,6 +45,15 @@ def pickle_fallbacks() -> int:
 def wire_counters() -> Dict[str, int]:
     with _counter_lock:
         return dict(_counters)
+
+
+def reset_counters() -> None:
+    """Zero the process-global wire counters.  Tests assert *deltas* across
+    one operation; without this hook every assertion depends on what ran
+    before it in the process (order-dependent flakes)."""
+    with _counter_lock:
+        for k in _counters:
+            _counters[k] = 0
 
 
 class ConnectionClosed(ConnectionError):
@@ -92,13 +102,19 @@ def send_msg(sock: socket.socket, meta: Dict[str, Any],
              raw: bytes = b"") -> None:
     body = json.dumps(meta, default=_json_default,
                       separators=(",", ":")).encode("utf-8")
-    sock.sendall(_FRAME.pack(len(body), len(raw)) + body + raw)
+    with blocking_region("rpc.send", allow=("rpc.conn",)):
+        sock.sendall(_FRAME.pack(len(body), len(raw)) + body + raw)
     with _counter_lock:
         _counters["messages"] += 1
         _counters["raw_bytes"] += len(raw)
 
 
 def recv_msg(sock: socket.socket) -> Tuple[Dict[str, Any], bytes]:
+    with blocking_region("rpc.recv", allow=("rpc.conn",)):
+        return _recv_msg(sock)
+
+
+def _recv_msg(sock: socket.socket) -> Tuple[Dict[str, Any], bytes]:
     meta_len, raw_len = _FRAME.unpack(_recvall(sock, _FRAME.size))
     if meta_len > _MAX_META:
         raise ConnectionError(f"oversized envelope ({meta_len} bytes)")
@@ -116,14 +132,19 @@ class RpcConnection:
     def __init__(self, sock: socket.socket, timeout_s: float = 60.0):
         self.sock = sock
         self.sock.settimeout(timeout_s)
-        self._lock = threading.Lock()
+        self._lock = tracked_lock("rpc.conn")
         self.calls = 0
 
     def call(self, op: str, raw: bytes = b"",
              **fields: Any) -> Tuple[Dict[str, Any], bytes]:
         meta = {"op": op, **fields}
+        # Holding rpc.conn across the round trip is the design: one
+        # in-flight call per connection.  blocking_region() at the socket
+        # layer allows exactly this lock and no other.
         with self._lock:
+            # pangea: allow(R3): rpc.conn exists to serialize this round trip
             send_msg(self.sock, meta, raw)
+            # pangea: allow(R3): reply is read on the same serialized round trip
             reply, reply_raw = recv_msg(self.sock)
             self.calls += 1
         if not reply.get("ok", False):

@@ -42,6 +42,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.kvcache import HostSlabStore, PagedKVCache
+from ..core.sanitizer import tracked_rlock
 from .cluster import DeadNodeError
 from .scheduler import ClusterScheduler, PlacementPlan
 
@@ -82,6 +83,9 @@ class TieredSlabStore(HostSlabStore):
     def __init__(self, tier: "ServingTier", node_id: int):
         self.tier = tier
         self.node_id = node_id
+        # guards the slab maps/order/byte counter only; admission waits,
+        # reservation releases, and cluster RPCs all happen outside it
+        self._lock = tracked_rlock("serving.slabstore")
         self._local: Dict[int, Tuple[np.ndarray, object]] = {}
         self._order: List[int] = []          # FIFO overflow order
         self._inflight: Dict[int, Tuple[object, int]] = {}
@@ -107,28 +111,43 @@ class TieredSlabStore(HostSlabStore):
     # -- HostSlabStore interface ---------------------------------------------
     def put(self, page_id: int, slab: np.ndarray) -> None:
         self._reap()
+        # admission can wait (urgency="required" paces); never under _lock
         res = self._charge(slab.nbytes)
-        self._local[page_id] = (slab, res)
-        self._order.append(page_id)
-        self.host_bytes += slab.nbytes
-        self.stats["host_puts"] += 1
+        with self._lock:
+            prior = self._local.pop(page_id, None)
+            if prior is not None:
+                # superseding a live slab: drop the old entry's accounting
+                # (the old code leaked its reservation and double-counted
+                # host_bytes, and left a duplicate FIFO slot behind)
+                self._order.remove(page_id)
+                self.host_bytes -= prior[0].nbytes
+            self._local[page_id] = (slab, res)
+            self._order.append(page_id)
+            self.host_bytes += slab.nbytes
+            self.stats["host_puts"] += 1
+        if prior is not None and prior[1] is not None:
+            prior[1].release()   # notifies admission waiters: outside _lock
         self._maybe_overflow()
 
     def take(self, page_id: int) -> Optional[np.ndarray]:
         self._reap()
-        if page_id in self._local:
-            slab, res = self._local.pop(page_id)
-            self._order.remove(page_id)
-            self.host_bytes -= slab.nbytes
+        with self._lock:
+            entry = self._local.pop(page_id, None)
+            if entry is not None:
+                self._order.remove(page_id)
+                self.host_bytes -= entry[0].nbytes
+            holder = None if entry is not None else self._remote.get(page_id)
+        if entry is not None:
+            slab, res = entry
             if res is not None:
                 res.release()
             # an in-flight remote copy is orphaned; _reap drops the blob
             return slab
-        holder = self._remote.get(page_id)
         if holder is not None:
             self.tier._fire("during_restore")
             data = self.tier.cluster.load_bytes(holder, self._blob(page_id))
-            self._remote.pop(page_id)
+            with self._lock:
+                self._remote.pop(page_id, None)
             self.tier.cluster.drop_bytes(holder, self._blob(page_id))
             self.stats["remote_fetches"] += 1
             return np.frombuffer(data, self.tier.dtype).reshape(
@@ -137,9 +156,11 @@ class TieredSlabStore(HostSlabStore):
 
     def peek(self, page_id: int) -> Optional[np.ndarray]:
         self._reap()
-        if page_id in self._local:
-            return self._local[page_id][0]
-        holder = self._remote.get(page_id)
+        with self._lock:
+            entry = self._local.get(page_id)
+            holder = None if entry is not None else self._remote.get(page_id)
+        if entry is not None:
+            return entry[0]
         if holder is not None:
             data = self.tier.cluster.load_bytes(holder, self._blob(page_id))
             return np.frombuffer(data, self.tier.dtype).reshape(
@@ -148,39 +169,42 @@ class TieredSlabStore(HostSlabStore):
 
     def discard(self, page_id: int) -> None:
         self._reap()
-        entry = self._local.pop(page_id, None)
-        if entry is not None:
-            slab, res = entry
-            self._order.remove(page_id)
-            self.host_bytes -= slab.nbytes
-            if res is not None:
-                res.release()
-        holder = self._remote.pop(page_id, None)
+        with self._lock:
+            entry = self._local.pop(page_id, None)
+            if entry is not None:
+                self._order.remove(page_id)
+                self.host_bytes -= entry[0].nbytes
+            holder = self._remote.pop(page_id, None)
+        if entry is not None and entry[1] is not None:
+            entry[1].release()
         if holder is not None:
             self.tier.cluster.drop_bytes(holder, self._blob(page_id))
 
     def __contains__(self, page_id: int) -> bool:
-        return (page_id in self._local or page_id in self._inflight
-                or page_id in self._remote)
+        with self._lock:
+            return (page_id in self._local or page_id in self._inflight
+                    or page_id in self._remote)
 
     def __len__(self) -> int:
-        return len(self._local) + len(self._remote)
+        with self._lock:
+            return len(self._local) + len(self._remote)
 
     # -- level-3 overflow -----------------------------------------------------
     def _maybe_overflow(self) -> None:
         budget = self.tier.host_budget_bytes
         if budget is None:
             return
-        inflight = sum(self._local[p][0].nbytes for p in self._inflight
-                       if p in self._local)
-        excess = self.host_bytes - inflight - budget
-        for pid in self._order:
-            if excess <= 0:
-                break
-            if pid in self._inflight or pid not in self._local:
-                continue
-            if self._spill_one(pid):
-                excess -= self._local[pid][0].nbytes
+        with self._lock:
+            inflight = sum(self._local[p][0].nbytes for p in self._inflight
+                           if p in self._local)
+            excess = self.host_bytes - inflight - budget
+            for pid in list(self._order):
+                if excess <= 0:
+                    break
+                if pid in self._inflight or pid not in self._local:
+                    continue
+                if self._spill_one(pid):
+                    excess -= self._local[pid][0].nbytes
 
     def _spill_one(self, page_id: int) -> bool:
         target = self.tier._spill_target(self.node_id)
@@ -201,10 +225,13 @@ class TieredSlabStore(HostSlabStore):
         return target
 
     def _reap(self) -> None:
-        for pid, (fut, target) in list(self._inflight.items()):
-            if not fut.done():
-                continue
-            del self._inflight[pid]
+        with self._lock:
+            done = [(pid, fut, target)
+                    for pid, (fut, target) in self._inflight.items()
+                    if fut.done()]
+            for pid, _fut, _target in done:
+                del self._inflight[pid]
+        for pid, fut, target in done:
             try:
                 fut.result(timeout=0)
             except Exception:
@@ -212,16 +239,18 @@ class TieredSlabStore(HostSlabStore):
                 # here, so nothing is lost — retry elsewhere on the next put
                 self.stats["spill_failures"] += 1
                 continue
-            entry = self._local.pop(pid, None)
+            with self._lock:
+                entry = self._local.pop(pid, None)
+                if entry is not None:
+                    self._order.remove(pid)
+                    self.host_bytes -= entry[0].nbytes
+                    self._remote[pid] = target
             if entry is None:     # taken/discarded while the copy flew
                 self.tier.cluster.drop_bytes(target, self._blob(pid))
                 continue
             slab, res = entry
-            self._order.remove(pid)
-            self.host_bytes -= slab.nbytes
             if res is not None:
                 res.release()
-            self._remote[pid] = target
             self.stats["remote_spills"] += 1
 
     def close(self) -> None:

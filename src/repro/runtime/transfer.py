@@ -37,6 +37,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from ..core.attributes import AttributeSet, StorageScheme
+from ..core.sanitizer import note_blocking, tracked_condition, tracked_lock
 from ..core.services import _HEADER, PageIterator, SequentialWriter
 
 
@@ -150,6 +151,9 @@ class TransferFuture:
         return self._done.is_set()
 
     def result(self, timeout: Optional[float] = None):
+        if timeout is None or timeout > 0:
+            # a future wait is a real block (a 0-timeout call is a poll)
+            note_blocking("transfer.result")
         if not self._done.wait(timeout):
             raise TimeoutError(f"transfer job {self.label or self.job_id} "
                                f"did not finish within {timeout}s")
@@ -212,13 +216,13 @@ class TransferEngine:
         self.name = name
         self.dest_inflight_cap = dest_inflight_cap
         self._ready: "queue.Queue[Optional[_Job]]" = queue.Queue()
-        self._lock = threading.Lock()
+        self._lock = tracked_lock("transfer.engine")
         self._pending: List[_Job] = []      # waiting on deps or dest headroom
         self._inflight = 0                  # submitted but not finished
         self._dest_bytes: dict = {}         # dest -> bytes currently in flight
         self.dest_holds = 0                 # jobs held back for dest headroom
         self._workers: List[threading.Thread] = []
-        self._idle = threading.Condition(self._lock)
+        self._idle = tracked_condition("transfer.idle", self._lock)
         self._closed = False
         self._ids = itertools.count()
 

@@ -11,6 +11,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set
 
+from ..core.sanitizer import tracked_lock
+
 
 class HostMonitor:
     """Heartbeat table. A host missing ``timeout`` seconds is declared dead;
@@ -24,7 +26,7 @@ class HostMonitor:
         self._last: Dict[int, float] = {h: clock() for h in hosts}
         self._dead: Set[int] = set()
         self._callbacks: List[Callable[[Set[int]], None]] = []
-        self._lock = threading.Lock()
+        self._lock = tracked_lock("watchdog")
 
     def heartbeat(self, host: int) -> None:
         with self._lock:

@@ -118,16 +118,17 @@ def install() -> bool:
         import hypothesis  # noqa: F401
         return False
     except ImportError:
-        pass
-    mod = types.ModuleType("hypothesis")
-    mod.given = given
-    mod.settings = settings
-    mod.assume = assume
-    mod.HealthCheck = HealthCheck
-    strategies = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "booleans", "tuples", "lists"):
-        setattr(strategies, name, globals()[name])
-    mod.strategies = strategies
-    sys.modules["hypothesis"] = mod
-    sys.modules["hypothesis.strategies"] = strategies
-    return True
+        # missing on purpose: the shim below is the substitute, built right
+        # here so the handler visibly does something (R7)
+        mod = types.ModuleType("hypothesis")
+        mod.given = given
+        mod.settings = settings
+        mod.assume = assume
+        mod.HealthCheck = HealthCheck
+        strategies = types.ModuleType("hypothesis.strategies")
+        for name in ("integers", "floats", "booleans", "tuples", "lists"):
+            setattr(strategies, name, globals()[name])
+        mod.strategies = strategies
+        sys.modules["hypothesis"] = mod
+        sys.modules["hypothesis.strategies"] = strategies
+        return True

@@ -20,6 +20,7 @@ import pytest
 from repro.core import (BufferPool, MemoryManager, derive_staging_cap)
 from repro.core.memory_manager import STAGING_CAP_FLOOR
 from repro.runtime.cluster import Cluster, ClusterShuffle
+from repro.core.sanitizer import tracked_lock
 from repro.runtime.transfer import TransferEngine
 
 PAIR = np.dtype([("key", np.int64), ("val", np.float64)])
@@ -274,7 +275,7 @@ def test_clear_shuffle_is_a_job_event():
 # -- transfer engine per-destination caps (tentpole) --------------------------
 def test_transfer_engine_caps_inflight_bytes_per_destination():
     engine = TransferEngine(4, name="adm-test", dest_inflight_cap=100)
-    lock = threading.Lock()
+    lock = tracked_lock("test.adm")
     state = {"now": 0, "peak": 0}
 
     def job():

@@ -1,0 +1,265 @@
+"""Runtime sanitizer (core/sanitizer.py): lock-order cycles, blocking while
+holding, condition-wait suspension — plus regression tests for the genuine
+violations PR 10's lint surfaced (page-log fsync under the index lock,
+serving slab-store double-put reservation leak) and the counter-reset hooks."""
+import numpy as np
+import pytest
+
+from repro.core import sanitizer
+from repro.core.memory_manager import MemoryManager
+from repro.core.pagelog import PageLog
+from repro.core.sanitizer import (blocking_region, note_blocking,
+                                  sanitizer_report, tracked_condition,
+                                  tracked_lock, tracked_rlock)
+from repro.core.shm_arena import ShmArena, arena_name
+from repro.runtime import rpc
+from repro.runtime.serving import TieredSlabStore
+
+
+@pytest.fixture
+def sanitize():
+    prev = sanitizer.enabled()
+    sanitizer.enable(True)
+    sanitizer.reset()
+    yield sanitizer
+    sanitizer.reset()
+    sanitizer.enable(prev)
+
+
+# -- lock-order graph ---------------------------------------------------------
+def test_lock_inversion_reported_as_cycle_by_name(sanitize):
+    """Negative path: seed the classic A->B / B->A inversion and assert the
+    report names exactly the two locks involved."""
+    a = tracked_lock("inv.alpha")
+    b = tracked_lock("inv.beta")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    report = sanitizer_report()
+    assert ["inv.alpha", "inv.beta"] in report["cycles"]
+    assert report["violations"] >= 1
+    edges = {(e[0], e[1]) for e in report["edges"]}
+    assert ("inv.alpha", "inv.beta") in edges
+    assert ("inv.beta", "inv.alpha") in edges
+
+
+def test_consistent_order_is_not_a_cycle(sanitize):
+    a = tracked_lock("ord.alpha")
+    b = tracked_lock("ord.beta")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert sanitizer_report()["cycles"] == []
+
+
+def test_rlock_reentry_is_not_an_edge(sanitize):
+    r = tracked_rlock("re.lock")
+    with r:
+        with r:
+            pass
+    report = sanitizer_report()
+    assert report["cycles"] == []
+    assert report["acquires"]["re.lock"] == 1  # one hold, depth-counted
+
+
+def test_two_instances_of_one_name_are_a_self_cycle(sanitize):
+    l1 = tracked_lock("dup.name")
+    l2 = tracked_lock("dup.name")
+    with l1:
+        with l2:
+            pass
+    assert ["dup.name"] in sanitizer_report()["cycles"]
+
+
+# -- blocking while holding ---------------------------------------------------
+def test_blocking_region_records_held_locks(sanitize):
+    lk = tracked_lock("blk.lock")
+    with lk:
+        note_blocking("disk.io")
+    events = sanitizer_report()["blocking_while_holding"]
+    assert len(events) == 1
+    assert events[0]["op"] == "disk.io"
+    assert events[0]["held"] == ["blk.lock"]
+
+
+def test_blocking_region_allow_list_suppresses(sanitize):
+    lk = tracked_lock("blk.sanctioned")
+    with lk:
+        with blocking_region("disk.io", allow=("blk.sanctioned",)):
+            pass
+    assert sanitizer_report()["blocking_while_holding"] == []
+
+
+def test_blocking_with_no_lock_held_is_clean(sanitize):
+    note_blocking("disk.io")
+    assert sanitizer_report()["violations"] == 0
+
+
+# -- condition-wait suspension ------------------------------------------------
+def test_wait_on_own_condition_is_sanctioned(sanitize):
+    cv = tracked_condition("cv.own")
+    with cv:
+        cv.wait(timeout=0.01)
+    report = sanitizer_report()
+    assert report["blocking_while_holding"] == []
+    assert report["violations"] == 0
+
+
+def test_wait_while_holding_another_lock_is_flagged(sanitize):
+    outer = tracked_lock("cv.outer")
+    cv = tracked_condition("cv.inner")
+    with outer:
+        with cv:
+            cv.wait(timeout=0.01)
+    events = sanitizer_report()["blocking_while_holding"]
+    assert any(e["held"] == ["cv.outer"] for e in events)
+
+
+def test_hold_frame_restored_after_wait(sanitize):
+    cv = tracked_condition("cv.restore")
+    with cv:
+        cv.wait(timeout=0.01)
+        assert "cv.restore.lock" in sanitizer.held_lock_names()
+    assert sanitizer.held_lock_names() == []
+
+
+# -- bookkeeping --------------------------------------------------------------
+def test_hold_times_and_reset(sanitize):
+    lk = tracked_lock("ht.lock")
+    with lk:
+        pass
+    report = sanitizer_report()
+    assert report["longest_holds"] and report["longest_holds"][0][0] == "ht.lock"
+    sanitizer.reset()
+    report = sanitizer_report()
+    assert report["longest_holds"] == [] and report["acquires"] == {}
+
+
+def test_disabled_mode_records_nothing():
+    prev = sanitizer.enabled()
+    sanitizer.enable(False)
+    try:
+        sanitizer.reset()
+        lk = tracked_lock("off.lock")
+        with lk:
+            note_blocking("disk.io")
+        report = sanitizer_report()
+        assert report["acquires"] == {}
+        assert report["violations"] == 0
+    finally:
+        sanitizer.enable(prev)
+
+
+def test_assert_clean_raises_on_violation(sanitize):
+    lk = tracked_lock("ac.lock")
+    with lk:
+        note_blocking("disk.io")
+    with pytest.raises(AssertionError, match="violation"):
+        sanitizer.assert_clean("test")
+    sanitizer.reset()
+    sanitizer.assert_clean("test")  # clean after reset
+
+
+# -- regression: page-log fsync no longer runs under the index lock -----------
+def test_pagelog_always_policy_fsyncs_outside_index_lock(tmp_path, sanitize):
+    log = PageLog(str(tmp_path), fsync_policy="always")
+    for i in range(3):
+        log.append("set", bytes([i]) * 64)
+    log.close()
+    assert log.fsync_count >= 3
+    events = sanitizer_report()["blocking_while_holding"]
+    held = [n for e in events for n in e["held"]]
+    assert "pagelog" not in held, events  # index lock released before fsync
+    assert sanitizer_report()["violations"] == 0
+
+
+def test_pagelog_group_policy_still_batches(tmp_path):
+    log = PageLog(str(tmp_path), fsync_policy="group", group_bytes=4096)
+    for _ in range(8):
+        log.append("s", b"x" * 256)
+    assert log.fsync_count == 0   # under the batch threshold
+    log.append("s", b"y" * 4096)  # pushes the tail past group_bytes
+    assert log.fsync_count == 1
+    log.append("s", b"z" * 128)   # small tail left unsynced...
+    log.close()
+    assert log.fsync_count == 2   # ...drained by close
+
+
+# -- regression: slab-store double put superseded the charged reservation ----
+class _StubCluster:
+    admission = True
+    admission_timeout_s = 0.2
+
+
+class _StubTier:
+    """The minimum surface TieredSlabStore touches for local-only puts."""
+    host_budget_bytes = None
+    dtype = np.float32
+
+    def __init__(self, memory):
+        self._mem = memory
+        self.cluster = _StubCluster()
+
+    def _memory(self, node_id):
+        return self._mem
+
+    def _fire(self, event):
+        pass
+
+
+def test_slabstore_double_put_releases_prior_reservation():
+    memory = MemoryManager(capacity=64 << 20)
+    store = TieredSlabStore(_StubTier(memory), node_id=0)
+    slab1 = np.ones(1024, dtype=np.float32)
+    slab2 = np.ones(2048, dtype=np.float32)
+    store.put(7, slab1)
+    assert memory.reserved_bytes == slab1.nbytes
+    store.put(7, slab2)   # supersedes: old charge must be released
+    assert memory.reserved_bytes == slab2.nbytes
+    assert store.host_bytes == slab2.nbytes
+    assert store._order.count(7) == 1
+    assert len(store) == 1
+    out = store.take(7)
+    assert out is slab2
+    assert memory.reserved_bytes == 0
+    assert store.host_bytes == 0
+
+
+def test_slabstore_discard_releases_charge():
+    memory = MemoryManager(capacity=64 << 20)
+    store = TieredSlabStore(_StubTier(memory), node_id=0)
+    store.put(1, np.ones(512, dtype=np.float32))
+    assert memory.reserved_bytes > 0
+    store.discard(1)
+    assert memory.reserved_bytes == 0
+
+
+# -- counter-reset hooks (order-independent assertions) -----------------------
+def test_rpc_reset_counters_zeroes_process_globals():
+    rpc._counters["messages"] += 3
+    rpc._counters["pickle_fallbacks"] += 1
+    rpc.reset_counters()
+    assert rpc.wire_counters() == {"messages": 0, "raw_bytes": 0,
+                                   "pickle_fallbacks": 0}
+    assert rpc.pickle_fallbacks() == 0
+
+
+def test_arena_reset_counters_keeps_live_accounting():
+    arena = ShmArena(arena_name("sanit"), frame_size=4096, num_frames=4,
+                     create=True, owner=True)
+    try:
+        desc = arena.put(b"x" * 100)
+        assert arena.puts == 1 and arena.bytes_put == 100
+        arena.reset_counters()
+        assert arena.puts == 0 and arena.bytes_put == 0
+        assert arena.frames_in_use == 1       # live accounting untouched
+        assert arena.peak_frames == 1         # re-seeded from in-use
+        arena.free(desc)
+        assert arena.frames_in_use == 0
+    finally:
+        arena.close()
+        arena.unlink()

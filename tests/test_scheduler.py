@@ -12,6 +12,7 @@ import time
 import numpy as np
 import pytest
 
+from repro.core.sanitizer import tracked_lock
 from repro.data.pipeline import (DistributedBatchLoader, cluster_aggregate,
                                  write_sharded_token_dataset)
 from repro.runtime.cluster import (Cluster, ClusterShuffle, DeadNodeError,
@@ -53,7 +54,7 @@ def test_transfer_engine_runs_jobs_and_returns_results():
 
 def test_transfer_engine_orders_dependencies():
     order = []
-    lock = threading.Lock()
+    lock = tracked_lock("test.sched")
 
     def step(tag, delay=0.0):
         time.sleep(delay)

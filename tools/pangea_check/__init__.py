@@ -1,0 +1,21 @@
+"""pangea-check: AST-based invariant lint for the concurrent data plane.
+
+See ``tools/pangea_check/README.md`` for the rule table (R1-R7) and the
+waiver syntax.  Programmatic entry point: :func:`run_check`.
+"""
+from .rules import Finding, Waiver, check_file, check_paths, run_check  # noqa: F401
+
+RULES = {
+    "R1": "no-pickle: pickle only inside runtime/rpc.py's counted escape hatch",
+    "R2": "reservation-leak: reserve()/try_reserve() grants must be context-"
+          "managed, released, or handed off",
+    "R3": "blocking-in-lock: no blocking call (sleep/fsync/socket/wait/"
+          "future-result) inside a `with <lock>:` body",
+    "R4": "bare-lock: no threading.Lock/RLock/Condition outside "
+          "core/sanitizer.py — use tracked_lock()/tracked_condition()",
+    "R5": "arena-frame-leak: arena put() descriptors must reach free() or a "
+          "descriptor handoff",
+    "R6": "bare-except: `except:` hides the failure class",
+    "R7": "swallowed-importerror: `except ImportError: pass` silently "
+          "downgrades a missing dependency (the PR-7 dispatch bug class)",
+}

@@ -1,0 +1,79 @@
+"""CLI: ``python -m tools.pangea_check src tests --strict``.
+
+Exit status 0 only when every finding is waived, the number of used waivers
+stays within ``WAIVER_BUDGET``, and no waiver is stale (present in the
+source but matching no finding — suppressions must not outlive the code
+they excused).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import RULES
+from .rules import check_paths
+
+# The CI-asserted waiver budget.  Raising this number is a reviewed change:
+# every unit of budget is a named, justified exception to an invariant.
+WAIVER_BUDGET = 10
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="pangea_check",
+        description="invariant lint for the Pangea concurrent data plane")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on unwaived findings, budget overrun, or "
+                         "stale waivers")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--max-waivers", type=int, default=WAIVER_BUDGET,
+                    help=f"waiver budget (default {WAIVER_BUDGET})")
+    args = ap.parse_args(argv)
+
+    result = check_paths(args.paths)
+    over_budget = result.waivers_used > args.max_waivers
+
+    if args.as_json:
+        print(json.dumps({
+            "files_checked": result.files_checked,
+            "findings": [vars(f) for f in result.findings],
+            "waived": [vars(f) for f in result.waived],
+            "stale_waivers": [vars(w) for w in result.stale_waivers],
+            "waiver_budget": args.max_waivers,
+            "waivers_used": result.waivers_used,
+        }, indent=2))
+    else:
+        for f in result.findings:
+            print(f)
+        for f in result.waived:
+            print(f)
+        for w in result.stale_waivers:
+            print(f"{w.path}:{w.line}: stale waiver for {w.rule} "
+                  f"({w.reason!r}) — matches no finding, remove it")
+        print(f"pangea-check: {result.files_checked} files, "
+              f"{len(result.findings)} finding(s), "
+              f"{result.waivers_used}/{args.max_waivers} waivers used, "
+              f"{len(result.stale_waivers)} stale")
+        if result.findings and not args.strict:
+            by_rule = {}
+            for f in result.findings:
+                by_rule.setdefault(f.rule, 0)
+                by_rule[f.rule] += 1
+            for rule, n in sorted(by_rule.items()):
+                print(f"  {rule} x{n}: {RULES.get(rule, '?')}")
+
+    if args.strict and (result.findings or over_budget
+                        or result.stale_waivers):
+        if over_budget:
+            print(f"pangea-check: waiver budget exceeded "
+                  f"({result.waivers_used} > {args.max_waivers})",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

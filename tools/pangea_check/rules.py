@@ -1,0 +1,417 @@
+"""Rule implementations for pangea-check.
+
+One AST pass per file.  The checker is deliberately *intra-procedural* and
+heuristic where full proof would need dataflow (R2/R5 escape analysis): a
+grant or descriptor counts as handled when it is context-managed, explicitly
+released/freed, or *handed off* (returned, stored into a container/attribute,
+or passed to another call — ownership moved, the receiver is now
+responsible).  The runtime sanitizer (``core/sanitizer.py``) covers what the
+lexical pass cannot see across calls; together they gate CI.
+
+Waiver syntax (counted against the CI budget, stale waivers are errors)::
+
+    something_suspicious()   # pangea: allow(R3): one-line justification
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+# files (by posix-path suffix) structurally exempt from a rule
+PICKLE_ESCAPE_FILES = ("repro/runtime/rpc.py",)       # R1's counted hatch
+BARE_LOCK_HOME = ("repro/core/sanitizer.py",)         # R4's tower bottom
+
+_WAIVER_RE = re.compile(
+    r"#\s*pangea:\s*allow\(\s*(R\d+)\s*\)\s*:\s*(\S.*)")
+
+BLOCKING_ATTRS = {
+    "sleep", "fsync", "fdatasync", "sendall", "recv", "recv_into",
+    "accept", "connect", "select", "wait", "wait_for", "result", "join",
+}
+BLOCKING_NAMES = {"send_msg", "recv_msg", "sleep"}
+
+_LOCKISH_TAILS = ("lock", "mutex", "cv", "cond", "idle")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    waived: bool = False
+    waiver_reason: str = ""
+
+    def __str__(self) -> str:
+        w = "  [waived: " + self.waiver_reason + "]" if self.waived else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{w}"
+
+
+@dataclass
+class Waiver:
+    rule: str
+    path: str
+    line: int
+    reason: str
+    used: bool = False
+
+
+@dataclass
+class CheckResult:
+    findings: List[Finding] = field(default_factory=list)   # unwaived
+    waived: List[Finding] = field(default_factory=list)
+    stale_waivers: List[Waiver] = field(default_factory=list)
+    files_checked: int = 0
+
+    @property
+    def waivers_used(self) -> int:
+        return len(self.waived)
+
+
+def _is_lockish_name(name: str) -> bool:
+    n = name.lower().lstrip("_")
+    if n.endswith("clock"):
+        return False
+    return n in _LOCKISH_TAILS or any(
+        n == t or n.endswith("_" + t) or n.endswith(t)
+        for t in _LOCKISH_TAILS)
+
+
+def _lockish_expr(node: ast.expr) -> Optional[str]:
+    """If this with-item context looks like a lock/condition, return its
+    source text (used for the own-condition wait exemption)."""
+    if isinstance(node, ast.Attribute) and _is_lockish_name(node.attr):
+        return ast.unparse(node)
+    if isinstance(node, ast.Name) and _is_lockish_name(node.id):
+        return ast.unparse(node)
+    return None
+
+
+def _func_name(call: ast.Call) -> Tuple[Optional[str], Optional[ast.expr]]:
+    """(terminal name, receiver expr or None) of a call's function."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr, f.value
+    if isinstance(f, ast.Name):
+        return f.id, None
+    return None, None
+
+
+class _FileChecker:
+    def __init__(self, path: str, tree: ast.AST, source: str):
+        self.path = path
+        self.posix = path.replace(os.sep, "/")
+        self.tree = tree
+        self.source_lines = source.splitlines()
+        self.findings: List[Finding] = []
+
+    def add(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(rule, self.path, getattr(node, "lineno", 0), message))
+
+    def _exempt(self, suffixes: Sequence[str]) -> bool:
+        return any(self.posix.endswith(s) for s in suffixes)
+
+    # -- R1 -------------------------------------------------------------------
+    def check_pickle(self) -> None:
+        if self._exempt(PICKLE_ESCAPE_FILES):
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.split(".")[0] in ("pickle", "cPickle", "dill"):
+                        self.add("R1", node,
+                                 f"[no-pickle] import of {a.name!r} outside "
+                                 f"runtime/rpc.py's counted escape hatch")
+            elif isinstance(node, ast.ImportFrom):
+                if (node.module or "").split(".")[0] in ("pickle", "dill"):
+                    self.add("R1", node,
+                             f"[no-pickle] from-import of {node.module!r} "
+                             f"outside runtime/rpc.py")
+
+    # -- R4 -------------------------------------------------------------------
+    def check_bare_locks(self) -> None:
+        if self._exempt(BARE_LOCK_HOME):
+            return
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name, recv = _func_name(node)
+            if name not in ("Lock", "RLock", "Condition"):
+                continue
+            recv_src = ast.unparse(recv) if recv is not None else ""
+            if recv_src in ("threading", "multiprocessing") or recv is None:
+                self.add("R4", node,
+                         f"[bare-lock] {recv_src + '.' if recv_src else ''}"
+                         f"{name}() constructed outside core/sanitizer.py — "
+                         f"use tracked_lock()/tracked_rlock()/"
+                         f"tracked_condition() so the sanitizer sees it")
+
+    # -- R6 / R7 --------------------------------------------------------------
+    def check_excepts(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                self.add("R6", node,
+                         "[bare-except] bare `except:` hides the failure "
+                         "class (KeyboardInterrupt included) — name the "
+                         "exceptions")
+                continue
+            names: Set[str] = set()
+            for t in ([node.type.elts] if isinstance(node.type, ast.Tuple)
+                      else [[node.type]]):
+                for e in t:
+                    if isinstance(e, ast.Name):
+                        names.add(e.id)
+            if "ImportError" in names or "ModuleNotFoundError" in names:
+                body_trivial = all(
+                    isinstance(s, ast.Pass)
+                    or (isinstance(s, ast.Expr)
+                        and isinstance(s.value, ast.Constant))
+                    for s in node.body)
+                if body_trivial:
+                    self.add("R7", node,
+                             "[swallowed-importerror] `except ImportError: "
+                             "pass` silently downgrades a missing "
+                             "dependency — record the fallback or re-raise")
+
+    # -- R3 -------------------------------------------------------------------
+    def check_blocking_in_lock(self) -> None:
+        self._walk_locks(self.tree, [])
+
+    def _walk_locks(self, node: ast.AST, lock_stack: List[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            self._visit_lock_node(child, lock_stack)
+
+    def _visit_lock_node(self, node: ast.AST, lock_stack: List[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # deferred bodies run outside this lock region
+            self._walk_locks(node, [])
+            return
+        if isinstance(node, ast.With):
+            locks = [s for item in node.items
+                     if (s := _lockish_expr(item.context_expr))]
+            for item in node.items:
+                self._visit_lock_node(item.context_expr, lock_stack)
+            inner = lock_stack + locks
+            for stmt in node.body:
+                self._visit_lock_node(stmt, inner)
+            return
+        if isinstance(node, ast.Call) and lock_stack:
+            self._check_blocking_call(node, lock_stack)
+        self._walk_locks(node, lock_stack)
+
+    def _check_blocking_call(self, call: ast.Call,
+                             lock_stack: List[str]) -> None:
+        name, recv = _func_name(call)
+        if name is None:
+            return
+        if recv is None:
+            if name in BLOCKING_NAMES:
+                self.add("R3", call,
+                         f"[blocking-in-lock] {name}() called while holding "
+                         f"{lock_stack[-1]}")
+            return
+        if name not in BLOCKING_ATTRS:
+            return
+        recv_src = ast.unparse(recv)
+        if name in ("wait", "wait_for") and recv_src in lock_stack:
+            return  # waiting on the condition you hold releases it
+        if name == "result":
+            t = next((kw.value for kw in call.keywords
+                      if kw.arg == "timeout"),
+                     call.args[0] if call.args else None)
+            if isinstance(t, ast.Constant) and t.value == 0:
+                return  # non-blocking poll
+        if name == "join" and (isinstance(recv, ast.Constant)
+                               or recv_src.endswith("path")):
+            return  # str.join / os.path.join
+        self.add("R3", call,
+                 f"[blocking-in-lock] {recv_src}.{name}(...) called while "
+                 f"holding {lock_stack[-1]}")
+
+    # -- R2 / R5 (escape analysis) -------------------------------------------
+    @staticmethod
+    def _walk_scope(root: ast.AST):
+        """Yield ``root``'s nodes without descending into nested function
+        scopes — each function's grants are checked in its own pass."""
+        stack = list(ast.iter_child_nodes(root))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def check_leaks(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_function_leaks(node)
+        # module-level discarded grants
+        self._check_body_leaks(self.tree)
+
+    @staticmethod
+    def _grant_kind(call: ast.Call) -> Optional[Tuple[str, str]]:
+        """(rule, label) when this call mints a tracked resource."""
+        name, recv = _func_name(call)
+        if name in ("reserve", "try_reserve") and recv is not None:
+            return "R2", f"{ast.unparse(recv)}.{name}()"
+        if name == "put" and recv is not None:
+            r = ast.unparse(recv).lower()
+            if any(k in r for k in ("arena", "inbox", "outbox")):
+                return "R5", f"{ast.unparse(recv)}.put()"
+        return None
+
+    def _check_body_leaks(self, scope: ast.AST) -> None:
+        for node in self._walk_scope(scope):
+            if isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
+                kind = self._grant_kind(node.value)
+                if kind is not None:
+                    rule, label = kind
+                    what = ("reservation" if rule == "R2"
+                            else "frame descriptor")
+                    self.add(rule, node,
+                             f"[{'reservation-leak' if rule == 'R2' else 'arena-frame-leak'}] "
+                             f"{label} result discarded — the {what} can "
+                             f"never be released")
+
+    def _check_function_leaks(self, fn: ast.AST) -> None:
+        self._check_body_leaks(fn)   # discarded-result form
+        # assigned-name form: name must be released/freed/with'd/handed off
+        grants: List[Tuple[str, str, str, ast.Assign]] = []
+        for node in self._walk_scope(fn):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not isinstance(tgt, ast.Name):
+                continue
+            if not isinstance(node.value, ast.Call):
+                continue
+            kind = self._grant_kind(node.value)
+            if kind is not None:
+                grants.append((kind[0], kind[1], tgt.id, node))
+        for rule, label, var, assign in grants:
+            if not self._escapes(fn, var, assign, rule):
+                what, verb = (("reservation", "release()") if rule == "R2"
+                              else ("frame descriptor", "free()"))
+                tag = ("reservation-leak" if rule == "R2"
+                       else "arena-frame-leak")
+                self.add(rule, assign,
+                         f"[{tag}] {what} {var!r} from {label} is neither "
+                         f"context-managed nor {verb}'d nor handed off on "
+                         f"any path")
+
+    def _escapes(self, fn: ast.AST, var: str, assign: ast.Assign,
+                 rule: str) -> bool:
+        """Does ``var`` reach a release/free, a ``with`` item, or a handoff
+        (return/yield/call-argument/container/attribute store) anywhere in
+        the function?"""
+        for node in ast.walk(fn):
+            if node is assign:
+                continue
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    ce = item.context_expr
+                    if isinstance(ce, ast.Name) and ce.id == var:
+                        return True
+            if isinstance(node, ast.Call):
+                name, recv = _func_name(node)
+                if (isinstance(recv, ast.Name) and recv.id == var
+                        and name in ("release", "free", "close")):
+                    return True
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Name) and sub.id == var:
+                            return True
+            if isinstance(node, (ast.Return, ast.Yield)) \
+                    and node.value is not None:
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Name) and sub.id == var:
+                        return True
+            if isinstance(node, ast.Assign) and node.value is not assign.value:
+                stores_elsewhere = any(
+                    isinstance(t, (ast.Attribute, ast.Subscript, ast.Tuple))
+                    for t in node.targets)
+                if stores_elsewhere:
+                    for sub in ast.walk(node.value):
+                        if isinstance(sub, ast.Name) and sub.id == var:
+                            return True
+        return False
+
+    # -- driver ---------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        self.check_pickle()
+        self.check_bare_locks()
+        self.check_excepts()
+        self.check_blocking_in_lock()
+        self.check_leaks()
+        return self.findings
+
+
+def _collect_waivers(source: str, path: str) -> Dict[Tuple[str, int], Waiver]:
+    """Waivers keyed by (rule, line).  A waiver covers findings on its own
+    line and on the line below (so it can sit above a long statement)."""
+    out: Dict[Tuple[str, int], Waiver] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVER_RE.search(line)
+        if m:
+            out[(m.group(1), i)] = Waiver(m.group(1), path, i,
+                                          m.group(2).strip())
+    return out
+
+
+def check_file(path: str) -> Tuple[List[Finding], List[Waiver]]:
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return ([Finding("R0", path, e.lineno or 0,
+                         f"[parse-error] {e.msg}")], [])
+    findings = _FileChecker(path, tree, source).run()
+    waivers = _collect_waivers(source, path)
+    for f_ in findings:
+        for delta in (0, -1):
+            w = waivers.get((f_.rule, f_.line + delta))
+            if w is not None:
+                f_.waived = True
+                f_.waiver_reason = w.reason
+                w.used = True
+                break
+    return findings, list(waivers.values())
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = [d for d in dirs
+                       if d not in ("__pycache__", ".git", ".hypothesis")]
+            files.extend(os.path.join(root, n) for n in sorted(names)
+                         if n.endswith(".py"))
+    return files
+
+
+def check_paths(paths: Sequence[str]) -> CheckResult:
+    result = CheckResult()
+    for path in iter_py_files(paths):
+        findings, waivers = check_file(path)
+        result.files_checked += 1
+        for f_ in findings:
+            (result.waived if f_.waived else result.findings).append(f_)
+        result.stale_waivers.extend(w for w in waivers if not w.used)
+    return result
+
+
+def run_check(paths: Sequence[str]) -> CheckResult:
+    """Programmatic entry point (tests use this)."""
+    return check_paths(paths)
